@@ -1,0 +1,49 @@
+"""§Perf hillclimb report — before/after per iteration, from the dry-run
+artifacts (baseline_single.jsonl + hillclimb.jsonl)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+CELLS = {
+    "qwen2-decode": ("qwen2-0.5b", "decode_32k"),
+    "moe-train": ("qwen3-moe-235b-a22b", "train_4k"),
+    "moe-prefill": ("qwen3-moe-235b-a22b", "prefill_32k"),
+    "moe-decode": ("qwen3-moe-235b-a22b", "decode_32k"),
+    "phi3-decode": ("phi3-medium-14b", "decode_32k"),
+}
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path) if l.strip()]
+
+
+def run():
+    base = _load(os.path.join(ART, "baseline_single.jsonl"))
+    hc = _load(os.path.join(ART, "hillclimb.jsonl"))
+    if not hc:
+        emit("hillclimb/missing", 0.0, "run scratch/hillclimb.py")
+        return
+    for cell, (arch, shape) in CELLS.items():
+        b = [r for r in base if r["arch"] == arch and r["shape"] == shape
+             and r["status"] == "ok" and r["executor"] == "sub_operator"]
+        if b:
+            t = b[0]["roofline"]
+            emit(f"hillclimb/{cell}/baseline", t["step_s"] * 1e6,
+                 f"dom={t['dominant']};mem_s={t['memory_s']:.2e};"
+                 f"coll_s={t['collective_s']:.2e};"
+                 f"gb={b[0]['memory']['peak_per_device_gb']}")
+        for r in hc:
+            if r.get("cell") != cell or r["status"] != "ok":
+                continue
+            t = r["roofline"]
+            emit(f"hillclimb/{cell}/{r['variant']}", t["step_s"] * 1e6,
+                 f"dom={t['dominant']};mem_s={t['memory_s']:.2e};"
+                 f"coll_s={t['collective_s']:.2e};"
+                 f"gb={r['memory']['peak_per_device_gb']}")

@@ -1,0 +1,43 @@
+"""§Roofline report generator — reads the dry-run artifacts (JSONL) and
+prints the per-(arch × shape) roofline table used in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(path: str) -> List[Dict]:
+    recs = []
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    return recs
+
+
+def run():
+    recs = load(os.path.join(ART, "baseline_single.jsonl"))
+    if not recs:
+        emit("roofline/missing", 0.0,
+             "run: PYTHONPATH=src python scratch/sweep.py")
+        return
+    for r in recs:
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['executor']}"
+        if r["status"] == "skip":
+            emit(tag, 0.0, "skip=" + r["reason"][:60])
+            continue
+        if r["status"] != "ok":
+            emit(tag, 0.0, "error=" + r.get("error", "?")[:60])
+            continue
+        t = r["roofline"]
+        emit(tag, t["step_s"] * 1e6,
+             f"dom={t['dominant']};frac={t['roofline_frac']:.3f};"
+             f"compute_s={t['compute_s']:.2e};memory_s={t['memory_s']:.2e};"
+             f"coll_s={t['collective_s']:.2e};"
+             f"useful={t['useful_ratio']:.2f};"
+             f"mem_gb={r['memory']['peak_per_device_gb']}")

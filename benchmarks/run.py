@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [names...]
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import header
+
+ALL = [
+    "table1_partitioning",
+    "table2_end_to_end",
+    "fig2_arith_intensity",
+    "fig8_sensitivity",
+    "fig9_wa_separation",
+    "fig10_runtime",
+    "fig11_breakdown",
+    "roofline_report",
+    "hillclimb_report",
+]
+
+
+def main() -> None:
+    names = sys.argv[1:] or ALL
+    header()
+    failed = []
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001 — keep the harness sweeping
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Table 1 — model partitioning parameters, reproduced for both the
+paper's platform (EPYC LLC-resident stages) and the TPU v5e target.
+
+Paper values (INT8 weights): llama3.2-3b 3.21 GB / 4+1 sockets / 7 layers;
+llama2-7b 6.74 GB / 8+1 / 4; qwen3-8b 8.19 GB / 9+1 / 4; llama2-70b
+68.98 GB / 80+1 / 1.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.paper_models import PAPER_MODELS
+from repro.core.analytical import EPYC_9684X, stages_for, weight_bytes
+
+PAPER_TABLE1 = {          # (#sockets, layers/socket, INT8 weight GB)
+    "llama3.2-3b": (4, 7, 3.21),
+    "llama2-7b": (8, 4, 6.74),
+    "qwen3-8b": (9, 4, 8.19),
+    "llama2-70b": (80, 1, 68.98),
+}
+
+
+def run():
+    for name, cfg in PAPER_MODELS.items():
+        wb = weight_bytes(cfg, bytes_per_param=1.0)
+        emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+        total_gb = (wb + emb) / 1e9
+        stages = stages_for(cfg, EPYC_9684X, bytes_per_param=1.0)
+        lps = cfg.n_layers // stages
+        ref_sock, ref_lps, ref_gb = PAPER_TABLE1[name]
+        emit(f"table1/{name}/int8_weights_gb", 0.0,
+             f"ours={total_gb:.2f};paper={ref_gb};"
+             f"ratio={total_gb/ref_gb:.2f}")
+        emit(f"table1/{name}/stages", 0.0,
+             f"ours={stages};paper={ref_sock};layers_per={lps};"
+             f"paper_layers_per={ref_lps}")

@@ -1,0 +1,52 @@
+"""Quickstart: build an assigned architecture, run one training step and a
+short greedy generation — all on CPU with a reduced config.
+
+    PYTHONPATH=src python examples/quickstart.py [arch]
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, list_archs
+from repro.models import NULL_CTX, build_model
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "internlm2-1.8b"
+print(f"available archs: {list_archs(assigned_only=True)}")
+cfg = get_config(arch).reduced()
+print(f"\n== {arch} (reduced: {cfg.n_layers}L d={cfg.d_model}) ==")
+
+api = build_model(cfg)
+params = api.init(jax.random.key(0))
+n = sum(x.size for x in jax.tree.leaves(params))
+print(f"params: {n/1e6:.2f}M")
+
+# --- one loss/grad step -----------------------------------------------------
+B, S = 2, 32
+batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S), 0,
+                                      cfg.vocab_size),
+         "labels": jax.random.randint(jax.random.key(2), (B, S), 0,
+                                      cfg.vocab_size)}
+if cfg.family == "audio":
+    batch["frames"] = jax.random.normal(
+        jax.random.key(3), (B, cfg.encoder.n_frames, cfg.d_model))
+if cfg.family == "vlm":
+    batch["vision_embeds"] = jax.random.normal(
+        jax.random.key(4), (B, cfg.n_vision_tokens, cfg.d_model))
+loss = jax.jit(lambda p: api.loss(p, batch, NULL_CTX))(params)
+print(f"loss: {float(loss):.4f}")
+
+# --- greedy generation -------------------------------------------------------
+gen_batch = dict(batch)
+gen_batch.pop("labels")
+caches, logits = jax.jit(lambda p, b: api.prefill(p, b, NULL_CTX))(
+    params, gen_batch)
+cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+out = [cur]
+step = jax.jit(lambda p, c, t: api.decode(p, c, t, NULL_CTX))
+for _ in range(8):
+    caches, logits = step(params, caches, cur)
+    cur = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+    out.append(cur)
+print("generated token ids:", jnp.stack(out, 1).tolist())
+print("OK")

@@ -1,0 +1,52 @@
+"""Weight–Attention disaggregation demo (paper §3.1) on simulated devices.
+
+Runs the SAME reduced dense model colocated and WA-disaggregated across two
+submeshes (weight domain / attention domain), checks numerical equivalence,
+and prints the residency-planner verdicts that drive the separation policy.
+
+NOTE: this example launches itself with 8 simulated host devices.
+"""
+import os
+import subprocess
+import sys
+
+if os.environ.get("_WA_DEMO_CHILD") != "1":
+    env = dict(os.environ, _WA_DEMO_CHILD="1",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    raise SystemExit(subprocess.call([sys.executable, __file__], env=env))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES
+from repro.core.wa import WADisaggregated, WAPlan, routing_bytes, wa_plan
+from repro.models import NULL_CTX, build_model
+
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+cfg = get_config("internlm2-1.8b").reduced().replace(dtype="float32")
+api = build_model(cfg)
+params = api.init(jax.random.key(0))
+
+# --- policy: who gets separated? -----------------------------------------
+for arch in ("llama2-70b", "llama3.2-3b", "mamba2-1.3b"):
+    plan = wa_plan(get_config(arch), SHAPES["decode_32k"], mesh)
+    print(f"{arch:16s} separate={plan.separate!s:5s} ({plan.reason[:70]})")
+
+# --- equivalence: colocated vs disaggregated ------------------------------
+B, S = 4, 12
+toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0, cfg.vocab_size)
+caches, _ = api.prefill(params, {"tokens": toks[:, :S]}, NULL_CTX)
+_, want = api.decode(params, caches, toks[:, S], NULL_CTX)
+
+wa = WADisaggregated(cfg, mesh, WAPlan(True, 2, 2, "demo"))
+kv = {"k": caches.k.astype(jnp.float32), "v": caches.v.astype(jnp.float32),
+      "k_scale": None, "v_scale": None, "length": caches.length}
+kv2, got = wa.decode_step(params, kv, toks[:, S])
+err = float(jnp.max(jnp.abs(got - want)))
+print(f"\nWA-disaggregated decode max|Δ| vs colocated: {err:.2e} "
+      f"({'OK' if err < 1e-3 else 'MISMATCH'})")
+print(f"W↔A routing traffic: {routing_bytes(cfg, B)/1024:.1f} KiB/token "
+      f"('only embeddings move' — paper §4.1)")

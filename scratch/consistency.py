@@ -1,0 +1,37 @@
+"""prefill(S tokens) + decode(token S) must equal forward(S+1 tokens) logits."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import REGISTRY
+from repro.models import NULL_CTX, build_model
+from repro.models import common
+
+for name in (sys.argv[1:] or ["internlm2-1.8b"]):
+    cfg = REGISTRY[name].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    B, S = 2, 17
+    key = jax.random.key(1)
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    batch_full = {"tokens": toks}
+    if cfg.family == "audio":
+        fr = jax.random.normal(jax.random.key(2),
+                               (B, cfg.encoder.n_frames, cfg.d_model))
+        batch["frames"] = fr
+        batch_full["frames"] = fr
+    if cfg.family == "vlm":
+        ve = jax.random.normal(jax.random.key(3),
+                               (B, cfg.n_vision_tokens, cfg.d_model))
+        batch["vision_embeds"] = ve
+        batch_full["vision_embeds"] = ve
+    caches, lg_prefill = api.prefill(params, batch, NULL_CTX)
+    caches, lg_decode = api.decode(params, caches, toks[:, S], NULL_CTX)
+    _, lg_full = api.prefill(params, batch_full, NULL_CTX)
+    a = np.asarray(lg_decode[:, 0], np.float32)
+    b = np.asarray(lg_full[:, 0], np.float32)
+    err = np.max(np.abs(a - b)) / max(np.max(np.abs(b)), 1e-6)
+    print(f"{name}: rel_err={err:.2e} {'OK' if err < 3e-2 else 'FAIL'}")

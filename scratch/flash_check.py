@@ -1,0 +1,29 @@
+import jax, jax.numpy as jnp, numpy as np
+from repro.models.attention import flash_attention
+
+def naive(q, k, v, causal=True, window=0):
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg, k.astype(jnp.float32)) / np.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((Sq, k.shape[1]), bool)
+    if causal: m &= kpos <= qpos
+    if window: m &= kpos > qpos - window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, hd)
+
+key = jax.random.key(0)
+B, S, Hq, Hkv, hd = 2, 64, 4, 2, 16
+q = jax.random.normal(jax.random.key(1), (B, S, Hq, hd), jnp.float32)
+k = jax.random.normal(jax.random.key(2), (B, S, Hkv, hd), jnp.float32)
+v = jax.random.normal(jax.random.key(3), (B, S, Hkv, hd), jnp.float32)
+for causal, window, qc in [(True,0,16),(True,0,64),(False,0,16),(True,24,16)]:
+    o1 = flash_attention(q, k, v, causal, window, qc, qc)
+    o2 = naive(q, k, v, causal, window)
+    err = float(jnp.max(jnp.abs(o1 - o2)))
+    print(f"causal={causal} window={window} qc={qc}: max_err={err:.2e}")

@@ -1,0 +1,83 @@
+"""Hillclimb runner: compile selected (arch × shape) cells under named
+variants and append records to artifacts/dryrun/hillclimb.jsonl.
+
+Usage: python scratch/hillclimb.py <cell> <variant>
+  cells:   qwen2-decode | moe-train | phi3-decode
+  variants: see VARIANTS below
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import sys
+sys.path.insert(0, "src")
+
+from repro.configs import registry as R
+from repro.launch.dryrun import run_cell
+
+OUT = "artifacts/dryrun/hillclimb.jsonl"
+
+CELLS = {
+    "qwen2-decode": ("qwen2-0.5b", "decode_32k"),
+    "moe-train": ("qwen3-moe-235b-a22b", "train_4k"),
+    "phi3-decode": ("phi3-medium-14b", "decode_32k"),
+    "phi3-prefill": ("phi3-medium-14b", "prefill_32k"),
+    "internvl-train": ("internvl2-76b", "train_4k"),
+    "mamba-long": ("mamba2-1.3b", "long_500k"),
+}
+
+
+def with_cfg(arch, **kw):
+    R.REGISTRY[arch] = R.REGISTRY[arch].replace(**kw)
+    if arch in R.ASSIGNED:
+        R.ASSIGNED[arch] = R.REGISTRY[arch]
+
+
+def main():
+    cell, variant = sys.argv[1], sys.argv[2]
+    arch, shape = CELLS[cell]
+    executor = "sub_operator"
+    pod = "dp"
+    multi = "--multi" in sys.argv
+    tag = variant
+
+    if variant == "baseline":
+        pass
+    elif variant == "operator_centric":
+        executor = "operator_centric"
+    elif variant == "seqkv":
+        executor = "sub_operator+seqkv"
+    elif variant == "seqkv+int8w":
+        executor = "sub_operator+seqkv"
+        with_cfg(arch, weight_int8=True)
+    elif variant == "int8w":
+        with_cfg(arch, weight_int8=True)
+    elif variant == "pp":
+        executor = "sub_operator+seqkv"
+        pod = "pp"
+        multi = True
+    elif variant == "moe-noembedw":
+        # expert weights already 2-axis sharded (experts×mlp_shard); FSDP's
+        # embed_w on D forces a (E,C,F) cross-data partial-sum per layer
+        import repro.models.param_specs as ps
+        ps._RULES = [
+            (m, tuple("embed" if (x == "embed_w" and "moe" in m) else x
+                      for x in log))
+            for m, log in ps._RULES
+        ]
+    elif variant == "moe-microbatch":
+        # gradient accumulation: 4 microbatches — quarters activation temps
+        os.environ["REPRO_GRAD_MICROBATCH"] = "4"
+    else:
+        raise SystemExit(f"unknown variant {variant}")
+
+    rec = run_cell(arch, shape, multi_pod=multi, executor=executor,
+                   pod_strategy=pod)
+    rec["variant"] = tag
+    rec["cell"] = cell
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

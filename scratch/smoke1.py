@@ -1,0 +1,33 @@
+"""Quick CPU sanity: reduced configs, forward + loss + prefill + decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import REGISTRY
+from repro.models import NULL_CTX, build_model
+
+which = sys.argv[1:] or ["internlm2-1.8b"]
+for name in which:
+    cfg = REGISTRY[name].reduced()
+    api = build_model(cfg)
+    key = jax.random.key(0)
+    params = api.init(key)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    B, S = 2, 32
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.ones((B, cfg.encoder.n_frames, cfg.d_model),
+                                   jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.ones((B, cfg.n_vision_tokens, cfg.d_model),
+                                          jnp.float32)
+    loss = jax.jit(lambda p, b: api.loss(p, b, NULL_CTX))(params, batch)
+    caches, logits = jax.jit(lambda p, b: api.prefill(p, b, NULL_CTX))(params, batch)
+    tok = jnp.ones((B,), jnp.int32)
+    caches, logits2 = jax.jit(lambda p, c, t: api.decode(p, c, t, NULL_CTX))(
+        params, caches, tok)
+    print(f"{name}: params={n} loss={float(loss):.3f} "
+          f"prefill_logits={logits.shape} decode_logits={logits2.shape} "
+          f"nan={bool(jnp.isnan(loss)) or bool(jnp.any(jnp.isnan(logits2)))}")

@@ -1,0 +1,31 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys, time
+sys.path.insert(0, "src")
+from repro.configs.registry import ASSIGNED
+from repro.configs.shapes import ALL_SHAPES
+from repro.launch.dryrun import run_cell
+
+multi = "--multi" in sys.argv
+out = f"artifacts/dryrun/baseline_{'multi' if multi else 'single'}.jsonl"
+os.makedirs(os.path.dirname(out), exist_ok=True)
+done = set()
+if os.path.exists(out):
+    for line in open(out):
+        r = json.loads(line)
+        done.add((r["arch"], r["shape"], r["executor"]))
+
+t0 = time.time()
+for arch in ASSIGNED:
+    for shape in ALL_SHAPES:
+        execs = ["sub_operator"]
+        if shape.mode == "decode":
+            execs.append("sub_operator+seqkv")
+        for ex in execs:
+            if (arch, shape.name, ex) in done:
+                continue
+            rec = run_cell(arch, shape.name, multi_pod=multi, executor=ex)
+            with open(out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            print(f"  [{time.time()-t0:7.0f}s elapsed]", flush=True)
+print("SWEEP DONE", time.time() - t0)

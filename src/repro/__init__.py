@@ -1,0 +1,14 @@
+"""repro — TPU-native reproduction of "Cache-Resident LLM Inference in
+GB-Scale Last-Level Caches" (Zhang et al., 2026).
+
+Subpackages:
+    core        the paper's contribution: execution models (operator-centric
+                vs sub-operator), WA disaggregation, residency planning,
+                hierarchical collectives, PP-over-pods, analytical model
+    models      the architecture zoo (dense/MoE/enc-dec/SSM/hybrid/VLM)
+    kernels     Pallas TPU kernels (int8 GEMV, flash decode, fused FFN)
+    kv, quant, optim, data, checkpoint, runtime    substrates
+    configs     assigned archs + paper models + input shapes
+    launch      mesh, dry-run, roofline, train/serve drivers
+"""
+__version__ = "1.0.0"

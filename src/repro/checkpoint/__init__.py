@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    Checkpointer, latest_step, restore_pytree, save_pytree,
+)

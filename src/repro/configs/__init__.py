@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    ATTN, LOCAL_ATTN, RGLRU, SSD,
+    EncoderConfig, ModelConfig, MoEConfig, RGLRUConfig, SSMConfig,
+)
+from repro.configs.shapes import (  # noqa: F401
+    ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+    ShapeConfig, applicable,
+)

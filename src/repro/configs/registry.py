@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig.
+
+The 10 assigned pool archs + the paper's own 4 deployments.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs import (
+    qwen3_moe_235b, phi35_moe_42b, whisper_medium, internlm2_1p8b,
+    granite3_2b, phi3_medium_14b, qwen2_0p5b, internvl2_76b,
+    recurrentgemma_9b, mamba2_1p3b,
+)
+from repro.configs.paper_models import PAPER_MODELS
+
+# Assigned pool (ids exactly as in the assignment).
+ASSIGNED: Dict[str, ModelConfig] = {
+    "qwen3-moe-235b-a22b": qwen3_moe_235b.CONFIG,
+    "phi3.5-moe-42b-a6.6b": phi35_moe_42b.CONFIG,
+    "whisper-medium": whisper_medium.CONFIG,
+    "internlm2-1.8b": internlm2_1p8b.CONFIG,
+    "granite-3-2b": granite3_2b.CONFIG,
+    "phi3-medium-14b": phi3_medium_14b.CONFIG,
+    "qwen2-0.5b": qwen2_0p5b.CONFIG,
+    "internvl2-76b": internvl2_76b.CONFIG,
+    "recurrentgemma-9b": recurrentgemma_9b.CONFIG,
+    "mamba2-1.3b": mamba2_1p3b.CONFIG,
+}
+
+REGISTRY: Dict[str, ModelConfig] = dict(ASSIGNED)
+REGISTRY.update(PAPER_MODELS)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch]
+
+
+def list_archs(assigned_only: bool = False):
+    return sorted(ASSIGNED if assigned_only else REGISTRY)

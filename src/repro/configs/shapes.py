@@ -1,0 +1,44 @@
+"""Assigned input-shape set (identical across the 10 LM-family archs).
+
+Each cell is (arch × shape); ``mode`` selects which step function is lowered:
+  train   -> train_step   (tokens+labels, optimizer update)
+  prefill -> prefill_step (context encode, build KV/state)
+  decode  -> serve_step   (ONE new token against a seq_len-deep KV/state)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                      # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.mode == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", seq_len=4096, global_batch=256, mode="train")
+PREFILL_32K = ShapeConfig("prefill_32k", seq_len=32768, global_batch=32, mode="prefill")
+DECODE_32K = ShapeConfig("decode_32k", seq_len=32768, global_batch=128, mode="decode")
+LONG_500K = ShapeConfig("long_500k", seq_len=524288, global_batch=1, mode="decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+def applicable(config, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch × shape) cell is runnable, and why not if skipped.
+
+    long_500k decode requires sub-quadratic attention (SSM / hybrid); pure
+    full-attention archs skip it per the assignment, and the skip is recorded.
+    """
+    if shape.name == "long_500k" and not config.subquadratic:
+        return False, ("skip: pure full-attention arch — 512k dense-KV decode is "
+                       "the quadratic regime this shape excludes (DESIGN.md §6)")
+    return True, ""

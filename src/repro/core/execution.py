@@ -1,0 +1,176 @@
+"""Execution-model assembly: (arch × shape × mesh × executor) → a lowerable,
+compilable step function with full sharding trees.
+
+Executors (the paper's §2.4 vs §3.2 dichotomy, expressed as sharding rules —
+the math is identical, the collective schedule is not):
+
+  operator_centric  — activations forced replicated/materialized at operator
+                      boundaries; the compiler synchronizes (all-gather /
+                      all-reduce) after every sharded op.  The llama.cpp/
+                      OpenMP-analogue baseline.
+  sub_operator      — per-head activations stay on the owning shard through
+                      QKV→RoPE→attention→O-partial; residual stream lives
+                      reduce-scattered between blocks (one bounded-fan-in
+                      ring reduction per true dependency).  Paper-faithful.
+  sub_operator+seqkv— beyond-paper §3.1 scaling: KV sequence-sharded over the
+                      data axis (distributed flash decode w/ LSE merge);
+                      removes GQA head replication for small-kv archs.
+
+Pod strategies for the multi-pod mesh:
+  dp — pod axis joins the batch axes (gradient hierarchical all-reduce).
+  pp — pod axis is a pipeline dimension (core/pipeline.py; dense family).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models.param_specs import cache_specs, param_specs
+from repro.models.registry import DECODE_SLACK, ModelAPI, build_model
+from repro.models.sharding import (ExecutionRules, ShardingCtx, fsdp,
+                                   operator_centric, seq_sharded_kv,
+                                   sub_operator)
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, cosine_lr
+
+EXECUTORS = ("operator_centric", "sub_operator", "sub_operator+seqkv")
+
+
+def make_rules(executor: str, mesh: Mesh) -> ExecutionRules:
+    pod_is_dp = "pod" in mesh.axis_names
+    if executor == "operator_centric":
+        return operator_centric(pod_is_dp)
+    if executor == "sub_operator":
+        return sub_operator(pod_is_dp)
+    if executor == "sub_operator+seqkv":
+        return seq_sharded_kv(sub_operator(pod_is_dp))
+    raise ValueError(executor)
+
+
+@dataclass
+class StepBundle:
+    """Everything the dry-run / static runtime needs for one cell."""
+    name: str
+    fn: Callable
+    abstract_args: Tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    ctx: ShardingCtx
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.abstract_args)
+
+
+# ---------------------------------------------------------------------------
+# sharding trees for inputs
+# ---------------------------------------------------------------------------
+
+def _batch_specs(batch_tree, ctx: ShardingCtx):
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("tokens", "labels"):
+            logical = ("batch",) + (None,) * (leaf.ndim - 1)
+        elif name in ("frames", "vision_embeds"):
+            logical = ("batch", None, None)
+        else:
+            logical = (None,) * leaf.ndim
+        return ctx.spec(logical, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def _named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              executor: str = "sub_operator",
+              pod_strategy: str = "dp",
+              lr: float = 3e-4,
+              kv_int8: Optional[bool] = None) -> StepBundle:
+    # Serving runs fully INT8 KV by default (paper §5: "fully INT8
+    # configuration, including the KV cache") — halves KV HBM + collective
+    # bytes; decode/prefill only (training has no KV).
+    if kv_int8 is None:
+        kv_int8 = shape.mode in ("decode", "prefill")
+    if kv_int8 and shape.mode != "train" and cfg.kv_dtype != "int8":
+        cfg = cfg.replace(kv_dtype="int8")
+    if pod_strategy == "pp" and "pod" in mesh.axis_names:
+        from repro.core.pipeline import make_pp_step
+        return make_pp_step(cfg, shape, mesh, executor=executor, lr=lr)
+
+    rules = make_rules(executor, mesh)
+    if shape.mode == "train":
+        rules = fsdp(rules)        # ZeRO-3: params + f32 moments fully shard
+    ctx = ShardingCtx(mesh, rules)
+    api = build_model(cfg)
+    key = jax.random.key(0)
+
+    params_shape = jax.eval_shape(api.init, key)
+    p_specs = param_specs(params_shape, ctx)
+    p_shard = _named(p_specs, mesh)
+    batch_tree = api.input_specs(shape)
+    b_shard = _named(_batch_specs(batch_tree, ctx), mesh)
+
+    name = f"{cfg.name}|{shape.name}|{executor}|{'x'.join(map(str, mesh.devices.shape))}"
+
+    if shape.mode == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        o_specs = AdamWState(step=P(), mu=p_specs, nu=p_specs)
+        o_shard = _named(o_specs, mesh)
+
+        def train_step(params, opt_state, batch):
+            def lf(p):
+                return api.loss(p, batch, ctx)
+            loss, grads = jax.value_and_grad(lf)(params)
+            lr_t = cosine_lr(opt_state.step, lr, warmup=100, total=10_000)
+            new_params, new_opt, info = adamw_update(params, grads, opt_state,
+                                                     lr=lr_t)
+            return new_params, new_opt, {"loss": loss, **info}
+
+        return StepBundle(name + "|train", train_step,
+                          (params_shape, opt_shape, batch_tree),
+                          (p_shard, o_shard, b_shard),
+                          (p_shard, o_shard, None),
+                          donate_argnums=(0, 1), ctx=ctx)
+
+    if shape.mode == "prefill":
+        def prefill_step(params, batch):
+            return api.prefill(params, batch, ctx)
+
+        return StepBundle(name + "|prefill", prefill_step,
+                          (params_shape, batch_tree),
+                          (p_shard, b_shard), None,
+                          donate_argnums=(), ctx=ctx)
+
+    # decode
+    cache_shape = jax.eval_shape(
+        lambda: api.init_caches(shape.global_batch,
+                                shape.seq_len + DECODE_SLACK))
+    c_shard = _named(cache_specs(cache_shape, ctx), mesh)
+    tok_shard = _named(ctx.spec(("batch",), (shape.global_batch,)), mesh)
+
+    def decode_step(params, caches, tokens):
+        return api.decode(params, caches, tokens, ctx)
+
+    return StepBundle(name + "|decode", decode_step,
+                      (params_shape, cache_shape,
+                       jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)),
+                      (p_shard, c_shard, tok_shard),
+                      None,
+                      donate_argnums=(1,), ctx=ctx)

@@ -1,0 +1,86 @@
+"""Working-set / residency planner — Challenge 1 (§2.3) made executable.
+
+Answers, per (arch × shape × mesh):
+  - per-chip weight / KV / optimizer / activation bytes,
+  - whether the weight hot set is VMEM-residency-feasible,
+  - the KV-pressure paradox check: per-domain KV under PP depth p,
+  - whether WA separation is *profitable* (working set > capacity) or
+    neutral/harmful (paper Fig 9: 1.00× at 3B) — drives core/wa.py defaults.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.core.analytical import kv_bytes_per_token, weight_bytes
+
+VMEM_BYTES = 128e6          # v5e per-chip VMEM
+HBM_BYTES = 16e9            # v5e per-chip HBM
+
+
+@dataclass(frozen=True)
+class ResidencyReport:
+    weight_bytes_per_chip: float
+    kv_bytes_per_chip: float
+    vmem_weight_resident: bool
+    hbm_fits: bool
+    wa_profitable: bool
+    paradox_invariant: float       # per-domain KV bytes — PP-depth independent
+    notes: str
+
+
+def dtype_bytes(cfg: ModelConfig, kv: bool = False) -> float:
+    if kv:
+        return 1.0 if cfg.kv_dtype == "int8" else 2.0
+    return 1.0 if cfg.weight_int8 else 2.0
+
+
+def plan(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
+         pp_depth: int = 1, train: bool = None) -> ResidencyReport:
+    train = shape.mode == "train" if train is None else train
+    bpp = dtype_bytes(cfg)
+    wb = weight_bytes(cfg, bpp)
+    emb = cfg.vocab_size * cfg.d_model * bpp * (1 if cfg.tie_embeddings else 2)
+    wb_total = wb + emb
+    w_per_chip = wb_total / n_chips
+
+    ctx = shape.seq_len
+    batch = shape.global_batch
+    # paradox: in-flight requests ≥ pp_depth ⇒ per-domain KV is depth-invariant
+    in_flight = batch * max(pp_depth, 1)
+    kv_total = kv_bytes_per_token(cfg, ctx, dtype_bytes(cfg, kv=True)) \
+        * batch if shape.is_decode else \
+        kv_bytes_per_token(cfg, ctx, dtype_bytes(cfg, kv=True)) * batch
+    kv_per_chip = kv_total / n_chips
+    paradox = kv_bytes_per_token(cfg, ctx, dtype_bytes(cfg, kv=True)) \
+        * in_flight / max(pp_depth, 1)   # ∝ Layers×Batch×Ctx — p cancels
+
+    opt = 3 * wb_total * 2 if train else 0.0    # f32 master+m+v ≈ 12B/param @bf16
+    hot = w_per_chip
+    vmem_ok = hot <= VMEM_BYTES
+    hbm_ok = (w_per_chip + kv_per_chip + opt / n_chips) <= HBM_BYTES * 0.9
+    wa_prof = (w_per_chip + kv_per_chip) > 0.5 * VMEM_BYTES and shape.is_decode
+    notes = []
+    if not vmem_ok:
+        notes.append(f"weights/chip {w_per_chip/1e6:.0f}MB > VMEM — "
+                     f"HBM-streamed (gemv kernel regime)")
+    if wa_prof:
+        notes.append("WA separation profitable: co-located hot set exceeds "
+                     "fast-memory budget (paper Fig 9 high-pressure regime)")
+    return ResidencyReport(w_per_chip, kv_per_chip, vmem_ok, hbm_ok, wa_prof,
+                           paradox, "; ".join(notes))
+
+
+def paradox_table(cfg: ModelConfig, ctx_len: int, batch: int,
+                  depths=(1, 2, 4, 8, 16)) -> Dict[int, float]:
+    """Reproduces the §2.3 algebra: per-domain KV vs pipeline depth."""
+    out = {}
+    for p in depths:
+        layers_per = cfg.n_layers / p
+        in_flight = p * batch
+        per_domain = (layers_per / cfg.n_layers) * in_flight * \
+            kv_bytes_per_token(cfg, ctx_len, dtype_bytes(cfg, kv=True))
+        out[p] = per_domain
+    return out

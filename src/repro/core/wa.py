@@ -1,0 +1,176 @@
+"""Weight–Attention (WA) disaggregated execution (paper §3.1 / §4.1).
+
+The paper splits each transformer layer across two sockets: a *weight node*
+(QKV proj + FFN, weights resident, no KV) and an *attention node* (owns KV
+state, runs attention). Activations — "only embeddings" — hop W→A→W per
+layer. TPU instantiation: two SUBMESHES of the pod with two AOT-compiled
+programs and device_put routing between them (the honest JAX analogue of two
+pinned per-socket thread pools; on hardware the transfer lowers to ICI).
+
+The split is decided by ``core.residency.plan`` — WA separation is *optional*
+and only pays under cache pressure (paper Fig 9: 1.00× at 3B, 1.16× at 70B);
+``wa_plan`` encodes that policy.
+
+This module provides:
+  - ``split_mesh``        : carve (data) rows into weight/attention groups,
+  - ``wa_plan``           : profitability policy from the residency report,
+  - ``WADisaggregated``   : a decode engine running weight-ops on the W
+                            submesh and attention on the A submesh with
+                            explicit activation routing (runnable on CPU
+                            devices; unit-tested for equivalence with the
+                            colocated executor),
+  - ``routing_bytes``     : per-token W↔A traffic for the roofline
+                            collective term (2 hops × B × d_model / layer).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.core.residency import plan as residency_plan
+from repro.models import common
+from repro.models.attention import decode_attention, qkv_project
+from repro.models.sharding import ShardingCtx, sub_operator
+from repro.kv.cache import layer_append, layer_read, slot_valid_mask
+
+
+# ---------------------------------------------------------------------------
+# Mesh split + policy
+# ---------------------------------------------------------------------------
+
+def split_mesh(mesh: Mesh, weight_rows: int) -> Tuple[Mesh, Mesh]:
+    """Split the data axis: first ``weight_rows`` rows → weight submesh,
+    rest → attention submesh (paper: CPU1=weight socket, CPU2=attn socket)."""
+    devs = mesh.devices
+    assert devs.ndim == 2, "split on the single-pod (data, model) mesh"
+    w = Mesh(devs[:weight_rows], mesh.axis_names)
+    a = Mesh(devs[weight_rows:], mesh.axis_names)
+    return w, a
+
+
+@dataclass(frozen=True)
+class WAPlan:
+    separate: bool
+    weight_rows: int
+    attention_rows: int
+    reason: str
+
+
+def wa_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> WAPlan:
+    n_rows = mesh.devices.shape[0]
+    n_chips = int(np.prod(mesh.devices.shape))
+    if cfg.family == "ssm":
+        return WAPlan(False, n_rows, 0,
+                      "attention-free: no growing KV to decouple "
+                      "(DESIGN.md §6 — WA inapplicable)")
+    rep = residency_plan(cfg, shape, n_chips)
+    if not rep.wa_profitable:
+        return WAPlan(False, n_rows, 0,
+                      "co-located hot set within budget; separation would "
+                      "waste sockets (paper Fig 9 small-model regime)")
+    half = n_rows // 2
+    return WAPlan(True, half, n_rows - half, rep.notes)
+
+
+def routing_bytes(cfg: ModelConfig, batch: int, bytes_per_el: int = 2) -> int:
+    """Per-decoded-token W↔A activation traffic: 2 hops per layer of the
+    (B, d_model) embedding — the paper's 'only embeddings move'."""
+    return 2 * cfg.n_layers * batch * cfg.d_model * bytes_per_el
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated decode engine (dense family)
+# ---------------------------------------------------------------------------
+
+class WADisaggregated:
+    """Two-program decode: weight program (QKV+FFN halves) on the W submesh,
+    attention program on the A submesh, activations routed per layer.
+
+    Layer split (paper Fig 5b):
+        W: x → ln1 → QKV proj ───route q,k,v───→ A: append KV, attention
+        W: o·Wo + residual + ln2 + FFN ←──route o──┘
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, plan: WAPlan):
+        self.cfg = cfg
+        self.plan = plan
+        self.w_mesh, self.a_mesh = split_mesh(mesh, plan.weight_rows)
+        self.w_ctx = ShardingCtx(self.w_mesh, sub_operator(False))
+        self.a_ctx = ShardingCtx(self.a_mesh, sub_operator(False))
+
+    # -- single layer pieces (weight side) ------------------------------
+    def _w_qkv(self, lp, x):
+        cfg, ctx = self.cfg, self.w_ctx
+        h = common.apply_norm(cfg.norm, lp["ln1"], x, cfg.norm_eps)
+        pos = self._pos
+        B = x.shape[0]
+        return qkv_project(lp["attn"], h, cfg, ctx,
+                           jnp.full((B, 1), pos, jnp.int32))
+
+    def _w_post(self, lp, x, o):
+        from repro.models.transformer import ffn_apply
+        cfg, ctx = self.cfg, self.w_ctx
+        B = x.shape[0]
+        o = common.linear(lp["attn"]["wo"], o.reshape(B, 1, -1))
+        x = x + o
+        h = common.apply_norm(cfg.norm, lp["ln2"], x, cfg.norm_eps)
+        return x + ffn_apply(lp["ffn"], h, cfg, ctx)
+
+    # -- attention side ---------------------------------------------------
+    def _a_attend(self, kv_slices, q, k, v, pos, window=0):
+        k_l, v_l, ks_l, vs_l = kv_slices
+        k_l, v_l, ks_l, vs_l = layer_append(k_l, v_l, ks_l, vs_l,
+                                            k[:, 0], v[:, 0], pos, window)
+        kc, vc = layer_read(k_l, v_l, ks_l, vs_l, dtype=q.dtype)
+        mask = slot_valid_mask(k_l.shape[2], window, pos)
+        o = decode_attention(q[:, 0], kc, vc, mask, self.a_ctx)
+        return (k_l, v_l, ks_l, vs_l), o
+
+    # -- route helpers ------------------------------------------------------
+    def _to_a(self, x):
+        return jax.device_put(x, NamedSharding(self.a_mesh,
+                                               P("data", None, None)))
+
+    def _to_w(self, x):
+        return jax.device_put(x, NamedSharding(self.w_mesh,
+                                               P("data", None, None)))
+
+    # -- decode step --------------------------------------------------------
+    def decode_step(self, params, caches, tokens):
+        """Python-orchestrated per-layer routing. params live on W (weights
+        resident, no KV there); caches live on A. Used for correctness and
+        for the Fig 11 breakdown; the analytical model covers scaling."""
+        cfg = self.cfg
+        self._pos = caches["length"]
+        pos = self._pos
+        x = common.embed(params["embed"], tokens[:, None], self.w_ctx)
+        L = cfg.n_layers
+        for i in range(L):
+            lp = jax.tree.map(lambda a: a[i], params["blocks"])
+            q, k, v = self._w_qkv(lp, x)
+            # W → A : route per-head activations (the "embeddings move" hop)
+            q, k, v = self._to_a(q), self._to_a(k), self._to_a(v)
+            kv_i = tuple(None if c is None else c[i]
+                         for c in (caches["k"], caches["v"],
+                                   caches["k_scale"], caches["v_scale"]))
+            kv_i, o = self._a_attend(kv_i, q, k, v, pos)
+            caches["k"] = caches["k"].at[i].set(kv_i[0])
+            caches["v"] = caches["v"].at[i].set(kv_i[1])
+            if kv_i[2] is not None:
+                caches["k_scale"] = caches["k_scale"].at[i].set(kv_i[2])
+                caches["v_scale"] = caches["v_scale"].at[i].set(kv_i[3])
+            # A → W
+            o = self._to_w(o[:, None])
+            x = self._w_post(lp, x, o)
+        x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+        from repro.models.transformer import unembed_table
+        logits = common.unembed_logits(unembed_table(params, cfg), x, self.w_ctx)
+        caches["length"] = pos + 1
+        return caches, logits

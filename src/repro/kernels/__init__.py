@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (§4.2):
+
+- gemv:         cache-resident INT8 weight-stationary GEMV / thin matmul
+                (LLC-streamed weights → HBM→VMEM BlockSpec streaming;
+                 L1-pinned activation → VMEM-pinned activation block)
+- flash_decode: Flash-style decode attention over the contiguous KV cache
+                (KV streamed in tiles, online softmax, GQA, INT8 KV)
+- fused_ffn:    gated-FFN fusion — both GEMVs + elementwise in one kernel so
+                weight tiles are streamed exactly once (paper Fig 6b)
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper
+with platform dispatch), ref.py (pure-jnp oracle used by tests and by the CPU
+dry-run path).
+"""

@@ -1,0 +1,116 @@
+"""Flash-style decode attention Pallas TPU kernel.
+
+TPU adaptation of the paper's attention kernel (§4.2): "KV-cache blocks are
+processed in a tiled fashion, computing attention scores and value aggregation
+without materializing large intermediate matrices ... we rely on LLC streaming
+for KV blocks while maintaining query vectors in private cache." Here:
+- KV tiles stream HBM→VMEM via BlockSpec, touched exactly once;
+- the (G, hd) query group block is VMEM-pinned across the S grid walk;
+- online softmax (running max / normalizer) in the revisited output block —
+  no (H, S) score matrix is ever materialized.
+
+Grid: (B, n_kv, n_S) — S innermost; per-(batch, kv-head) accumulators
+(o, m, l) are carried as revisited output blocks (interpret-mode friendly).
+GQA folds the head group G = Hq // n_kv into the query block.
+Supports INT8 KV via per-position scales (paper runs fully-INT8 KV).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref,
+            o_ref, m_ref, l_ref, *, n_s: int, scale: float, quantized: bool):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (S_blk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, 0].astype(jnp.float32)         # (S_blk,1) scales
+        v = v * vs_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = mask_ref[0]                                   # (S_blk,)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[0, 0]                                 # (G, 1)
+    m_blk = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_blk)
+    p = jnp.exp(s - m_new)                               # (G, S_blk)
+    corr = jnp.exp(m_prev - m_new)                       # (G, 1)
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p, axis=1, keepdims=True)
+    o_ref[0, 0] = (o_ref[0, 0] * corr
+                   + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32))
+    m_ref[0, 0] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _norm():
+        o_ref[0, 0] /= jnp.maximum(l_ref[0, 0], 1e-30)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "scale", "interpret"))
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                        k_scale, v_scale, mask: jax.Array, *,
+                        block_s: int = 512, scale: float = None,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B,Hq,hd); k/v: (B,n_kv,S,hd) (int8 ⇒ scales (B,n_kv,S,1) f32,
+    else pass None); mask: (B,S) bool → (B,Hq,hd) f32."""
+    B, Hq, hd = q.shape
+    _, n_kv, S, _ = k.shape
+    G = Hq // n_kv
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    n_s = S // bs
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    quantized = k_scale is not None
+    qg = q.reshape(B, n_kv, G, hd)
+    if not quantized:                 # feed dummies so the arity is static
+        k_scale = jnp.ones((B, n_kv, 1, 1), jnp.float32)
+        v_scale = jnp.ones((B, n_kv, 1, 1), jnp.float32)
+    ss = k_scale.shape[2]
+
+    grid = (B, n_kv, n_s)
+    o, m, l = pl.pallas_call(
+        functools.partial(_kernel, n_s=n_s, scale=sc, quantized=quantized),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs if quantized else ss, 1),
+                         (lambda b, h, s: (b, h, s, 0)) if quantized
+                         else (lambda b, h, s: (b, h, 0, 0))),
+            pl.BlockSpec((1, 1, bs if quantized else ss, 1),
+                         (lambda b, h, s: (b, h, s, 0)) if quantized
+                         else (lambda b, h, s: (b, h, 0, 0))),
+            pl.BlockSpec((1, bs), lambda b, h, s: (b, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, s: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_kv, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, k_scale, v_scale, mask)
+    return o.reshape(B, Hq, hd)

@@ -1,0 +1,32 @@
+"""jit'd wrapper with platform dispatch for decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "block_s"))
+def flash_decode(q, k, v, mask, k_scale=None, v_scale=None, *,
+                 use_pallas: bool = None, interpret: bool = False,
+                 block_s: int = 512) -> jax.Array:
+    """Decode attention. q: (B,Hq,hd); k/v: (B,n_kv,S,hd); mask: (B,S)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return flash_decode_pallas(q, k, v, k_scale, v_scale, mask,
+                                   block_s=block_s,
+                                   interpret=interpret or not _on_tpu())
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale
+        v = v.astype(jnp.float32) * v_scale
+    return flash_decode_ref(q, k, v, mask)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for decode attention (one query vs. contiguous KV)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array, scale: float = None) -> jax.Array:
+    """q: (B,Hq,hd); k/v: (B,n_kv,S,hd); mask: (B,S) bool → (B,Hq,hd) f32."""
+    B, Hq, hd = q.shape
+    n_kv = k.shape[1]
+    G = Hq // n_kv
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, n_kv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, k.astype(jnp.float32)) * sc
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, hd)

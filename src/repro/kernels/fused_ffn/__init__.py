@@ -1,0 +1,1 @@
+from repro.kernels.fused_ffn.ops import fused_ffn  # noqa: F401

@@ -1,0 +1,63 @@
+"""Fused gated-FFN (SwiGLU/GeGLU) Pallas TPU kernel.
+
+The paper's Fig 6(b): after the bounded fan-in merge of the residual stream,
+execute "fused GEMV and elementwise operations" such that weight tiles stream
+exactly once. Here all three weight streams (gate, up, down) for one F-block
+are touched once per kernel step; the gated intermediate h = act(x·Wg)⊙(x·Wu)
+lives only in VMEM (never round-trips to HBM — the LLC-traffic argument of
+§4.2 mapped to the HBM boundary); the output accumulates across F-blocks in
+the revisited (B,D) block.
+
+Grid: (n_F,). Activation block (B,D) VMEM-pinned for the whole walk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, act: str):
+    f = pl.program_id(0)
+
+    @pl.when(f == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                   # (B, D) pinned
+    g = jax.lax.dot_general(x, wg_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wu_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
+    o_ref[...] += jax.lax.dot_general(h, wd_ref[...].astype(jnp.float32),
+                                      (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "act", "interpret"))
+def fused_ffn_pallas(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                     w_down: jax.Array, *, block_f: int = 512,
+                     act: str = "silu", interpret: bool = False) -> jax.Array:
+    """x: (B,D); w_gate/w_up: (D,F); w_down: (F,D) → (B,D) f32."""
+    B, D = x.shape
+    F = w_gate.shape[1]
+    bf = min(block_f, F)
+    assert F % bf == 0, (F, bf)
+    return pl.pallas_call(
+        functools.partial(_kernel, act=act),
+        grid=(F // bf,),
+        in_specs=[
+            pl.BlockSpec((B, D), lambda f: (0, 0)),       # pinned activations
+            pl.BlockSpec((D, bf), lambda f: (0, f)),      # gate tile stream
+            pl.BlockSpec((D, bf), lambda f: (0, f)),      # up tile stream
+            pl.BlockSpec((bf, D), lambda f: (f, 0)),      # down tile stream
+        ],
+        out_specs=pl.BlockSpec((B, D), lambda f: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused gated-FFN kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_ffn_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                  w_down: jax.Array, act: str = "silu") -> jax.Array:
+    """x: (B,D); w_gate/w_up: (D,F); w_down: (F,D) → (B,D) f32."""
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    u = xf @ w_up.astype(jnp.float32)
+    fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    return (fn(g) * u) @ w_down.astype(jnp.float32)

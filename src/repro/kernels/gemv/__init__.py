@@ -1,0 +1,1 @@
+from repro.kernels.gemv.ops import gemv_int8  # noqa: F401

@@ -1,0 +1,64 @@
+"""INT8 weight-stationary GEMV / thin-matmul Pallas TPU kernel.
+
+TPU adaptation of the paper's cache-resident GEMV (§4.2):
+- the (B,K) activation block is *pinned* in VMEM across the whole N/K grid —
+  the analogue of the per-core L1-resident activation copy;
+- (K_blk, N_blk) INT8 weight tiles stream HBM→VMEM exactly once — the
+  analogue of LLC-streamed weight shards ("data cross the LLC–core boundary
+  as few times as possible");
+- int8×int8→int32 MXU dot (the VNNI analogue), f32 accumulation across the
+  K grid dimension in the revisited output block.
+
+Grid: (n_N, n_K) — K innermost so each output tile accumulates in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xq_ref, xs_ref, wq_ref, ws_ref, o_ref, *, n_k: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jax.lax.dot_general(
+        xq_ref[...], wq_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    o_ref[...] += acc.astype(jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _scale():
+        o_ref[...] *= xs_ref[...] * ws_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+def gemv_int8_pallas(xq: jax.Array, x_scale: jax.Array, wq: jax.Array,
+                     w_scale: jax.Array, *, block_n: int = 256,
+                     block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """xq: (B,K) int8; x_scale: (B,1) f32; wq: (K,N) int8; w_scale: (1,N) f32.
+    Returns (B,N) f32. Block sizes MXU-aligned (multiples of 128)."""
+    B, K = xq.shape
+    N = wq.shape[1]
+    bn, bk = min(block_n, N), min(block_k, K)
+    assert K % bk == 0 and N % bn == 0, (K, bk, N, bn)
+    n_n, n_k = N // bn, K // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((B, bk), lambda n, k: (0, k)),       # act: VMEM-pinned rows
+            pl.BlockSpec((B, 1), lambda n, k: (0, 0)),        # act row scales
+            pl.BlockSpec((bk, bn), lambda n, k: (k, n)),      # weight tile stream
+            pl.BlockSpec((1, bn), lambda n, k: (0, n)),       # w channel scales
+        ],
+        out_specs=pl.BlockSpec((B, bn), lambda n, k: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=interpret,
+    )(xq, x_scale, wq, w_scale)

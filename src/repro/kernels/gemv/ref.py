@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the INT8 weight-stationary GEMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemv_int8_ref(xq: jax.Array, x_scale: jax.Array, wq: jax.Array,
+                  w_scale: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """xq: (B,K) int8 row-quantized activations with x_scale (B,1) f32;
+    wq: (K,N) int8 with per-output-channel w_scale (1,N) f32 → (B,N)."""
+    acc = jax.lax.dot_general(
+        xq, wq, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)

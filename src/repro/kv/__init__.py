@@ -1,0 +1,2 @@
+from repro.kv.cache import KVCache, init_kv_cache, append_kv, window_slots  # noqa: F401
+from repro.kv.state import RecurrentState, init_rglru_state, init_ssd_state  # noqa: F401

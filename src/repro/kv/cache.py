@@ -1,0 +1,193 @@
+"""KV-cache management.
+
+Layout is CONTIGUOUS (L, B, n_kv, S_max, head_dim) — the paper (§7.1) explicitly
+rejects paged layouts because address indirection lands on the decode critical
+path; we follow that choice and isolate KV by *placement* instead (WA
+separation / sequence sharding), not by virtual-memory tricks.
+
+Supports:
+- full-context caches (global attention),
+- ring-buffer sliding-window caches (recurrentgemma local attention),
+- INT8-quantized storage with per-(b, head, pos) scales (paper runs fully INT8).
+
+The cache is a pytree; decode steps donate it (buffer reuse — no double
+allocation of the GB-scale KV in steady state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.int8 import dequantize_kv, quantize_kv
+
+
+@jax.tree_util.register_pytree_node_class
+class KVCache:
+    """Pytree: (k, v, k_scale, v_scale, length) children; ``window`` static."""
+
+    def __init__(self, k, v, k_scale, v_scale, length, window: int = 0):
+        self.k = k                       # (L,B,n_kv,S,hd)  kv_dtype
+        self.v = v
+        self.k_scale = k_scale           # (L,B,n_kv,S,1) f32 — int8 only
+        self.v_scale = v_scale
+        self.length = length             # () int32 — tokens appended so far
+        self.window = window             # 0 → full ctx; >0 → ring buffer
+
+    def tree_flatten(self):
+        return ((self.k, self.v, self.k_scale, self.v_scale, self.length),
+                self.window)
+
+    @classmethod
+    def tree_unflatten(cls, window, children):
+        return cls(*children, window=window)
+
+    def _replace(self, **kw):
+        d = dict(k=self.k, v=self.v, k_scale=self.k_scale,
+                 v_scale=self.v_scale, length=self.length, window=self.window)
+        d.update(kw)
+        return KVCache(**d)
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[3]
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.k_scale is not None
+
+
+def init_kv_cache(n_layers: int, batch: int, n_kv: int, max_len: int,
+                  head_dim: int, dtype=jnp.bfloat16, quantized: bool = False,
+                  window: int = 0) -> KVCache:
+    size = min(window, max_len) if window else max_len
+    store = jnp.int8 if quantized else dtype
+    shape = (n_layers, batch, n_kv, size, head_dim)
+    z = jnp.zeros(shape, store)
+    sc = jnp.zeros(shape[:-1] + (1,), jnp.float32) if quantized else None
+    return KVCache(z, z, sc, sc, jnp.zeros((), jnp.int32), window=window)
+
+
+def _slot(cache: KVCache, pos: jax.Array) -> jax.Array:
+    return jax.lax.rem(pos, cache.k.shape[3]) if cache.window else pos
+
+
+def append_kv(cache: KVCache, layer: jax.Array, k_new: jax.Array,
+              v_new: jax.Array) -> KVCache:
+    """Append ONE position for one layer. k_new/v_new: (B, n_kv, hd).
+
+    Used inside the per-layer scan: ``layer`` is the scan index. The write is
+    a dynamic_update_slice — O(1), no relayout (contiguity preserved).
+    """
+    pos = cache.length
+    slot = _slot(cache, pos)
+    if cache.is_quantized:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        k = jax.lax.dynamic_update_slice(
+            cache.k, kq[None, :, :, None, :], (layer, 0, 0, slot, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, vq[None, :, :, None, :], (layer, 0, 0, slot, 0))
+        k_scale = jax.lax.dynamic_update_slice(
+            cache.k_scale, ks[None, :, :, None, :], (layer, 0, 0, slot, 0))
+        v_scale = jax.lax.dynamic_update_slice(
+            cache.v_scale, vs[None, :, :, None, :], (layer, 0, 0, slot, 0))
+        return cache._replace(k=k, v=v, k_scale=k_scale, v_scale=v_scale)
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new[None, :, :, None, :].astype(cache.k.dtype),
+        (layer, 0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new[None, :, :, None, :].astype(cache.v.dtype),
+        (layer, 0, 0, slot, 0))
+    return cache._replace(k=k, v=v)
+
+
+def bump_length(cache: KVCache) -> KVCache:
+    """Advance the write cursor once per decode step (after all layers)."""
+    return cache._replace(length=cache.length + 1)
+
+
+def read_kv(cache: KVCache, layer: jax.Array, dtype=jnp.bfloat16):
+    """Return (k, v) for a layer as compute dtype: (B, n_kv, S, hd)."""
+    k = jax.lax.dynamic_index_in_dim(cache.k, layer, axis=0, keepdims=False)
+    v = jax.lax.dynamic_index_in_dim(cache.v, layer, axis=0, keepdims=False)
+    if cache.is_quantized:
+        ks = jax.lax.dynamic_index_in_dim(cache.k_scale, layer, 0, keepdims=False)
+        vs = jax.lax.dynamic_index_in_dim(cache.v_scale, layer, 0, keepdims=False)
+        return dequantize_kv(k, ks, dtype), dequantize_kv(v, vs, dtype)
+    return k.astype(dtype), v.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer slice API — used inside decode layer-scans so each layer touches
+# ONLY its own (B,n_kv,S,hd) slice (the whole-cache carry would cost O(L)
+# bytes per layer ⇒ O(L²) per step; slices flow as scan xs/ys instead and
+# alias in place under donation).
+# ---------------------------------------------------------------------------
+
+def layer_append(k_l: jax.Array, v_l: jax.Array, k_scale_l, v_scale_l,
+                 k_new: jax.Array, v_new: jax.Array, pos: jax.Array,
+                 window: int):
+    """k_l/v_l: (B,n_kv,S,hd); k_new/v_new: (B,n_kv,hd). Returns updated
+    slices. Quantizes when scale slices are present."""
+    size = k_l.shape[2]
+    slot = jax.lax.rem(pos, size) if window else pos
+    if k_scale_l is not None:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        k_l = jax.lax.dynamic_update_slice(k_l, kq[:, :, None, :], (0, 0, slot, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, vq[:, :, None, :], (0, 0, slot, 0))
+        k_scale_l = jax.lax.dynamic_update_slice(
+            k_scale_l, ks[:, :, None, :], (0, 0, slot, 0))
+        v_scale_l = jax.lax.dynamic_update_slice(
+            v_scale_l, vs[:, :, None, :], (0, 0, slot, 0))
+        return k_l, v_l, k_scale_l, v_scale_l
+    k_l = jax.lax.dynamic_update_slice(
+        k_l, k_new[:, :, None, :].astype(k_l.dtype), (0, 0, slot, 0))
+    v_l = jax.lax.dynamic_update_slice(
+        v_l, v_new[:, :, None, :].astype(v_l.dtype), (0, 0, slot, 0))
+    return k_l, v_l, None, None
+
+
+def layer_read(k_l, v_l, k_scale_l, v_scale_l, dtype=jnp.bfloat16):
+    if k_scale_l is not None:
+        return (dequantize_kv(k_l, k_scale_l, dtype),
+                dequantize_kv(v_l, v_scale_l, dtype))
+    return k_l.astype(dtype), v_l.astype(dtype)
+
+
+def slot_valid_mask(size: int, window: int, query_pos: jax.Array) -> jax.Array:
+    """(S,) bool — standalone form of valid_mask (decode order: append→attend)."""
+    count = query_pos + 1
+    idx = jnp.arange(size, dtype=jnp.int32)
+    if not window:
+        return idx < count
+    head = jax.lax.rem(count + size - 1 - idx, size)
+    p = count - 1 - head
+    ok = (p >= 0) & (p <= query_pos) & (p > query_pos - window)
+    return ok
+
+
+def window_slots(cache: KVCache, count: jax.Array) -> jax.Array:
+    """Absolute position held in each slot given ``count`` stored tokens
+    (−1 if empty). Ring slot s holds the largest p < count with p ≡ s (mod W).
+    """
+    size = cache.k.shape[3]
+    idx = jnp.arange(size, dtype=jnp.int32)
+    if not cache.window:
+        return jnp.where(idx < count, idx, -1)
+    head = jax.lax.rem(count + size - 1 - idx, size)  # distance back from cursor
+    p = count - 1 - head
+    return jnp.where(p >= 0, p, -1)
+
+
+def valid_mask(cache: KVCache, query_pos: jax.Array) -> jax.Array:
+    """(S,) bool — slots attendable by a query at ``query_pos``, ASSUMING the
+    query's own KV has been appended (decode order: append → attend).
+    Window semantics inclusive: positions in [query_pos−W+1, query_pos]."""
+    slots = window_slots(cache, query_pos + 1)
+    ok = (slots >= 0) & (slots <= query_pos)
+    if cache.window:
+        ok &= slots > (query_pos - cache.window)
+    return ok

@@ -1,0 +1,78 @@
+"""Recurrent decode state for attention-free blocks (RG-LRU, Mamba-2 SSD).
+
+Unlike KV caches these are O(1) in context length — the KV-pressure paradox
+(paper §2.3) does not bind here, which is exactly why long_500k decode is
+runnable for the ssm/hybrid archs (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class RecurrentState(NamedTuple):
+    h: jax.Array             # RG-LRU: (L,B,lru) f32 | SSD: (L,B,nh,hd,N) f32
+    conv: jax.Array          # rolling conv window (L,B,W-1,C)
+
+
+def init_rglru_state(n_layers: int, batch: int, lru_width: int,
+                     conv_width: int) -> RecurrentState:
+    return RecurrentState(
+        h=jnp.zeros((n_layers, batch, lru_width), jnp.float32),
+        conv=jnp.zeros((n_layers, batch, conv_width - 1, lru_width), jnp.float32),
+    )
+
+
+def init_ssd_state(n_layers: int, batch: int, n_heads: int, head_dim: int,
+                   d_state: int, conv_width: int, conv_channels: int) -> RecurrentState:
+    return RecurrentState(
+        h=jnp.zeros((n_layers, batch, n_heads, head_dim, d_state), jnp.float32),
+        conv=jnp.zeros((n_layers, batch, conv_width - 1, conv_channels), jnp.float32),
+    )
+
+
+def read_state(state: RecurrentState, layer: jax.Array):
+    h = jax.lax.dynamic_index_in_dim(state.h, layer, 0, keepdims=False)
+    c = jax.lax.dynamic_index_in_dim(state.conv, layer, 0, keepdims=False)
+    return h, c
+
+
+def write_state(state: RecurrentState, layer: jax.Array,
+                h: Optional[jax.Array] = None,
+                conv: Optional[jax.Array] = None) -> RecurrentState:
+    new_h, new_c = state.h, state.conv
+    if h is not None:
+        new_h = jax.lax.dynamic_update_slice(
+            state.h, h[None].astype(state.h.dtype), (layer,) + (0,) * h.ndim)
+    if conv is not None:
+        new_c = jax.lax.dynamic_update_slice(
+            state.conv, conv[None].astype(state.conv.dtype), (layer,) + (0,) * conv.ndim)
+    return RecurrentState(new_h, new_c)
+
+
+def conv_step(conv_state: jax.Array, x_new: jax.Array, conv_w: jax.Array,
+              conv_b: Optional[jax.Array] = None):
+    """Causal depthwise conv, one step. conv_state: (B,W-1,C); x_new: (B,C);
+    conv_w: (W,C). Returns (y (B,C), new_state)."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :].astype(conv_state.dtype)],
+                             axis=1)                       # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window, conv_w.astype(window.dtype))
+    if conv_b is not None:
+        y = y + conv_b
+    return y.astype(x_new.dtype), window[:, 1:, :]
+
+
+def causal_conv(x: jax.Array, conv_w: jax.Array,
+                conv_b: Optional[jax.Array] = None) -> jax.Array:
+    """Causal depthwise conv over a sequence. x: (B,S,C); conv_w: (W,C)."""
+    W = conv_w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    # windowed dot: y[b,s,c] = sum_w pad[b,s+w,c] * conv_w[w,c]
+    y = jnp.zeros_like(x, shape=x.shape)
+    for w in range(W):                                     # W is 4 — unrolled
+        y = y + pad[:, w:w + x.shape[1], :] * conv_w[w][None, None, :].astype(x.dtype)
+    if conv_b is not None:
+        y = y + conv_b.astype(x.dtype)
+    return y

@@ -1,0 +1,190 @@
+"""Compiled-HLO analysis: collective bytes, per-axis attribution, roofline
+inputs.
+
+collective_bytes is NOT in cost_analysis() — we parse the optimized HLO
+(``compiled.as_text()``) and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, recovering the
+operand size from the (always-printed) result type:
+
+    op            operand_bytes (per participant)
+    all-gather    result / group_size
+    all-reduce    result
+    reduce-scatter result × group_size
+    all-to-all    result
+    collective-permute result
+
+replica_groups stride analysis attributes each collective to mesh axes so the
+hierarchical-collective optimization (intra-pod vs cross-pod) is measurable:
+for mesh (pod, data, model) flattened ids, a group over "model" is stride-1,
+over "data" stride-16, over "pod" stride-256.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "bf16[16,512]{1,0}"  or tuple "(f32[8], f32[8])"
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*[,)]", re.S)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                             r"(?:T\(([\d,]+)\))?")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: float
+    operand_bytes: float
+    group_size: int
+    axes: Tuple[str, ...]
+    line: str = ""
+
+
+@dataclass
+class CollectiveSummary:
+    ops: List[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(o.operand_bytes for o in self.ops)
+
+    def bytes_by_kind(self) -> Dict[str, float]:
+        d: Dict[str, float] = defaultdict(float)
+        for o in self.ops:
+            d[o.kind] += o.operand_bytes
+        return dict(d)
+
+    def bytes_by_axes(self) -> Dict[str, float]:
+        d: Dict[str, float] = defaultdict(float)
+        for o in self.ops:
+            d["+".join(o.axes) or "?"] += o.operand_bytes
+        return dict(d)
+
+    def count(self) -> int:
+        return len(self.ops)
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Sum bytes over (possibly tuple) HLO result type string."""
+    total = 0.0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_info(line: str) -> Tuple[int, List[List[int]]]:
+    """Return (group_size, example groups) from replica_groups."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        reshape = [int(x) for x in m.group(3).split(",")]
+        transpose = ([int(x) for x in m.group(4).split(",")]
+                     if m.group(4) else list(range(len(reshape))))
+        ids = np.arange(int(np.prod(reshape))).reshape(reshape)
+        ids = ids.transpose(transpose).reshape(n_groups, group_size)
+        return group_size, [list(ids[0]), list(ids[min(1, n_groups - 1)])]
+    m = _GROUPS_RE.search(line)
+    if m:
+        body = m.group(1)
+        groups = []
+        for g in re.findall(r"\{([\d,\s]+)\}", "{" + body + "}"):
+            groups.append([int(x) for x in g.replace(" ", "").split(",") if x])
+        if groups:
+            return len(groups[0]), groups[:2]
+    return 1, [[0]]
+
+
+def _axes_of_group(group: List[int], mesh_shape: Tuple[int, ...],
+                   axis_names: Tuple[str, ...]) -> Tuple[str, ...]:
+    """Classify which mesh axes a replica group spans by id strides."""
+    if len(group) <= 1:
+        return ()
+    strides = []
+    n = len(mesh_shape)
+    # per-axis stride in the flattened id space
+    ax_stride = [int(np.prod(mesh_shape[i + 1:])) for i in range(n)]
+    span = set()
+    ids = np.array(sorted(group))
+    # decompose each id into mesh coords; axes where coords vary are spanned
+    coords = []
+    for i in range(n):
+        coords.append((ids // ax_stride[i]) % mesh_shape[i])
+    for i in range(n):
+        if len(np.unique(coords[i])) > 1:
+            span.add(axis_names[i])
+    return tuple(a for a in axis_names if a in span)
+
+
+def parse_collectives(hlo_text: str, mesh_shape: Tuple[int, ...],
+                      axis_names: Tuple[str, ...]) -> CollectiveSummary:
+    summary = CollectiveSummary()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("//") or " = " not in ls:
+            continue
+        head, rest = ls.split(" = ", 1)
+        opm = re.match(r"(\([^)]*\)|\S+)\s+([\w-]+)", rest)
+        if not opm:
+            continue
+        kind_raw = opm.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if kind_raw == c or kind_raw.startswith(c + "-start") or \
+                    kind_raw == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        rb = _shape_bytes(opm.group(1) if opm.group(1).startswith("(")
+                          else rest.split(" ", 1)[0])
+        gsize, groups = _group_info(ls)
+        axes = _axes_of_group(groups[0], mesh_shape, axis_names)
+        if kind == "all-gather":
+            ob = rb / max(gsize, 1)
+        elif kind == "reduce-scatter":
+            ob = rb * gsize
+        else:
+            ob = rb
+        summary.ops.append(CollectiveOp(kind, rb, ob, gsize, axes, ls[:160]))
+    return summary
+
+
+def ring_traffic_bytes(summary: CollectiveSummary) -> float:
+    """Per-chip link traffic under ring algorithms (analysis supplement):
+    AG: (g−1)/g × result; AR: 2(g−1)/g × operand; RS: (g−1)/g × operand;
+    A2A: (g−1)/g × operand; permute: operand."""
+    total = 0.0
+    for o in summary.ops:
+        g = max(o.group_size, 1)
+        f = (g - 1) / g
+        if o.kind == "all-gather":
+            total += f * o.result_bytes
+        elif o.kind == "all-reduce":
+            total += 2 * f * o.operand_bytes
+        elif o.kind == "reduce-scatter":
+            total += f * o.operand_bytes / g * g  # (g-1)/g × input
+        elif o.kind == "all-to-all":
+            total += f * o.operand_bytes
+        else:
+            total += o.operand_bytes
+    return total

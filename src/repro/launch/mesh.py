@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (required: tests/benches see 1 device; only dryrun.py sets
+the 512-device XLA flag).
+
+Mesh logic:
+  single-pod: (16, 16)        = ("data", "model")   — 256 chips (one v5e pod)
+  multi-pod:  (2, 16, 16)     = ("pod", "data", "model") — 512 chips
+
+"model" is the high-bandwidth TP axis (paper: cores within a socket);
+"data" the batch/KV-capacity axis (paper: attention domains); "pod" the
+cross-pod pipeline/replica axis (paper: rack nodes, embeddings-only traffic).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            f"run under launch/dryrun.py (sets "
+            f"--xla_force_host_platform_device_count=512)")
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (uses however many host devices exist)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)

@@ -1,0 +1,132 @@
+"""Roofline-term computation from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective operand bytes / (chips × link_bw)
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16 (394 TOP/s int8), 819 GB/s
+HBM, ~50 GB/s/link ICI. MODEL_FLOPS = 6·N·D (dense; N_active for MoE) for
+train; 2·N·D + attention-term for inference steps.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9           # per link; v5e: 4 links/chip usable on a 2D torus
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    executor: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    cross_pod_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float            # MODEL_FLOPS / HLO_FLOPs
+    step_s: float                  # max of the three terms
+    roofline_frac: float           # useful compute time / step bound
+    notes: str = ""
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Canonical useful FLOPs for this cell's step (whole step, all chips)."""
+    from repro.models.registry import count_params
+    n_active = count_params(cfg, active_only=True)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        tokens = B * S
+        base = 6.0 * n_active * tokens
+        base += 3.0 * 2.0 * _attn_flops(cfg, S, causal=True) * B
+        return base
+    if shape.mode == "prefill":
+        tokens = B * S
+        return 2.0 * n_active * tokens + 2.0 * _attn_flops(cfg, S, True) * B
+    # decode: one token against ctx S
+    return (2.0 * n_active + _decode_attn_flops(cfg, S)) * B
+
+
+def _attn_flops(cfg: ModelConfig, S: int, causal: bool) -> float:
+    """QK^T + PV flops for a full sequence, per batch element."""
+    if cfg.family == "ssm":
+        nh = cfg.ssm.n_heads(cfg.d_model)
+        return 4.0 * S * nh * cfg.ssm.head_dim * cfg.ssm.d_state
+    total = 0.0
+    for k in cfg.block_kinds():
+        if k == "attn":
+            span = S / 2 if causal else S
+        elif k == "local":
+            span = min(S, cfg.rglru.window) / (2 if causal else 1) \
+                if S <= cfg.rglru.window else cfg.rglru.window
+        else:
+            total += 4.0 * S * (cfg.rglru.lru_width or cfg.d_model)
+            continue
+        total += 4.0 * S * span * cfg.n_heads * cfg.head_dim
+    if cfg.family == "audio":
+        F = cfg.encoder.n_frames
+        total += cfg.encoder.n_layers * 4.0 * F * F * cfg.n_heads * cfg.head_dim
+        total += cfg.n_layers * 4.0 * S * F * cfg.n_heads * cfg.head_dim
+    return total
+
+
+def _decode_attn_flops(cfg: ModelConfig, S: int) -> float:
+    if cfg.family == "ssm":
+        nh = cfg.ssm.n_heads(cfg.d_model)
+        return cfg.n_layers * 4.0 * nh * cfg.ssm.head_dim * cfg.ssm.d_state
+    total = 0.0
+    for k in cfg.block_kinds():
+        if k == "attn":
+            span = S
+        elif k == "local":
+            span = min(S, cfg.rglru.window)
+        else:
+            total += 4.0 * (cfg.rglru.lru_width or cfg.d_model)
+            continue
+        total += 4.0 * span * cfg.n_heads * cfg.head_dim
+    if cfg.family == "audio":
+        total += cfg.n_layers * 4.0 * cfg.encoder.n_frames * \
+            cfg.n_heads * cfg.head_dim
+    return total
+
+
+def compute_terms(cfg: ModelConfig, shape: ShapeConfig, *, mesh_name: str,
+                  executor: str, chips: int, hlo_flops: float,
+                  hlo_bytes: float, collective_bytes: float,
+                  cross_pod_bytes: float = 0.0,
+                  int8_compute: bool = False, notes: str = "") -> RooflineTerms:
+    peak = PEAK_FLOPS_INT8 if int8_compute else PEAK_FLOPS_BF16
+    c = hlo_flops / (chips * peak)
+    m = hlo_bytes / (chips * HBM_BW)
+    # collective term: assignment formula — operand bytes over chip link bw
+    col = collective_bytes / (chips * ICI_BW)
+    terms = {"compute": c, "memory": m, "collective": col}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    step = max(c, m, col)
+    useful_time = mf / (chips * peak)
+    return RooflineTerms(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, executor=executor,
+        chips=chips, hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes, cross_pod_bytes=cross_pod_bytes,
+        compute_s=c, memory_s=m, collective_s=col, dominant=dominant,
+        model_flops=mf, useful_ratio=mf / max(hlo_flops, 1.0),
+        step_s=step, roofline_frac=useful_time / max(step, 1e-30),
+        notes=notes)

@@ -1,0 +1,60 @@
+"""Serving driver: batched decode with the static AOT runtime.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --requests 8 --batch 4 --prompt-len 32 --max-new 16 --reduced
+
+Reports the paper's metrics (TPOT mean/p50/p99, throughput) from real
+measured steps on this host (reduced configs) — the measurement side of the
+Table 2 methodology; benchmarks/table2_end_to_end.py compares these against
+the analytical model.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models.registry import build_model
+from repro.models.sharding import ShardingCtx, operator_centric, sub_operator
+from repro.runtime.serving import Request, ServingEngine
+
+
+def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
+          max_new: int, *, reduced: bool = True, seed: int = 0,
+          executor: str = "sub_operator"):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    api = build_model(cfg)
+    ctx = ShardingCtx(None, sub_operator() if executor == "sub_operator"
+                      else operator_centric())
+    rng = np.random.default_rng(seed)
+    import jax
+    params = api.init(jax.random.key(seed))
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, prompt_len,
+                                        dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n_requests)]
+    eng = ServingEngine(api, ctx, batch_slots, prompt_len)
+    stats = eng.run(params, reqs)
+    return stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args(argv)
+    stats = serve(args.arch, args.requests, args.batch, args.prompt_len,
+                  args.max_new)
+    print("serve stats:", stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.registry import ModelAPI, build_model, count_params  # noqa: F401
+from repro.models.sharding import (  # noqa: F401
+    ExecutionRules, NULL_CTX, ShardingCtx, operator_centric, seq_sharded_kv,
+    sub_operator,
+)

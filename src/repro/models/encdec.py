@@ -1,0 +1,249 @@
+"""Whisper-style encoder–decoder.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, n_frames, d_model). We implement the
+transformer backbone: 24L non-causal encoder + 24L causal decoder with
+cross-attention. Decode shapes run the DECODER serve_step (enc-dec archs do
+have a decode step; only encoder-only models skip decode cells).
+
+Serving caches: per-request the cross-attention K/V is computed ONCE from the
+encoder output and is *static* thereafter — in WA-separation terms it behaves
+like weights (reusable, non-growing) and lives on the weight domain, while the
+growing self-attention KV lives on the attention domain (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kv.cache import (KVCache, bump_length, init_kv_cache, valid_mask)
+from repro.models import common
+from repro.models.attention import (decode_attention, flash_attention,
+                                    make_attn_params)
+from repro.models.sharding import ShardingCtx
+from repro.models.transformer import (block_decode, make_ffn_params,
+                                      ffn_apply, write_prefill)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def _mha(p, x, cfg, ctx, kv_x=None, causal=True, positions=None):
+    """Full-seq attention (self or cross). x: (B,S,D); kv_x: (B,F,D)."""
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = kv_x if kv_x is not None else x
+    q = common.linear(p["wq"], x).reshape(B, S, hq, hd)
+    k = common.linear(p["wk"], src).reshape(B, src.shape[1], hkv, hd)
+    v = common.linear(p["wv"], src).reshape(B, src.shape[1], hkv, hd)
+    q = ctx.ann(q, "batch", "seq", "act_heads", "head_dim")
+    k = ctx.ann(k, "batch", "seq", "kv_heads", "head_dim")
+    v = ctx.ann(v, "batch", "seq", "kv_heads", "head_dim")
+    from repro.models.attention import flash_attention_padded, q_chunk_for
+    o = flash_attention_padded(q, k, v, causal and kv_x is None, 0,
+                               q_chunk_for(S), q_chunk_for(src.shape[1]))
+    o = common.linear(p["wo"], o.reshape(B, S, hq * hd))
+    return o, (k, v)
+
+
+def make_enc_block(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    dt = common.dtype_of(cfg)
+    return {"ln1": common.make_norm(cfg.norm, cfg.d_model, dt),
+            "attn": make_attn_params(ks[0], cfg),
+            "ln2": common.make_norm(cfg.norm, cfg.d_model, dt),
+            "ffn": make_ffn_params(ks[1], cfg)}
+
+
+def make_dec_block(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    dt = common.dtype_of(cfg)
+    return {"ln1": common.make_norm(cfg.norm, cfg.d_model, dt),
+            "attn": make_attn_params(ks[0], cfg),
+            "ln_x": common.make_norm(cfg.norm, cfg.d_model, dt),
+            "xattn": make_attn_params(ks[1], cfg),
+            "ln2": common.make_norm(cfg.norm, cfg.d_model, dt),
+            "ffn": make_ffn_params(ks[2], cfg)}
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    dt = common.dtype_of(cfg)
+    enc_l = cfg.encoder.n_layers
+    return {
+        "embed": common.make_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "pos_embed": common.dense_init(ks[1], (32768 + 256, cfg.d_model), dt,
+                                       fan_in=1),
+        "enc_blocks": common.stacked_init(
+            ks[2], enc_l, lambda k: make_enc_block(k, cfg)),
+        "enc_ln_f": common.make_norm(cfg.norm, cfg.d_model, dt),
+        "dec_blocks": common.stacked_init(
+            ks[3], cfg.n_layers, lambda k: make_dec_block(k, cfg)),
+        "ln_f": common.make_norm(cfg.norm, cfg.d_model, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, frames: jax.Array, cfg, ctx: ShardingCtx,
+           train: bool) -> jax.Array:
+    """frames: (B,F,D) stub embeddings → (B,F,D)."""
+    B, F, D = frames.shape
+    x = frames.astype(common.dtype_of(cfg))
+    x = x + common.sinusoidal_pos(F, D)[None].astype(x.dtype)
+    x = ctx.ann(x, "batch", "seq", "embed")
+
+    def blk(lp, h):
+        y = common.apply_norm(cfg.norm, lp["ln1"], h, cfg.norm_eps)
+        o, _ = _mha(lp["attn"], y, cfg, ctx, causal=False)
+        h = ctx.ann(h + o, "batch", "seq", "embed_shard")
+        y = common.apply_norm(cfg.norm, lp["ln2"], h, cfg.norm_eps)
+        y = ctx.ann(y, "batch", "seq", "embed")
+        return ctx.ann(h + ffn_apply(lp["ffn"], y, cfg, ctx),
+                       "batch", "seq", "embed_shard")
+
+    if train:
+        blk = jax.checkpoint(blk, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(lambda h, lp: (blk(lp, h), None), x,
+                        params["enc_blocks"], unroll=common.scan_unroll())
+    return common.apply_norm(cfg.norm, params["enc_ln_f"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder (full-seq: train / prefill)
+# ---------------------------------------------------------------------------
+
+def decode_full(params, tokens, enc_out, cfg, ctx, train: bool,
+                collect_kv: bool = False):
+    B, S = tokens.shape
+    x = common.embed(params["embed"], tokens, ctx)
+    x = x + params["pos_embed"][:S][None].astype(x.dtype)
+
+    def blk(lp, h):
+        y = common.apply_norm(cfg.norm, lp["ln1"], h, cfg.norm_eps)
+        o, self_kv = _mha(lp["attn"], y, cfg, ctx, causal=True)
+        h = ctx.ann(h + o, "batch", "seq", "embed_shard")
+        y = common.apply_norm(cfg.norm, lp["ln_x"], h, cfg.norm_eps)
+        o, cross_kv = _mha(lp["xattn"], y, cfg, ctx, kv_x=enc_out)
+        h = ctx.ann(h + o, "batch", "seq", "embed_shard")
+        y = common.apply_norm(cfg.norm, lp["ln2"], h, cfg.norm_eps)
+        y = ctx.ann(y, "batch", "seq", "embed")
+        h = ctx.ann(h + ffn_apply(lp["ffn"], y, cfg, ctx),
+                    "batch", "seq", "embed_shard")
+        return h, (self_kv, cross_kv)
+
+    blk_t = blk
+    if train:
+        blk_t = jax.checkpoint(blk,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(h, lp):
+        h, kvs = blk_t(lp, h)
+        return h, kvs if collect_kv else None
+
+    x, kvs = jax.lax.scan(body, x, params["dec_blocks"], unroll=common.scan_unroll())
+    x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    return (x, kvs) if collect_kv else (x, None)
+
+
+def loss_fn(params, batch, cfg, ctx) -> jax.Array:
+    enc_out = encode(params, batch["frames"], cfg, ctx, train=True)
+    x, _ = decode_full(params, batch["tokens"], enc_out, cfg, ctx, train=True)
+    return common.chunked_ce_loss(params["embed"]["table"], x, batch["labels"],
+                                  ctx, chunk=common.ce_chunk(x.shape[1]))
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with (self KV, static cross KV)
+# ---------------------------------------------------------------------------
+
+def make_caches(cfg: ModelConfig, batch: int, max_len: int):
+    self_kv = init_kv_cache(cfg.n_layers, batch, cfg.n_kv_heads, max_len,
+                            cfg.head_dim, dtype=common.dtype_of(cfg),
+                            quantized=(cfg.kv_dtype == "int8"))
+    cross = {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads,
+                        cfg.encoder.n_frames, cfg.head_dim),
+                       common.dtype_of(cfg)),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads,
+                        cfg.encoder.n_frames, cfg.head_dim),
+                       common.dtype_of(cfg)),
+    }
+    return {"self": self_kv, "cross": cross}
+
+
+def prefill(params, tokens, frames, cfg, ctx):
+    B, S = tokens.shape
+    caches = make_caches(cfg, B, S + 128)
+    enc_out = encode(params, frames, cfg, ctx, train=False)
+    x, kvs = decode_full(params, tokens, enc_out, cfg, ctx, train=False,
+                         collect_kv=True)
+    (sk, sv), (ck, cv) = kvs                    # (L,B,S,kv,hd) / (L,B,F,kv,hd)
+    self_kv = write_prefill(caches["self"], jnp.swapaxes(sk, 2, 3),
+                            jnp.swapaxes(sv, 2, 3), S)
+    caches = {"self": self_kv,
+              "cross": {"k": jnp.swapaxes(ck, 2, 3).astype(ck.dtype),
+                        "v": jnp.swapaxes(cv, 2, 3).astype(cv.dtype)}}
+    logits = common.unembed_logits(params["embed"]["table"], x[:, -1:], ctx)
+    return caches, logits
+
+
+def decode_step(params, caches, tokens, cfg, ctx):
+    from repro.kv.cache import layer_append, layer_read, slot_valid_mask
+    from repro.models.attention import qkv_project
+    self_kv: KVCache = caches["self"]
+    cross = caches["cross"]
+    B = tokens.shape[0]
+    pos = self_kv.length
+    quant = self_kv.is_quantized
+    x = common.embed(params["embed"], tokens[:, None], ctx)
+    x = x + jax.lax.dynamic_index_in_dim(
+        params["pos_embed"], pos, 0, keepdims=True)[None].astype(x.dtype)
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def body(h, xs):
+        if quant:
+            lp, ck, cv, k_l, v_l, ks_l, vs_l = xs
+        else:
+            lp, ck, cv, k_l, v_l = xs
+            ks_l = vs_l = None
+        # self-attn residual over this layer's slices
+        y = common.apply_norm(cfg.norm, lp["ln1"], h, cfg.norm_eps)
+        q, k, v = qkv_project(lp["attn"], y, cfg, ctx,
+                              jnp.full((B, 1), pos, jnp.int32))
+        k_l, v_l, ks_l, vs_l = layer_append(k_l, v_l, ks_l, vs_l,
+                                            k[:, 0], v[:, 0], pos, 0)
+        kc, vc = layer_read(k_l, v_l, ks_l, vs_l, dtype=h.dtype)
+        mask = slot_valid_mask(k_l.shape[2], 0, pos)
+        o = decode_attention(q[:, 0], kc, vc, mask, ctx)
+        h = h + common.linear(lp["attn"]["wo"], o.reshape(B, 1, -1))
+        # cross-attention against static KV
+        y = common.apply_norm(cfg.norm, lp["ln_x"], h, cfg.norm_eps)
+        qx = common.linear(lp["xattn"]["wq"], y).reshape(B, 1, hq, hd)
+        ones = jnp.ones((ck.shape[2],), bool)
+        ox = decode_attention(qx[:, 0], ck, cv, ones, ctx)
+        h = h + common.linear(lp["xattn"]["wo"], ox.reshape(B, 1, -1))
+        # ffn
+        y = common.apply_norm(cfg.norm, lp["ln2"], h, cfg.norm_eps)
+        h = h + ffn_apply(lp["ffn"], y, cfg, ctx)
+        ys = (k_l, v_l) + ((ks_l, vs_l) if quant else ())
+        return h, ys
+
+    xs = (params["dec_blocks"], cross["k"], cross["v"],
+          self_kv.k, self_kv.v) + \
+        ((self_kv.k_scale, self_kv.v_scale) if quant else ())
+    x, ys = jax.lax.scan(body, x, xs, unroll=common.scan_unroll())
+    if quant:
+        k_new, v_new, ks_new, vs_new = ys
+    else:
+        (k_new, v_new), (ks_new, vs_new) = ys, (None, None)
+    self_kv = KVCache(k_new, v_new, ks_new, vs_new, pos + 1)
+    x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    logits = common.unembed_logits(params["embed"]["table"], x, ctx)
+    return {"self": self_kv, "cross": cross}, logits

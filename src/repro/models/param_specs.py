@@ -1,0 +1,127 @@
+"""Parameter → PartitionSpec assignment by leaf-path pattern matching.
+
+Equivalent role to the paper's deterministic shard→core map (§4.3): the
+placement of every weight shard is decided statically, once, before compile.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import ShardingCtx
+
+# (match keys..., logical axes for the trailing dims of the leaf)
+# Leading stacked dims ("layers"/superblock) are padded with None.
+_RULES = [
+    (("embed", "table"), ("vocab", "embed_w")),
+    (("unembed", "table"), ("vocab", "embed_w")),
+    (("pos_embed",), (None, "embed_w")),
+    (("router", "w"), ("embed_w", None)),
+    (("moe", "w_gate"), ("experts", "embed_w", "mlp_shard")),
+    (("moe", "w_up"), ("experts", "embed_w", "mlp_shard")),
+    (("moe", "w_down"), ("experts", "mlp_shard", "embed_w")),
+    (("wq", "w"), ("embed_w", "heads")),
+    (("wk", "w"), ("embed_w", "kv_heads")),
+    (("wv", "w"), ("embed_w", "kv_heads")),
+    (("wo", "w"), ("heads", "embed_w")),
+    (("wq", "b"), ("heads",)),
+    (("wk", "b"), ("kv_heads",)),
+    (("wv", "b"), ("kv_heads",)),
+    (("wo", "b"), ("embed",)),
+    (("w_gate", "w"), ("embed_w", "mlp")),
+    (("w_up", "w"), ("embed_w", "mlp")),
+    (("w_down", "w"), ("mlp", "embed_w")),
+    (("w_in", "w"), ("embed_w", "mlp")),
+    (("w_out", "w"), ("mlp", "embed_w")),
+    (("w_in", "b"), ("mlp",)),
+    (("w_out", "b"), ("embed",)),
+    # --- ssd ---
+    (("z_proj", "w"), ("embed_w", "lru")),
+    (("x_proj", "w"), ("embed_w", "lru")),
+    (("bc_proj", "w"), ("embed_w", None)),
+    (("dt_proj", "w"), ("embed_w", "ssm_heads")),
+    (("dt_bias",), ("ssm_heads",)),
+    (("A_log",), ("ssm_heads",)),
+    (("D_skip",), ("ssm_heads",)),
+    (("conv_x",), ("conv", "lru")),
+    (("conv_bc",), ("conv", None)),
+    (("out_proj", "w"), ("lru", "embed_w")),
+    # --- rglru ---
+    (("in_a", "w"), ("embed_w", "lru")),
+    (("in_b", "w"), ("embed_w", "lru")),
+    (("mix", "conv"), ("conv", "lru")),
+    (("w_a",), ("heads", None, None)),
+    (("w_x",), ("heads", None, None)),
+    (("lam",), ("lru",)),
+    (("out", "w"), ("lru", "embed_w")),
+]
+
+_STACK_KEYS = ("blocks", "super", "tail", "enc_blocks", "dec_blocks")
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "name", str(getattr(p, "idx", p)))
+        out.append(str(k))
+    return tuple(out)
+
+
+def leaf_logical(path, leaf) -> Tuple:
+    keys = _path_keys(path)
+    n_stack = sum(1 for k in keys if k in _STACK_KEYS)
+    logical = None
+    for match, log in _RULES:
+        # all match keys appear, in order, as a subsequence tail-anchored
+        ki = 0
+        for k in keys:
+            if ki < len(match) and k == match[ki]:
+                ki += 1
+        if ki == len(match):
+            logical = log
+            break
+    if logical is None:
+        logical = (None,) * (leaf.ndim - n_stack)     # norms, scales → replicate
+    pad = leaf.ndim - len(logical)
+    return (None,) * pad + tuple(logical)
+
+
+def param_specs(params, ctx: ShardingCtx):
+    """pytree of PartitionSpec matching ``params``' structure."""
+    def one(path, leaf):
+        logical = leaf_logical(path, leaf)
+        return ctx.spec(logical, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def cache_specs(caches, ctx: ShardingCtx):
+    """KV caches / recurrent state sharding.
+
+    KV leaves are (L,B,n_kv,S,hd)-shaped (5D [+scale 5D]); recurrent h is
+    (L,B,...) — batch over data; heads/channels over model per the rules.
+    """
+    def one(path, leaf):
+        keys = _path_keys(path)
+        nd = leaf.ndim
+        if leaf.ndim == 0:
+            return P()
+        if "conv" in keys and nd == 4:          # (L,B,W-1,C)
+            return ctx.spec((None, "batch", None, "lru"), leaf.shape)
+        if nd == 5 and "h" in keys:             # ssd state (L,B,nh,hd,N)
+            return ctx.spec((None, "batch", "ssm_heads", None, None), leaf.shape)
+        if nd == 3 and "h" in keys:             # rglru state (L,B,lru)
+            return ctx.spec((None, "batch", "lru"), leaf.shape)
+        if nd == 6:                             # quant scale (L,B,kv,S,1)+? n/a
+            return P()
+        if nd == 5:                             # KV (L,B,n_kv,S,hd) or scales
+            return ctx.spec((None, "batch", "kv_heads", "kv_seq", None),
+                            leaf.shape)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, caches)

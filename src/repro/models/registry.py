@@ -1,0 +1,172 @@
+"""Uniform model API over all families + input_specs() for the dry-run.
+
+``build_model(cfg)`` → ModelAPI with:
+    init(key) -> params
+    loss(params, batch, ctx) -> scalar
+    prefill(params, batch, ctx) -> (caches, last_logits)
+    decode(params, caches, tokens, ctx) -> (caches, logits)
+    init_caches(batch, max_len) -> caches pytree
+    input_specs(shape) -> dict of jax.ShapeDtypeStruct (weak-type-correct,
+                          shardable, no device allocation)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+
+DECODE_SLACK = 128      # cache headroom beyond the shape's context length
+
+
+class ModelAPI(NamedTuple):
+    config: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_caches: Callable
+    input_specs: Callable
+
+
+# ---------------------------------------------------------------------------
+# family builders
+# ---------------------------------------------------------------------------
+
+def _build_transformer(cfg: ModelConfig) -> ModelAPI:
+    from repro.models import transformer as T
+
+    is_vlm = cfg.family == "vlm"
+
+    def loss(params, batch, ctx):
+        return T.loss_fn(params, batch, cfg, ctx)
+
+    def prefill(params, batch, ctx):
+        cache = T.make_cache(cfg, batch["tokens"].shape[0],
+                             batch["tokens"].shape[1]
+                             + (cfg.n_vision_tokens if is_vlm else 0)
+                             + DECODE_SLACK)
+        return T.prefill(params, batch["tokens"], cfg, ctx, cache,
+                         vision_embeds=batch.get("vision_embeds"))
+
+    def decode(params, caches, tokens, ctx):
+        return T.decode_step(params, caches, tokens, cfg, ctx)
+
+    def init_caches(batch, max_len):
+        return T.make_cache(cfg, batch, max_len)
+
+    return ModelAPI(cfg, lambda k: T.init_params(k, cfg), loss, prefill,
+                    decode, init_caches, _lm_input_specs(cfg))
+
+
+def _build_ssm(cfg: ModelConfig) -> ModelAPI:
+    from repro.models import ssm as S
+
+    return ModelAPI(
+        cfg,
+        lambda k: S.init_params(k, cfg),
+        lambda p, b, ctx: S.loss_fn(p, b, cfg, ctx),
+        lambda p, b, ctx: S.prefill(p, b["tokens"], cfg, ctx),
+        lambda p, c, t, ctx: S.decode_step(p, c, t, cfg, ctx),
+        lambda batch, max_len: S.make_state(cfg, batch),
+        _lm_input_specs(cfg))
+
+
+def _build_hybrid(cfg: ModelConfig) -> ModelAPI:
+    from repro.models import rglru as R
+
+    return ModelAPI(
+        cfg,
+        lambda k: R.init_params(k, cfg),
+        lambda p, b, ctx: R.loss_fn(p, b, cfg, ctx),
+        lambda p, b, ctx: R.prefill(p, b["tokens"], cfg, ctx),
+        lambda p, c, t, ctx: R.decode_step(p, c, t, cfg, ctx),
+        lambda batch, max_len: R.make_caches(cfg, batch, max_len),
+        _lm_input_specs(cfg))
+
+
+def _build_encdec(cfg: ModelConfig) -> ModelAPI:
+    from repro.models import encdec as E
+
+    def prefill(p, b, ctx):
+        return E.prefill(p, b["tokens"], b["frames"], cfg, ctx)
+
+    return ModelAPI(
+        cfg,
+        lambda k: E.init_params(k, cfg),
+        lambda p, b, ctx: E.loss_fn(p, b, cfg, ctx),
+        prefill,
+        lambda p, c, t, ctx: E.decode_step(p, c, t, cfg, ctx),
+        lambda batch, max_len: E.make_caches(cfg, batch, max_len),
+        _lm_input_specs(cfg))
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _build_transformer(cfg)
+    if fam == "ssm":
+        return _build_ssm(cfg)
+    if fam == "hybrid":
+        return _build_hybrid(cfg)
+    if fam == "audio":
+        return _build_encdec(cfg)
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def _lm_input_specs(cfg: ModelConfig):
+    f32 = jnp.dtype(jnp.float32)
+    i32 = jnp.dtype(jnp.int32)
+
+    def specs(shape: ShapeConfig) -> Dict[str, Any]:
+        B, S = shape.global_batch, shape.seq_len
+        sd = jax.ShapeDtypeStruct
+        if shape.mode == "decode":
+            return {"tokens": sd((B,), i32)}
+        out: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            out["frames"] = sd((B, cfg.encoder.n_frames, cfg.d_model), f32)
+        s_text = S
+        if cfg.family == "vlm":
+            out["vision_embeds"] = sd((B, cfg.n_vision_tokens, cfg.d_model), f32)
+            s_text = S - cfg.n_vision_tokens
+        out["tokens"] = sd((B, s_text), i32)
+        if shape.mode == "train":
+            out["labels"] = sd((B, s_text), i32)
+        return out
+
+    return specs
+
+
+def decode_cache_len(shape: ShapeConfig) -> int:
+    return shape.seq_len + DECODE_SLACK
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (exact, via eval_shape — no allocation)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    api = build_model(cfg)
+    shapes = jax.eval_shape(api.init, jax.random.key(0))
+    leaves = jax.tree_util.tree_leaves_with_path(shapes)
+    total = 0
+    for path, leaf in leaves:
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        n = int(np.prod(leaf.shape))
+        if "scale" in keys and any(k in ("w", "table") for k in keys):
+            continue                        # int8 quant scales aren't params
+        if active_only and cfg.moe is not None and any(
+                k in ("w_gate", "w_up", "w_down") for k in keys) and \
+                "moe" in keys:
+            n = n * cfg.moe.experts_per_token // cfg.moe.num_experts
+        total += n
+    return total

@@ -1,0 +1,367 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks interleaved with
+local (sliding-window) attention, pattern (R, R, A) repeating.
+
+Hybrid applicability (DESIGN.md §6): local-attn layers carry a *bounded*
+window KV (ring buffer) — separable à la WA; RG-LRU layers carry O(1) state —
+the paradox does not bind there. long_500k decode is runnable.
+
+RG-LRU recurrence (per channel, gates block-diagonal over heads):
+    r_t = σ(W_a ξ_t),  i_t = σ(W_x ξ_t)
+    a_t = exp(−c · softplus(Λ) · r_t),  c = 8
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ ξ_t)
+
+Full-seq path uses jax.lax.associative_scan (log-depth parallel scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LOCAL_ATTN, RGLRU, ModelConfig
+from repro.kv.cache import KVCache, append_kv, bump_length, init_kv_cache
+from repro.kv.state import (RecurrentState, causal_conv, conv_step,
+                            init_rglru_state, read_state, write_state)
+from repro.models import common
+from repro.models.sharding import ShardingCtx
+from repro.models.transformer import (block_decode, block_full_seq,
+                                      make_block_params, write_prefill)
+
+C_RGLRU = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU temporal-mixing block
+# ---------------------------------------------------------------------------
+
+def lru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def make_rglru_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, lw = cfg.d_model, lru_width(cfg)
+    nh = cfg.n_heads
+    blk = lw // nh
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_a": common.make_linear(ks[0], d, lw, dt),       # gelu branch
+        "in_b": common.make_linear(ks[1], d, lw, dt),       # recurrent branch
+        "conv": common.dense_init(ks[2], (cfg.rglru.conv_width, lw), dt,
+                                  fan_in=cfg.rglru.conv_width),
+        "w_a": common.dense_init(ks[3], (nh, blk, blk), dt, fan_in=blk),
+        "w_x": common.dense_init(ks[4], (nh, blk, blk), dt, fan_in=blk),
+        "lam": jnp.log(jnp.expm1(  # softplus⁻¹ so a_t^c ∈ ~[0.9, 0.999]
+            -jnp.log(jnp.linspace(0.9, 0.999, lw, dtype=jnp.float32)) / C_RGLRU)),
+        "out": common.make_linear(ks[5], lw, d, dt),
+    }
+
+
+def _gates(p, xi: jax.Array, nh: int) -> Tuple[jax.Array, jax.Array]:
+    """Block-diagonal gate projections. xi: (B,S,lw) → r, i (B,S,lw) f32."""
+    B, S, lw = xi.shape
+    blk = lw // nh
+    xh = xi.reshape(B, S, nh, blk).astype(jnp.float32)
+    r = jnp.einsum("bsnk,nkj->bsnj", xh, p["w_a"].astype(jnp.float32))
+    i = jnp.einsum("bsnk,nkj->bsnj", xh, p["w_x"].astype(jnp.float32))
+    return (jax.nn.sigmoid(r).reshape(B, S, lw),
+            jax.nn.sigmoid(i).reshape(B, S, lw))
+
+
+def _lru_coeffs(p, xi, nh):
+    """Per-step (a_t, b_t) of h_t = a_t h + b_t. xi: (B,S,lw)."""
+    r, i = _gates(p, xi, nh)
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated = i * xi.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return a, b
+
+
+def rglru_full_seq(p: Dict, x: jax.Array, cfg: ModelConfig,
+                   ctx: ShardingCtx) -> jax.Array:
+    """x: (B,S,D) → (B,S,D)."""
+    nh = cfg.n_heads
+    ya = jax.nn.gelu(common.linear(p["in_a"], x).astype(jnp.float32))
+    xb = common.linear(p["in_b"], x)
+    xb = ctx.ann(xb, "batch", "seq", "lru")
+    xb = causal_conv(xb, p["conv"])
+    a, b = _lru_coeffs(p, xb, nh)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = Bc                                                  # h_t (zero init)
+    y = (ya * h).astype(x.dtype)
+    y = ctx.ann(y, "batch", "seq", "lru")
+    return common.linear(p["out"], y)
+
+
+def rglru_final_state(p, x, cfg, ctx):
+    """State after a prefill pass → (h (B,lw) f32, conv tail (B,W-1,lw))."""
+    nh = cfg.n_heads
+    W = cfg.rglru.conv_width
+    xb = common.linear(p["in_b"], x)
+    conv_tail = xb[:, -(W - 1):, :].astype(jnp.float32)
+    xb = causal_conv(xb, p["conv"])
+    a, b = _lru_coeffs(p, xb, nh)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return Bc[:, -1, :], conv_tail
+
+
+def rglru_decode(p: Dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+                 h: jax.Array, conv: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token step over one layer's state slices.
+    x: (B,1,D); h: (B,lw) f32; conv: (B,W-1,lw) → (out, h', conv')."""
+    nh = cfg.n_heads
+    ya = jax.nn.gelu(common.linear(p["in_a"], x).astype(jnp.float32))[:, 0]
+    xb = common.linear(p["in_b"], x)[:, 0]                  # (B,lw)
+    xb_c, conv_new = conv_step(conv, xb, p["conv"])
+    a, b = _lru_coeffs(p, xb_c[:, None, :], nh)
+    h_new = a[:, 0] * h + b[:, 0]
+    y = (ya * h_new).astype(x.dtype)[:, None, :]
+    out = common.linear(p["out"], y)
+    return out, h_new, conv_new.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid stack: scan over (R, R, A) superblocks + remainder R layers
+# ---------------------------------------------------------------------------
+
+def _layer_plan(cfg: ModelConfig):
+    kinds = cfg.block_kinds()
+    pat = cfg.rglru.block_pattern
+    n_super = 0
+    i = 0
+    while i + len(pat) <= len(kinds) and tuple(kinds[i:i + len(pat)]) == pat:
+        n_super += 1
+        i += len(pat)
+    tail = kinds[i:]
+    assert all(k == RGLRU for k in tail), "tail must be recurrent-only"
+    return n_super, len(tail)
+
+
+def make_mix_block(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """One RG-LRU residual pair: temporal mix + GeGLU FFN.
+    (Local-attention layers reuse transformer.make_block_params directly.)"""
+    from repro.models.transformer import make_ffn_params
+    ks = jax.random.split(key, 2)
+    dt = common.dtype_of(cfg)
+    return {"ln1": common.make_norm(cfg.norm, cfg.d_model, dt),
+            "ln2": common.make_norm(cfg.norm, cfg.d_model, dt),
+            "ffn": make_ffn_params(ks[1], cfg),
+            "mix": make_rglru_params(ks[0], cfg)}
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    n_super, n_tail = _layer_plan(cfg)
+    ks = jax.random.split(key, 5)
+    dt = common.dtype_of(cfg)
+
+    def super_blk(k):
+        kk = jax.random.split(k, 3)
+        return {"r1": make_mix_block(kk[0], cfg),
+                "r2": make_mix_block(kk[1], cfg),
+                "attn": make_block_params(kk[2], cfg)}
+
+    params = {
+        "embed": common.make_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "super": common.stacked_init(ks[1], n_super, super_blk),
+        "ln_f": common.make_norm(cfg.norm, cfg.d_model, dt),
+    }
+    if n_tail:
+        params["tail"] = common.stacked_init(
+            ks[2], n_tail, lambda k: make_mix_block(k, cfg))
+    return params
+
+
+def _rglru_residual(p, h, cfg, ctx, full_seq: bool, state=None):
+    """state (decode only): tuple (h_slice (B,lw), conv_slice (B,W-1,lw))."""
+    y = common.apply_norm(cfg.norm, p["ln1"], h, cfg.norm_eps)
+    y = ctx.ann(y, "batch", "seq", "embed")
+    if full_seq:
+        mix = rglru_full_seq(p["mix"], y, cfg, ctx)
+    else:
+        mix, h_new, conv_new = rglru_decode(p["mix"], y, cfg, ctx, *state)
+        state = (h_new, conv_new)
+    h = ctx.ann(h + mix, "batch", "seq", "embed_shard")
+    y = common.apply_norm(cfg.norm, p["ln2"], h, cfg.norm_eps)
+    y = ctx.ann(y, "batch", "seq", "embed")
+    from repro.models.transformer import ffn_apply
+    h = ctx.ann(h + ffn_apply(p["ffn"], y, cfg, ctx), "batch", "seq", "embed_shard")
+    return h, state
+
+
+def forward_hidden(params, tokens, cfg, ctx, train: bool):
+    x = common.embed(params["embed"], tokens, ctx)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)        # gemma-style scale
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    win = cfg.rglru.window
+
+    def super_fwd(lp, h):
+        h, _ = _rglru_residual(lp["r1"], h, cfg, ctx, True)
+        h, _ = _rglru_residual(lp["r2"], h, cfg, ctx, True)
+        h, _ = block_full_seq(lp["attn"], h, cfg, ctx, positions,
+                              causal=True, window=win, train=train)
+        return h
+
+    def tail_fwd(lp, h):
+        h, _ = _rglru_residual(lp, h, cfg, ctx, True)
+        return h
+
+    if train:
+        super_fwd = jax.checkpoint(super_fwd,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+        tail_fwd = jax.checkpoint(tail_fwd,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+
+    x, _ = jax.lax.scan(lambda h, lp: (super_fwd(lp, h), None), x, params["super"], unroll=common.scan_unroll())
+    if "tail" in params:
+        x, _ = jax.lax.scan(lambda h, lp: (tail_fwd(lp, h), None), x, params["tail"], unroll=common.scan_unroll())
+    return common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg, ctx):
+    x = forward_hidden(params, batch["tokens"], cfg, ctx, train=True)
+    return common.chunked_ce_loss(params["embed"]["table"], x, batch["labels"],
+                                  ctx, chunk=common.ce_chunk(x.shape[1]))
+
+
+# --- serving: hybrid cache = (window KV for attn layers, recurrent state) ---
+
+def make_caches(cfg: ModelConfig, batch: int, max_len: int):
+    n_super, n_tail = _layer_plan(cfg)
+    kv = init_kv_cache(n_super, batch, cfg.n_kv_heads,
+                       min(cfg.rglru.window, max_len), cfg.head_dim,
+                       dtype=common.dtype_of(cfg),
+                       quantized=(cfg.kv_dtype == "int8"),
+                       window=cfg.rglru.window)
+    st = init_rglru_state(2 * n_super + n_tail, batch, lru_width(cfg),
+                          cfg.rglru.conv_width)
+    return {"kv": kv, "state": st}
+
+
+def prefill(params, tokens, cfg, ctx):
+    """Full-seq pass that also materializes decode caches."""
+    n_super, n_tail = _layer_plan(cfg)
+    B, S = tokens.shape
+    caches = make_caches(cfg, B, S + 128)      # ring ≥ window needs decode slack
+    x = common.embed(params["embed"], tokens, ctx)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    win = cfg.rglru.window
+
+    def super_fwd(h, lp):
+        hs, convs, kvs = [], [], None
+        h, st = _rglru_state_residual(lp["r1"], h, cfg, ctx)
+        hs.append(st)
+        h, st = _rglru_state_residual(lp["r2"], h, cfg, ctx)
+        hs.append(st)
+        h, (q, k, v, _) = block_full_seq(lp["attn"], h, cfg, ctx,
+                                         positions, causal=True, window=win,
+                                         train=False)
+        return h, (hs, (k, v))
+
+    def _rglru_state_residual(p, h, cfg_, ctx_):
+        y = common.apply_norm(cfg_.norm, p["ln1"], h, cfg_.norm_eps)
+        hstate, conv_tail = rglru_final_state(p["mix"], y, cfg_, ctx_)
+        mix = rglru_full_seq(p["mix"], y, cfg_, ctx_)
+        h = h + mix
+        y = common.apply_norm(cfg_.norm, p["ln2"], h, cfg_.norm_eps)
+        from repro.models.transformer import ffn_apply
+        h = h + ffn_apply(p["ffn"], y, cfg_, ctx_)
+        return h, (hstate, conv_tail)
+
+    x, (states, kvs) = jax.lax.scan(super_fwd, x, params["super"], unroll=common.scan_unroll())
+    # states: list of 2 tuples of stacked (n_super,...) leaves
+    h_list = [states[0][0], states[1][0]]                   # (n_super,B,lw)
+    c_list = [states[0][1], states[1][1]]
+    # interleave r1/r2 per superblock → layer order 2i, 2i+1
+    hs = jnp.stack([h_list[0], h_list[1]], axis=1).reshape(
+        2 * h_list[0].shape[0], *h_list[0].shape[1:])
+    cs = jnp.stack([c_list[0], c_list[1]], axis=1).reshape(
+        2 * c_list[0].shape[0], *c_list[0].shape[1:])
+    if "tail" in params:
+        def tail_fwd(h, lp):
+            h, st = _rglru_state_residual(lp, h, cfg, ctx)
+            return h, st
+        x, (th, tc) = jax.lax.scan(tail_fwd, x, params["tail"], unroll=common.scan_unroll())
+        hs = jnp.concatenate([hs, th], axis=0)
+        cs = jnp.concatenate([cs, tc], axis=0)
+    state = RecurrentState(h=hs, conv=cs)
+    k_all, v_all = kvs                                      # (n_super,B,S,kv,hd)
+    kv = write_prefill(caches["kv"], jnp.swapaxes(k_all, 2, 3),
+                       jnp.swapaxes(v_all, 2, 3), S)
+    x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    logits = common.unembed_logits(params["embed"]["table"], x[:, -1:], ctx)
+    return {"kv": kv, "state": state}, logits
+
+
+def decode_step(params, caches, tokens, cfg, ctx):
+    kv: KVCache = caches["kv"]
+    state: RecurrentState = caches["state"]
+    n_super, n_tail = _layer_plan(cfg)
+    pos = kv.length
+    x = common.embed(params["embed"], tokens[:, None], ctx)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    quant = kv.is_quantized
+
+    # state slices: first 2·n_super entries pair up with superblocks
+    def pairify(a):
+        return a[:2 * n_super].reshape(n_super, 2, *a.shape[1:])
+
+    def super_step(h, xs):
+        if quant:
+            lp, hs, cs, k_l, v_l, ks_l, vs_l = xs
+        else:
+            lp, hs, cs, k_l, v_l = xs
+            ks_l = vs_l = None
+        h, st1 = _rglru_residual(lp["r1"], h, cfg, ctx, False, (hs[0], cs[0]))
+        h, st2 = _rglru_residual(lp["r2"], h, cfg, ctx, False, (hs[1], cs[1]))
+        h, (k_l, v_l, ks_l, vs_l) = block_decode(
+            lp["attn"], h, cfg, ctx, (k_l, v_l, ks_l, vs_l), pos,
+            window=cfg.rglru.window)
+        hs_new = jnp.stack([st1[0], st2[0]])
+        cs_new = jnp.stack([st1[1], st2[1]])
+        ys = (hs_new, cs_new, k_l, v_l) + ((ks_l, vs_l) if quant else ())
+        return h, ys
+
+    xs = (params["super"], pairify(state.h), pairify(state.conv), kv.k, kv.v) \
+        + ((kv.k_scale, kv.v_scale) if quant else ())
+    x, ys = jax.lax.scan(super_step, x, xs, unroll=common.scan_unroll())
+    if quant:
+        hs_new, cs_new, k_new, v_new, ks_new, vs_new = ys
+    else:
+        (hs_new, cs_new, k_new, v_new), (ks_new, vs_new) = ys, (None, None)
+    h_all = hs_new.reshape(2 * n_super, *hs_new.shape[2:])
+    c_all = cs_new.reshape(2 * n_super, *cs_new.shape[2:])
+
+    if "tail" in params:
+        def tail_step(h, xs):
+            lp, hs, cs = xs
+            h, st = _rglru_residual(lp, h, cfg, ctx, False, (hs, cs))
+            return h, (st[0], st[1])
+        x, (th, tc) = jax.lax.scan(
+            tail_step, x,
+            (params["tail"], state.h[2 * n_super:], state.conv[2 * n_super:]),
+            unroll=common.scan_unroll())
+        h_all = jnp.concatenate([h_all, th], axis=0)
+        c_all = jnp.concatenate([c_all, tc], axis=0)
+
+    kv = KVCache(k_new, v_new, ks_new, vs_new, pos + 1, window=kv.window)
+    state = RecurrentState(h=h_all, conv=c_all)
+    x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    logits = common.unembed_logits(params["embed"]["table"], x, ctx)
+    return {"kv": kv, "state": state}, logits

@@ -1,0 +1,181 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter/activation is annotated with *logical* axis names; an
+ExecutionRules table maps logical names → mesh axes. The two execution models
+of the paper differ ONLY by their rules table:
+
+- ``OPERATOR_CENTRIC``: activations are forced fully-materialized (replicated)
+  at every operator boundary — the compiler must insert an all-gather /
+  all-reduce after each sharded op. This is the paper's "operator-centric"
+  baseline (§2.4): synchronize + materialize between operators.
+
+- ``SUB_OPERATOR``: activations stay head-/channel-sharded through the true
+  dependency chain (QKV→RoPE→attention→O-partial) with a single
+  reduce-scatter at each residual merge — the paper's dependency-driven
+  execution (§3.2). Collectives happen only where semantics require them.
+
+The rules engine degrades gracefully: if a logical dim is not divisible by
+its mesh axis size, the annotation drops that axis (replication) — e.g. 4 KV
+heads on a 16-way model axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionRules:
+    """logical axis name → mesh axis name (or None = replicate)."""
+    name: str
+    rules: Dict[str, Optional[Tuple[str, ...]]]
+
+    def mesh_axes(self, logical: Tuple[Optional[str], ...],
+                  mesh: Mesh, shape: Tuple[int, ...]) -> P:
+        """Translate logical names into a PartitionSpec, dropping axes that
+        don't divide the corresponding dim (→ replicated)."""
+        spec = []
+        used = set()
+        for dim, name in zip(shape, logical):
+            entry = self.rules.get(name) if name else None
+            if entry is None:
+                spec.append(None)
+                continue
+            axes = tuple(a for a in entry
+                         if a not in used and a in mesh.shape)
+            total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+            if axes and total > 0 and dim % total == 0:
+                spec.append(axes if len(axes) > 1 else axes[0])
+                used.update(axes)
+            else:
+                spec.append(None)
+        return P(*spec)
+
+
+# --- the canonical logical axis vocabulary ---------------------------------
+# batch       : request batch
+# seq         : sequence positions (activations)
+# kv_seq      : KV-cache sequence positions
+# embed       : d_model channels
+# embed_shard : d_model channels in the scattered (post reduce-scatter) state
+# heads       : query heads
+# kv_heads    : KV heads
+# head_dim    : per-head channels
+# mlp         : FFN hidden channels
+# vocab       : vocabulary
+# experts     : MoE experts
+# layers      : stacked layer dim (scan)
+# stages      : pipeline stage dim (PP over pods)
+# lru         : RG-LRU width channels
+# ssm_heads   : mamba2 heads
+# state       : ssm state channels
+# conv        : conv taps
+# frames      : encoder frames (audio/vision stub)
+
+def _common(pod_data: Tuple[str, ...]) -> Dict[str, Optional[Tuple[str, ...]]]:
+    return {
+        "batch": pod_data,
+        "seq": None,
+        "kv_seq": None,
+        "embed": None,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": None,
+        "mlp": ("model",),
+        "mlp_shard": ("data",),   # expert-FFN cols: EP(model) × data — a 235B
+                                  # MoE must not replicate experts across rows
+        "embed_w": None,          # weight-matrix embed dim; → ("data",) under
+                                  # FSDP (training) so params+opt fully shard
+        "vocab": ("model",),
+        "experts": ("model",),
+        "layers": None,
+        "stages": ("pod",),
+        "lru": ("model",),
+        "ssm_heads": ("model",),
+        "state": None,
+        "conv": None,
+        "frames": None,
+    }
+
+
+def operator_centric(pod_is_dp: bool = True) -> ExecutionRules:
+    """Operator-boundary materialization: activations replicate on the model
+    axis between ops (embed → None) — all partial results are synchronized
+    and materialized (the §2.4 baseline)."""
+    rules = _common(("pod", "data") if pod_is_dp else ("data",))
+    rules["embed_shard"] = None          # residual stream fully materialized
+    rules["act_heads"] = None            # per-head activations gathered
+    return ExecutionRules("operator_centric", rules)
+
+
+def sub_operator(pod_is_dp: bool = True) -> ExecutionRules:
+    """Dependency-driven: per-head activations stay on the owning shard,
+    residual stream lives reduce-scattered over the model axis between
+    blocks (one bounded-fan-in ring reduction per true dependency)."""
+    rules = _common(("pod", "data") if pod_is_dp else ("data",))
+    rules["embed_shard"] = ("model",)    # residual stream scattered (SP-style)
+    rules["act_heads"] = ("model",)      # per-head activations stay local
+    return ExecutionRules("sub_operator", rules)
+
+
+def fsdp(base: ExecutionRules) -> ExecutionRules:
+    """Training variant: weight matrices fully sharded (ZeRO-3/FSDP) — the
+    non-TP weight dim and embedding rows spread over the data axis; GSPMD
+    inserts the per-layer all-gather / grad reduce-scatter. Required to fit
+    params + f32 AdamW moments for the ≥70B archs (76B: 0.76 TB params+opt
+    per data row if replicated — does not fit 16 GB chips)."""
+    rules = dict(base.rules)
+    rules["embed_w"] = ("data",)
+    return ExecutionRules(base.name + "+fsdp", rules)
+
+
+def seq_sharded_kv(base: ExecutionRules) -> ExecutionRules:
+    """Beyond-paper variant of §3.1's "attach more attention nodes" axis:
+    the KV *sequence* is sharded over the model axis (distributed flash
+    decode; softmax max/sum reductions become the LSE-merge collectives).
+
+    Removes the KV-head/attention replication that head-sharding forces on
+    archs whose n_kv_heads (or n_heads) don't divide the TP width — e.g.
+    qwen2's 2 KV heads or phi3-medium's 40 q heads on a 16-way axis. Batch
+    stays on data; KV context splits 16-way on model."""
+    rules = dict(base.rules)
+    rules["kv_seq"] = ("model",)
+    rules["kv_heads"] = None
+    rules["act_heads"] = None          # q gathers (tiny at decode: B×D)
+    return ExecutionRules(base.name + "+seqkv", rules)
+
+
+# ---------------------------------------------------------------------------
+# Annotation helpers
+# ---------------------------------------------------------------------------
+class ShardingCtx:
+    """Carries (mesh, rules) through model code; ``ann`` constrains an
+    intermediate activation, ``spec`` builds parameter PartitionSpecs."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: ExecutionRules):
+        self.mesh = mesh
+        self.rules = rules
+
+    def spec(self, logical: Tuple[Optional[str], ...], shape: Tuple[int, ...]) -> P:
+        if self.mesh is None:
+            return P()
+        return self.rules.mesh_axes(logical, self.mesh, shape)
+
+    def sharding(self, logical, shape) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+    def ann(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        """with_sharding_constraint under the rules; no-op without a mesh."""
+        if self.mesh is None or self.mesh.empty:
+            return x
+        spec = self.spec(tuple(logical), x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+NULL_CTX = ShardingCtx(None, operator_centric())

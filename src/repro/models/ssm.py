@@ -1,0 +1,283 @@
+"""Mamba-2 (SSD — state-space duality) blocks.
+
+Attention-free: decode state is O(1) in context, so the paper's KV-pressure
+paradox does not bind (DESIGN.md §6) and WA separation is inapplicable; the
+sub-operator principle still applies (heads are independent → sharded over the
+``model`` axis with no operator-boundary materialization).
+
+Train/prefill uses the chunked SSD algorithm (intra-chunk quadratic +
+inter-chunk state scan); decode is the exact single-step recurrence:
+
+    H_t = a_t · H_{t-1} + dt_t · (x_t ⊗ B_t),   y_t = H_t C_t + D ⊙ x_t
+    a_t = exp(−exp(A_log) · dt_t),  dt_t = softplus(dt_raw + dt_bias)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kv.state import (RecurrentState, causal_conv, conv_step,
+                            init_ssd_state, read_state, write_state)
+from repro.models import common
+from repro.models.sharding import ShardingCtx
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    return d_in, nh, s.head_dim, s.d_state, s.n_groups, s.conv_width
+
+
+def make_ssd_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_in, nh, hd, N, G, W = dims(cfg)
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "z_proj": common.make_linear(ks[0], d, d_in, dt),
+        "x_proj": common.make_linear(ks[1], d, d_in, dt),
+        "bc_proj": common.make_linear(ks[2], d, 2 * G * N, dt),
+        "dt_proj": common.make_linear(ks[3], d, nh, dt),
+        "dt_bias": jnp.full((nh,), -3.0, jnp.float32),   # softplus ≈ 0.05
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "conv_x": common.dense_init(ks[4], (W, d_in), dt, fan_in=W),
+        "conv_bc": common.dense_init(ks[5], (W, 2 * G * N), dt, fan_in=W),
+        "norm": common.make_norm("rmsnorm", d_in, dt),
+        "out_proj": common.make_linear(ks[6], d_in, d, dt),
+    }
+
+
+def _project(p, x, cfg, ctx: ShardingCtx):
+    """Shared projections. x: (B,S,D) → z,xs (B,S,nh,hd), B,C (B,S,G,N),
+    dt (B,S,nh) — pre-conv, pre-activation."""
+    d_in, nh, hd, N, G, W = dims(cfg)
+    B, S, _ = x.shape
+    z = common.linear(p["z_proj"], x)
+    xs = common.linear(p["x_proj"], x)
+    bc = common.linear(p["bc_proj"], x)
+    dt_raw = common.linear(p["dt_proj"], x).astype(jnp.float32)
+    return z, xs, bc, dt_raw
+
+
+def ssd_full_seq(p: Dict, x: jax.Array, cfg: ModelConfig,
+                 ctx: ShardingCtx) -> jax.Array:
+    """Chunked SSD over a full sequence. x: (B,S,D) → (B,S,D)."""
+    d_in, nh, hd, N, G, W = dims(cfg)
+    B, S0, _ = x.shape
+    Q = min(cfg.ssm.chunk, S0)
+    S = -(-S0 // Q) * Q                                    # pad to chunk multiple
+    nc = S // Q
+
+    z, xs, bc, dt_raw = _project(p, x, cfg, ctx)
+    if S != S0:
+        pad = ((0, 0), (0, S - S0), (0, 0))
+        xs, bc = jnp.pad(xs, pad), jnp.pad(bc, pad)
+        # padded steps: dt→0 ⇒ a=1, zero state contribution (exact no-op)
+        dt_raw = jnp.pad(dt_raw, pad, constant_values=-1e4)
+    xs = causal_conv(xs, p["conv_x"])
+    xs = jax.nn.silu(xs.astype(jnp.float32))
+    bc = jax.nn.silu(causal_conv(bc, p["conv_bc"]).astype(jnp.float32))
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                     # (B,S,G*N)
+    Bm = Bm.reshape(B, nc, Q, G, N)
+    Cm = Cm.reshape(B, nc, Q, G, N)
+    xh = ctx.ann(xs.reshape(B, S, nh, hd), "batch", "seq", "ssm_heads", "head_dim")
+    xh = xh.reshape(B, nc, Q, nh, hd)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])            # (B,S,nh) f32
+    A = -jnp.exp(p["A_log"])                               # (nh,)
+    loga = (dt * A).reshape(B, nc, Q, nh)                  # log decay per step
+    L = jnp.cumsum(loga, axis=2)                           # (B,nc,Q,nh)
+
+    # --- intra-chunk (quadratic within chunk) --------------------------
+    # M[t,s] = C_t·B_s · exp(L_t − L_s) · dt_s   (s ≤ t)
+    CB = jnp.einsum("bcqgn,bcsgn->bcgqs", Cm, Bm)          # (B,nc,G,Q,Q)
+    # broadcast groups→heads (G==1 typical)
+    CBh = jnp.repeat(CB, nh // G, axis=2)                  # (B,nc,nh,Q,Q)
+    Lt = L.transpose(0, 1, 3, 2)                           # (B,nc,nh,Q)
+    decay = jnp.exp(Lt[:, :, :, :, None] - Lt[:, :, :, None, :])  # (B,nc,nh,Q,Q)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, None], CBh * decay, 0.0)
+    M = M * dt.reshape(B, nc, Q, nh).transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", M, xh.astype(jnp.float32))
+
+    # --- chunk boundary states -----------------------------------------
+    # H_c = Σ_s exp(L_end − L_s) · dt_s · (x_s ⊗ B_s)
+    dec_end = jnp.exp(L[:, :, -1:, :] - L)                 # (B,nc,Q,nh)
+    w = (dec_end * dt.reshape(B, nc, Q, nh))               # (B,nc,Q,nh)
+    Bh = jnp.repeat(Bm, nh // G, axis=3)                   # (B,nc,Q,nh,N)
+    H_part = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn",
+                        w, xh.astype(jnp.float32), Bh)     # (B,nc,nh,hd,N)
+
+    # --- inter-chunk scan ------------------------------------------------
+    A_chunk = jnp.exp(L[:, :, -1, :])                      # (B,nc,nh)
+
+    def chunk_body(H, inputs):
+        a_c, h_part = inputs                               # (B,nh), (B,nh,hd,N)
+        H_new = H * a_c[..., None, None] + h_part
+        return H_new, H                                    # emit state BEFORE chunk
+
+    H0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    _, H_prev = jax.lax.scan(chunk_body, H0,
+                             (A_chunk.swapaxes(0, 1), H_part.swapaxes(0, 1)), unroll=common.scan_unroll())
+    H_prev = H_prev.swapaxes(0, 1)                         # (B,nc,nh,hd,N)
+
+    # y_inter[t] = C_t · exp(L_t) · H_prev(chunk)
+    Ch = jnp.repeat(Cm, nh // G, axis=3)                   # (B,nc,Q,nh,N)
+    y_inter = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                         jnp.exp(L), Ch, H_prev)
+
+    y = (y_intra + y_inter
+         + p["D_skip"][None, None, None, :, None] * xh.astype(jnp.float32))
+    y = y.reshape(B, S, d_in)[:, :S0]
+    y = common.apply_norm("rmsnorm", p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = ctx.ann(y, "batch", "seq", "mlp")
+    return common.linear(p["out_proj"], y)
+
+
+def ssd_final_state(p: Dict, x: jax.Array, cfg: ModelConfig,
+                    ctx: ShardingCtx) -> Tuple[jax.Array, jax.Array]:
+    """State after consuming x (for prefill → decode handoff).
+    Returns (H (B,nh,hd,N), conv window (B,W-1,channels))."""
+    d_in, nh, hd, N, G, W = dims(cfg)
+    B, S, _ = x.shape
+    z, xs, bc, dt_raw = _project(p, x, cfg, ctx)
+    conv_tail = jnp.concatenate([xs, bc], axis=-1)[:, -(W - 1):, :].astype(jnp.float32)
+    xs = jax.nn.silu(causal_conv(xs, p["conv_x"]).astype(jnp.float32))
+    bc = jax.nn.silu(causal_conv(bc, p["conv_bc"]).astype(jnp.float32))
+    Bm = bc[..., :G * N].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    loga = dt * A                                          # (B,S,nh)
+    Lrev = jnp.cumsum(loga[:, ::-1], axis=1)[:, ::-1]      # Σ_{u≥s} loga_u
+    dec = jnp.exp(Lrev - loga)                             # exp(Σ_{u>s})
+    xh = xs.reshape(B, S, nh, hd)
+    Bh = jnp.repeat(Bm, nh // G, axis=2)                   # (B,S,nh,N)
+    H = jnp.einsum("bsh,bshp,bshn->bhpn", dec * dt, xh, Bh)
+    return H, conv_tail
+
+
+def ssd_decode(p: Dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+               H: jax.Array, conv: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token step over one layer's state slices.
+    x: (B,1,D); H: (B,nh,hd,N); conv: (B,W-1,Ch) → (y, H', conv')."""
+    d_in, nh, hd, N, G, W = dims(cfg)
+    B = x.shape[0]
+    z, xs, bc, dt_raw = _project(p, x, cfg, ctx)
+    xbc_new = jnp.concatenate([xs[:, 0], bc[:, 0]], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    y_conv, conv_new = conv_step(conv, xbc_new, conv_w)
+    xs1 = jax.nn.silu(y_conv[:, :d_in].astype(jnp.float32))
+    bc1 = jax.nn.silu(y_conv[:, d_in:].astype(jnp.float32))
+    Bm = bc1[:, :G * N].reshape(B, G, N)
+    Cm = bc1[:, G * N:].reshape(B, G, N)
+    dt = jax.nn.softplus(dt_raw[:, 0] + p["dt_bias"])      # (B,nh)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                 # (B,nh)
+    xh = xs1.reshape(B, nh, hd)
+    Bh = jnp.repeat(Bm, nh // G, axis=1)                   # (B,nh,N)
+    Ch = jnp.repeat(Cm, nh // G, axis=1)
+    H = (H * a[..., None, None]
+         + jnp.einsum("bh,bhp,bhn->bhpn", dt, xh, Bh))
+    y = jnp.einsum("bhpn,bhn->bhp", H, Ch) + p["D_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = common.apply_norm("rmsnorm", p["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = common.linear(p["out_proj"], y)
+    return out, H, conv_new.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model (mamba2 stacks SSD blocks + final norm; no separate FFN)
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    dt = common.dtype_of(cfg)
+
+    def blk(k):
+        kk = jax.random.split(k, 2)
+        return {"ln": common.make_norm(cfg.norm, cfg.d_model, dt),
+                "ssd": make_ssd_params(kk[0], cfg)}
+
+    return {
+        "embed": common.make_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "blocks": common.stacked_init(ks[1], cfg.n_layers, blk),
+        "ln_f": common.make_norm(cfg.norm, cfg.d_model, dt),
+    }
+
+
+def forward_hidden(params, tokens, cfg, ctx, train: bool):
+    x = common.embed(params["embed"], tokens, ctx)
+
+    def blk(lp, h):
+        y = common.apply_norm(cfg.norm, lp["ln"], h, cfg.norm_eps)
+        y = ctx.ann(y, "batch", "seq", "embed")
+        return ctx.ann(h + ssd_full_seq(lp["ssd"], y, cfg, ctx),
+                       "batch", "seq", "embed_shard")
+
+    if train:
+        blk = jax.checkpoint(blk, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(h, lp):
+        return blk(lp, h), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=common.scan_unroll())
+    return common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg, ctx) -> jax.Array:
+    x = forward_hidden(params, batch["tokens"], cfg, ctx, train=True)
+    return common.chunked_ce_loss(params["embed"]["table"], x, batch["labels"],
+                                  ctx, chunk=common.ce_chunk(x.shape[1]))
+
+
+def prefill(params, tokens, cfg, ctx):
+    """Returns (state, last logits)."""
+    d_in, nh, hd, N, G, W = dims(cfg)
+    B, S = tokens.shape
+    x = common.embed(params["embed"], tokens, ctx)
+    hs, convs, h = [], [], x
+
+    def body(carry, lp):
+        h = carry
+        y = common.apply_norm(cfg.norm, lp["ln"], h, cfg.norm_eps)
+        H, conv = ssd_final_state(lp["ssd"], y, cfg, ctx)
+        h = h + ssd_full_seq(lp["ssd"], y, cfg, ctx)
+        return h, (H, conv)
+
+    h, (Hs, cs) = jax.lax.scan(body, x, params["blocks"], unroll=common.scan_unroll())
+    state = RecurrentState(h=Hs, conv=cs)
+    hfin = common.apply_norm(cfg.norm, params["ln_f"], h, cfg.norm_eps)
+    logits = common.unembed_logits(params["embed"]["table"], hfin[:, -1:], ctx)
+    return state, logits
+
+
+def decode_step(params, state: RecurrentState, tokens, cfg, ctx):
+    x = common.embed(params["embed"], tokens[:, None], ctx)
+
+    def body(h, xs):
+        lp, H, conv = xs
+        y = common.apply_norm(cfg.norm, lp["ln"], h, cfg.norm_eps)
+        y = ctx.ann(y, "batch", "seq", "embed")
+        o, H, conv = ssd_decode(lp["ssd"], y, cfg, ctx, H, conv)
+        return h + o, (H, conv)
+
+    x, (Hs, convs) = jax.lax.scan(
+        body, x, (params["blocks"], state.h, state.conv),
+        unroll=common.scan_unroll())
+    state = RecurrentState(h=Hs, conv=convs)
+    x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    logits = common.unembed_logits(params["embed"]["table"], x, ctx)
+    return state, logits
+
+
+def make_state(cfg: ModelConfig, batch: int) -> RecurrentState:
+    d_in, nh, hd, N, G, W = dims(cfg)
+    return init_ssd_state(cfg.n_layers, batch, nh, hd, N, W,
+                          conv_channels=d_in + 2 * G * N)

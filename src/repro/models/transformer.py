@@ -1,0 +1,324 @@
+"""Decoder-only transformer (dense + MoE + VLM backbone).
+
+One code path serves train_step (full-seq + chunked CE), prefill (full-seq,
+cache write) and decode (single-token, cache read/append). Layers execute via
+``lax.scan`` over stacked params (HLO size O(1) in depth — required to compile
+94-layer configs on the CPU dry-run host) with ``jax.checkpoint`` remat.
+
+The paper's execution-model choice enters ONLY through the ShardingCtx rules
+(operator-centric vs sub-operator; see models/sharding.py) — the math is
+identical, the collective schedule is not.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kv.cache import (KVCache, append_kv, bump_length, init_kv_cache,
+                            read_kv, valid_mask)
+from repro.models import common
+from repro.models.attention import (decode_attention, flash_attention,
+                                    make_attn_params, qkv_project)
+from repro.models.sharding import ShardingCtx
+from repro.quant.int8 import quantize_kv
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense gated / plain MLP); MoE plugs in via models.moe
+# ---------------------------------------------------------------------------
+
+def make_ffn_params(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu_mlp":
+        return {"w_in": common.make_linear(ks[0], d, f, dt, bias=True,
+                                           int8=cfg.weight_int8),
+                "w_out": common.make_linear(ks[1], f, d, dt, bias=True,
+                                            int8=cfg.weight_int8)}
+    return {"w_gate": common.make_linear(ks[0], d, f, dt, int8=cfg.weight_int8),
+            "w_up": common.make_linear(ks[1], d, f, dt, int8=cfg.weight_int8),
+            "w_down": common.make_linear(ks[2], f, d, dt, int8=cfg.weight_int8)}
+
+
+def ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx) -> jax.Array:
+    """Gated FFN. Per the paper (§4.2/Fig 6b): weights are streamed ONCE —
+    both GEMVs read the same gathered activation and partial down-proj results
+    merge in a single bounded-fan-in reduction (the trailing annotation)."""
+    if cfg.act == "gelu_mlp":
+        h = common.linear(p["w_in"], x)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        h = ctx.ann(h, "batch", "seq", "mlp")
+        return common.linear(p["w_out"], h)
+    up = common.linear(p["w_up"], x)
+    gate = common.linear(p["w_gate"], x)
+    h = ctx.ann(common.gated_act(cfg.act, up, gate), "batch", "seq", "mlp")
+    return common.linear(p["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block
+# ---------------------------------------------------------------------------
+
+def make_block_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = common.dtype_of(cfg)
+    p = {
+        "ln1": common.make_norm(cfg.norm, cfg.d_model, dt),
+        "attn": make_attn_params(ks[0], cfg),
+        "ln2": common.make_norm(cfg.norm, cfg.d_model, dt),
+    }
+    if cfg.moe is not None:
+        from repro.models.moe import make_moe_params
+        p["moe"] = make_moe_params(ks[1], cfg)
+    else:
+        p["ffn"] = make_ffn_params(ks[1], cfg)
+    return p
+
+
+def _mix_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+             train: bool) -> Tuple[jax.Array, jax.Array]:
+    """FFN half of the block; returns (out, aux_loss)."""
+    if cfg.moe is not None:
+        from repro.models.moe import moe_ffn
+        return moe_ffn(p["moe"], x, cfg, ctx, train=train)
+    return ffn_apply(p["ffn"], x, cfg, ctx), jnp.zeros((), jnp.float32)
+
+
+def block_full_seq(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+                   positions: jax.Array, causal: bool = True,
+                   window: int = 0, train: bool = True,
+                   q_chunk: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence block (train/prefill path). x: (B,S,D)."""
+    from repro.models.attention import q_chunk_for
+    qc = q_chunk or q_chunk_for(x.shape[1])
+    h = common.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
+    h = ctx.ann(h, "batch", "seq", "embed")
+    q, k, v = qkv_project(p["attn"], h, cfg, ctx, positions)
+    o = flash_attention(q, k, v, causal, window,
+                        min(qc, x.shape[1]), min(qc, x.shape[1]))
+    o = ctx.ann(o, "batch", "seq", "act_heads", "head_dim")
+    o = common.linear(p["attn"]["wo"], o.reshape(x.shape[0], x.shape[1], -1))
+    x = ctx.ann(x + o, "batch", "seq", "embed_shard")
+    h = common.apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
+    h = ctx.ann(h, "batch", "seq", "embed")
+    f, aux = _mix_ffn(p, h, cfg, ctx, train)
+    x = ctx.ann(x + f, "batch", "seq", "embed_shard")
+    return x, (q, k, v, aux)
+
+
+def block_decode(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+                 kv_slices: Tuple, pos: jax.Array,
+                 window: int = 0) -> Tuple[jax.Array, Tuple]:
+    """Single-token block over ONE layer's cache slices.
+    x: (B,1,D); kv_slices = (k_l, v_l, k_scale_l, v_scale_l) with k_l
+    (B,n_kv,S,hd). Returns (x', updated slices)."""
+    from repro.kv.cache import layer_append, layer_read, slot_valid_mask
+    B = x.shape[0]
+    k_l, v_l, ks_l, vs_l = kv_slices
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    h = common.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
+    h = ctx.ann(h, "batch", "seq", "embed")
+    q, k, v = qkv_project(p["attn"], h, cfg, ctx, positions)
+    k_l, v_l, ks_l, vs_l = layer_append(k_l, v_l, ks_l, vs_l,
+                                        k[:, 0], v[:, 0], pos, window)
+    kc, vc = layer_read(k_l, v_l, ks_l, vs_l, dtype=x.dtype)
+    kc = ctx.ann(kc, "batch", "kv_heads", "kv_seq", "head_dim")
+    vc = ctx.ann(vc, "batch", "kv_heads", "kv_seq", "head_dim")
+    mask = slot_valid_mask(k_l.shape[2], window, pos)
+    o = decode_attention(q[:, 0], kc, vc, mask, ctx)
+    o = common.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
+    x = ctx.ann(x + o, "batch", "seq", "embed_shard")
+    h = common.apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
+    h = ctx.ann(h, "batch", "seq", "embed")
+    f, _ = _mix_ffn(p, h, cfg, ctx, train=False)
+    x = ctx.ann(x + f, "batch", "seq", "embed_shard")
+    return x, (k_l, v_l, ks_l, vs_l)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    dt = common.dtype_of(cfg)
+    params: Dict[str, Any] = {
+        "embed": common.make_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "blocks": common.stacked_init(
+            ks[1], cfg.n_layers, lambda k: make_block_params(k, cfg)),
+        "ln_f": common.make_norm(cfg.norm, cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = common.make_embedding(ks[2], cfg.vocab_size,
+                                                  cfg.d_model, dt)
+    if cfg.pos == "learned":
+        # sized for the largest decode cell (+slack for appended tokens)
+        params["pos_embed"] = common.dense_init(
+            ks[3], (32768 + 256, cfg.d_model), dt, fan_in=1)
+    return params
+
+
+def unembed_table(params, cfg: ModelConfig) -> jax.Array:
+    return (params["embed"] if cfg.tie_embeddings else params["unembed"])["table"]
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward_hidden(params, tokens: jax.Array, cfg: ModelConfig,
+                   ctx: ShardingCtx, train: bool,
+                   vision_embeds: Optional[jax.Array] = None,
+                   collect_kv: bool = False):
+    """tokens: (B,S_text). Returns (hidden (B,S,D), aux_loss[, kv list])."""
+    x = common.embed(params["embed"], tokens, ctx)
+    if vision_embeds is not None:                     # VLM stub frontend
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        x = ctx.ann(x, "batch", "seq", "embed")
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"][:S][None].astype(x.dtype)
+    elif cfg.pos == "sinusoidal":
+        x = x + common.sinusoidal_pos(S, cfg.d_model)[None].astype(x.dtype)
+
+    def _blk(lp, h):
+        y, extras = block_full_seq(lp, h, cfg, ctx, positions, causal=True,
+                                   train=train)
+        q, k, v, a = extras
+        return y, (k, v, None, a)
+
+    if train:
+        _blk_r = jax.checkpoint(_blk,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+    else:
+        _blk_r = _blk
+
+    def scan_body(carry, lp):
+        h, aux = carry
+        y, (k_, v_, _, a) = _blk_r(lp, h)
+        out = (k_, v_) if collect_kv else None
+        return (y, aux + a), out
+
+    (x, aux), kvs = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                                 params["blocks"], unroll=common.scan_unroll())
+    x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    x = ctx.ann(x, "batch", "seq", "embed")
+    if collect_kv:
+        return x, aux, kvs
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            ctx: ShardingCtx) -> jax.Array:
+    tokens, labels = batch["tokens"], batch["labels"]
+    vis = batch.get("vision_embeds")
+    x, aux = forward_hidden(params, tokens, cfg, ctx, train=True,
+                            vision_embeds=vis)
+    if vis is not None:
+        x = x[:, vis.shape[1]:]                      # loss over text positions
+    table = unembed_table(params, cfg)
+    ce = common.chunked_ce_loss(table, x, labels, ctx,
+                                chunk=common.ce_chunk(x.shape[1]))
+    return ce + 0.01 * aux
+
+
+def prefill(params, tokens: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+            cache: KVCache, vision_embeds: Optional[jax.Array] = None
+            ) -> Tuple[KVCache, jax.Array]:
+    """Encode context, fill the cache, return last-position logits."""
+    x, _, kvs = forward_hidden(params, tokens, cfg, ctx, train=False,
+                               vision_embeds=vision_embeds, collect_kv=True)
+    k_all, v_all = kvs                                # (L,B,S,n_kv,hd)
+    k_all = jnp.swapaxes(k_all, 2, 3)                 # (L,B,n_kv,S,hd)
+    v_all = jnp.swapaxes(v_all, 2, 3)
+    S = k_all.shape[3]
+    cache = write_prefill(cache, k_all, v_all, S)
+    table = unembed_table(params, cfg)
+    logits = common.unembed_logits(table, x[:, -1:, :], ctx)
+    return cache, logits
+
+
+def write_prefill(cache: KVCache, k_all, v_all, S: int) -> KVCache:
+    """Bulk-write a prefilled context into the cache (window-aware)."""
+    size = cache.k.shape[3]
+    if cache.window and S > size:
+        k_all = k_all[:, :, :, S - size:, :]
+        v_all = v_all[:, :, :, S - size:, :]
+        write = size
+        # ring alignment: slot of position p is p % size; after S tokens the
+        # oldest kept position is S-size ≡ (S-size) % size. Roll so that
+        # slot order matches position % size.
+        shift = (S - size) % size
+        k_all = jnp.roll(k_all, shift, axis=3)
+        v_all = jnp.roll(v_all, shift, axis=3)
+    else:
+        write = S
+    if cache.is_quantized:
+        kq, ks = quantize_kv(k_all)
+        vq, vs = quantize_kv(v_all)
+        k = jax.lax.dynamic_update_slice(cache.k, kq, (0, 0, 0, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, vq, (0, 0, 0, 0, 0))
+        k_s = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, 0, 0, 0, 0))
+        v_s = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, 0, 0, 0, 0))
+        return cache._replace(k=k, v=v, k_scale=k_s, v_scale=v_s,
+                              length=jnp.asarray(S, jnp.int32))
+    k = jax.lax.dynamic_update_slice(cache.k, k_all.astype(cache.k.dtype),
+                                     (0, 0, 0, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_all.astype(cache.v.dtype),
+                                     (0, 0, 0, 0, 0))
+    return cache._replace(k=k, v=v, length=jnp.asarray(S, jnp.int32))
+
+
+def decode_step(params, cache: KVCache, tokens: jax.Array, cfg: ModelConfig,
+                ctx: ShardingCtx) -> Tuple[KVCache, jax.Array]:
+    """tokens: (B,) last emitted token ids → (cache', logits (B,1,V)).
+
+    The layer scan consumes per-layer cache slices as xs and emits updated
+    slices as ys — each layer touches only its own (B,n_kv,S,hd) slice."""
+    x = common.embed(params["embed"], tokens[:, None], ctx)
+    pos = cache.length
+    if cfg.pos == "learned":
+        x = x + jax.lax.dynamic_index_in_dim(
+            params["pos_embed"], pos, 0, keepdims=True)[None].astype(x.dtype)
+    quant = cache.is_quantized
+
+    def body(h, xs):
+        if quant:
+            lp, k_l, v_l, ks_l, vs_l = xs
+        else:
+            lp, k_l, v_l = xs
+            ks_l = vs_l = None
+        h, (k_l, v_l, ks_l, vs_l) = block_decode(
+            lp, h, cfg, ctx, (k_l, v_l, ks_l, vs_l), pos, window=cache.window)
+        ys = (k_l, v_l, ks_l, vs_l) if quant else (k_l, v_l)
+        return h, ys
+
+    xs = (params["blocks"], cache.k, cache.v) + \
+        ((cache.k_scale, cache.v_scale) if quant else ())
+    x, ys = jax.lax.scan(body, x, xs, unroll=common.scan_unroll())
+    if quant:
+        k_new, v_new, ks_new, vs_new = ys
+    else:
+        (k_new, v_new), (ks_new, vs_new) = ys, (None, None)
+    cache = KVCache(k_new, v_new, ks_new, vs_new, pos + 1,
+                    window=cache.window)
+    x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    logits = common.unembed_logits(unembed_table(params, cfg), x, ctx)
+    return cache, logits
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               window: int = 0) -> KVCache:
+    return init_kv_cache(cfg.n_layers, batch, cfg.n_kv_heads, max_len,
+                         cfg.head_dim, dtype=common.dtype_of(cfg),
+                         quantized=(cfg.kv_dtype == "int8"), window=window)

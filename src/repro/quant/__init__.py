@@ -1,0 +1,4 @@
+from repro.quant.int8 import (  # noqa: F401
+    QuantizedTensor, dequantize, quantize_int8, int8_matmul,
+    quantize_kv, dequantize_kv,
+)

@@ -1,0 +1,86 @@
+"""INT8 quantization (paper §5: fully INT8 weights *and* KV cache).
+
+Symmetric per-channel quantization. On TPU the int8×int8→int32 MXU path gives
+2× peak (394 TOP/s on v5e) and halves HBM/ICI bytes — both roofline terms move.
+
+``QuantizedTensor`` is a pytree so it flows through jit/shard_map/scan and can
+be sharded like any other parameter.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedTensor(NamedTuple):
+    """int8 values + f32 scale broadcastable against ``values``."""
+    values: jax.Array      # int8
+    scale: jax.Array       # float32, shape = values.shape with quantized axes size-1
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+def quantize_int8(x: jax.Array, axis=None) -> QuantizedTensor:
+    """Symmetric int8 quantization; ``axis`` = reduction axes for the scale
+    (i.e. one scale per remaining channel). axis=None → per-tensor."""
+    if axis is None:
+        axis = tuple(range(x.ndim))
+    elif isinstance(axis, int):
+        axis = (axis,)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(q, scale)
+
+
+def dequantize(q: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.values.astype(jnp.float32) * q.scale).astype(dtype)
+
+
+def int8_matmul(x: jax.Array, w: QuantizedTensor,
+                out_dtype=jnp.bfloat16) -> jax.Array:
+    """x @ w for int8 weights: activation quantized per-row on the fly
+    (SmoothQuant-style W8A8), accumulation in int32 — the VNNI analogue the
+    paper uses; on TPU this hits the int8 MXU path.
+
+    x: (..., K) float; w.values: (K, N) int8 with per-output-channel scale (1, N).
+    """
+    xq = quantize_int8(x, axis=-1)                       # per-row scale (..., 1)
+    acc = jax.lax.dot_general(
+        xq.values, w.values,
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * xq.scale * w.scale.reshape(1, -1)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization: one scale per (batch, position, kv_head) row so late
+# tokens don't inherit early tokens' dynamic range.
+# ---------------------------------------------------------------------------
+
+def quantize_kv(kv: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """kv: (..., head_dim) → (int8 values, f32 scales broadcastable)."""
+    amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(values: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (values.astype(jnp.float32) * scale).astype(dtype)
+
+
+def maybe_quantize_weight(w: jax.Array, enabled: bool,
+                          axis: Optional[int] = 0):
+    """Config-driven weight quantization at init/checkpoint-load time."""
+    if not enabled:
+        return w
+    return quantize_int8(w, axis=axis)

@@ -1,0 +1,3 @@
+from repro.runtime.static_runtime import StaticRuntime, CompiledStep  # noqa: F401
+from repro.runtime.serving import ServingEngine, Request  # noqa: F401
+from repro.runtime.elastic import ElasticController, NodeFailure  # noqa: F401

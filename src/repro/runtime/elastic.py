@@ -1,0 +1,109 @@
+"""Elastic scaling / fault tolerance / straggler mitigation.
+
+At 1000+ nodes, single-chip MTBF makes failures routine. The controller
+implements the standard recovery loop for TPU-style SPMD jobs:
+
+  detect (health probe / timeout) → exclude failed domain → re-mesh to the
+  largest valid (data′, model) grid → re-compile from the AOT cache →
+  restore latest checkpoint (re-sharded on load) → resume (deterministic
+  data pipeline replays from the restored step).
+
+The data axis shrinks (DP is elastic); the model axis is preserved because
+TP-sharded weights assume that divisor (same policy as production serving
+stacks). Straggler mitigation is a step-deadline policy: per-step durations
+feed an EWMA; a step exceeding ``k×`` the EWMA marks the slow domain
+suspect — after ``patience`` consecutive marks the domain is treated as
+failed and excluded (grey-failure handling, i.e. stragglers ARE failures in
+steady-state decode, where the pipeline rate is the slowest stage — the
+paper's T = 1/l).
+
+On this CPU host, failures are injected (``inject_failure``) and the device
+set is simulated; the control flow (re-mesh, restore, resume) is the real
+code path and is unit-tested.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class NodeFailure(RuntimeError):
+    def __init__(self, domain: int, reason: str = "health-probe"):
+        super().__init__(f"domain {domain} failed ({reason})")
+        self.domain = domain
+        self.reason = reason
+
+
+@dataclass
+class ElasticController:
+    n_data: int                       # current data-axis size
+    n_model: int                      # fixed model-axis size
+    n_pod: int = 1
+    ewma_alpha: float = 0.2
+    straggler_factor: float = 3.0
+    patience: int = 3
+    min_data: int = 1
+    failed_domains: List[int] = field(default_factory=list)
+    _ewma: Optional[float] = None
+    _suspect: Dict[int, int] = field(default_factory=dict)
+    events: List[str] = field(default_factory=list)
+
+    # ------------------------------------------------------------------
+    @property
+    def healthy_data(self) -> int:
+        return self.n_data - len(self.failed_domains)
+
+    def mesh_shape(self) -> Tuple[int, ...]:
+        """Largest valid mesh after failures: data axis rounded down to a
+        power-of-two-friendly divisor of the batch."""
+        d = self.healthy_data
+        # keep data a divisor of the original (batch divisibility)
+        while d > self.min_data and self.n_data % d != 0:
+            d -= 1
+        d = max(d, self.min_data)
+        if self.n_pod > 1:
+            return (self.n_pod, d, self.n_model)
+        return (d, self.n_model)
+
+    # ------------------------------------------------------------------
+    def inject_failure(self, domain: int, reason: str = "injected"):
+        if domain not in self.failed_domains:
+            self.failed_domains.append(domain)
+            self.events.append(f"FAIL domain={domain} reason={reason}")
+
+    def observe_step(self, duration_s: float,
+                     slow_domain: Optional[int] = None) -> Optional[int]:
+        """Feed one step duration; returns a domain to evict, or None."""
+        if self._ewma is None:
+            self._ewma = duration_s
+            return None
+        if duration_s > self.straggler_factor * self._ewma \
+                and slow_domain is not None:
+            self._suspect[slow_domain] = self._suspect.get(slow_domain, 0) + 1
+            self.events.append(
+                f"STRAGGLER domain={slow_domain} x{duration_s / self._ewma:.1f} "
+                f"strike={self._suspect[slow_domain]}")
+            if self._suspect[slow_domain] >= self.patience:
+                self.inject_failure(slow_domain, "straggler")
+                del self._suspect[slow_domain]
+                return slow_domain
+        else:
+            self._ewma = (1 - self.ewma_alpha) * self._ewma \
+                + self.ewma_alpha * duration_s
+        return None
+
+    # ------------------------------------------------------------------
+    def recover(self, make_mesh: Callable[[Tuple[int, ...]], object],
+                recompile: Callable[[object], object],
+                restore: Callable[[object], Tuple[int, object]]):
+        """Run the recovery loop; returns (mesh, step, state, compiled)."""
+        shape = self.mesh_shape()
+        self.events.append(f"REMESH shape={shape}")
+        mesh = make_mesh(shape)
+        compiled = recompile(mesh)
+        step, state = restore(mesh)
+        self.events.append(f"RESUME step={step}")
+        return mesh, step, state, compiled

@@ -1,0 +1,63 @@
+"""Unit tests for the HLO collective parser (the roofline's data source)."""
+import numpy as np
+
+from repro.launch.hlo_analysis import (CollectiveSummary, _axes_of_group,
+                                       _group_info, _shape_bytes,
+                                       parse_collectives, ring_traffic_bytes)
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[16,512]{1,0} parameter(0)
+  %ag = bf16[16,8192]{1,0} all-gather(%p0), channel_id=1, replica_groups=[16,16]<=[256], dimensions={1}
+  %ar = f32[1024]{0} all-reduce(%x), channel_id=2, replica_groups=[1,256]<=[256], to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%y), channel_id=3, replica_groups={{0,16,32,48},{1,17,33,49}}, dimensions={0}, to_apply=%add
+  %cp = bf16[4,128]{1,0} collective-permute(%z), channel_id=4, source_target_pairs={{0,16},{16,0}}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,512]") == 16 * 512 * 2
+    assert _shape_bytes("f32[1024]") == 4096
+    assert _shape_bytes("(f32[8], bf16[4])") == 32 + 8
+    assert _shape_bytes("s8[10,10]") == 100
+
+
+def test_group_info_iota_and_explicit():
+    g, groups = _group_info("replica_groups=[16,16]<=[256], dims")
+    assert g == 16 and groups[0] == list(range(16))
+    g, groups = _group_info("replica_groups={{0,16,32},{1,17,33}}, x")
+    assert g == 3 and groups[0] == [0, 16, 32]
+
+
+def test_axes_classification():
+    # mesh (pod=2, data=16, model=16): strides pod=256, data=16, model=1
+    shape, names = (2, 16, 16), ("pod", "data", "model")
+    assert _axes_of_group(list(range(16)), shape, names) == ("model",)
+    assert _axes_of_group([0, 16, 32, 48], shape, names) == ("data",)
+    assert _axes_of_group([0, 256], shape, names) == ("pod",)
+    assert _axes_of_group([0, 16, 256, 272], shape, names) == ("pod", "data")
+
+
+def test_parse_collectives_end_to_end():
+    s = parse_collectives(HLO, (2, 16, 16), ("pod", "data", "model"))
+    kinds = {o.kind for o in s.ops}
+    assert kinds == {"all-gather", "all-reduce", "reduce-scatter",
+                     "collective-permute"}
+    ag = next(o for o in s.ops if o.kind == "all-gather")
+    # operand = result / group_size
+    assert ag.operand_bytes == 16 * 8192 * 2 / 16
+    assert ag.axes == ("model",)
+    rs = next(o for o in s.ops if o.kind == "reduce-scatter")
+    assert rs.operand_bytes == 64 * 4 * 4          # result × group_size
+    assert rs.axes == ("data",)
+    assert s.total_operand_bytes > 0
+    assert ring_traffic_bytes(s) > 0
+
+
+def test_bytes_by_axes_accumulates():
+    s = parse_collectives(HLO, (2, 16, 16), ("pod", "data", "model"))
+    by = s.bytes_by_axes()
+    # permutes carry source_target_pairs (not replica_groups) → "?" bucket
+    assert "model" in by and "data" in by and "?" in by

@@ -1,0 +1,82 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.fused_ffn.ops import fused_ffn
+from repro.kernels.fused_ffn.ref import fused_ffn_ref
+from repro.kernels.gemv.gemv import gemv_int8_pallas
+from repro.kernels.gemv.ref import gemv_int8_ref
+from repro.quant.int8 import quantize_int8, quantize_kv
+
+
+@pytest.mark.parametrize("B,K,N,bn,bk", [
+    (1, 256, 256, 128, 128),
+    (4, 1024, 512, 256, 512),
+    (8, 512, 1024, 256, 256),
+    (16, 2048, 256, 256, 1024),
+])
+def test_gemv_int8_sweep(B, K, N, bn, bk):
+    x = jax.random.normal(jax.random.key(1), (B, K), jnp.float32)
+    w = jax.random.normal(jax.random.key(2), (K, N), jnp.float32) * 0.05
+    wq = quantize_int8(w, axis=0)
+    xq = quantize_int8(x, axis=-1)
+    got = gemv_int8_pallas(xq.values, xq.scale, wq.values,
+                           wq.scale.reshape(1, -1), block_n=bn, block_k=bk,
+                           interpret=True)
+    want = gemv_int8_ref(xq.values, xq.scale, wq.values, wq.scale.reshape(1, -1))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,n_kv,S,hd,bs", [
+    (1, 4, 4, 128, 32, 64),     # MHA
+    (2, 8, 2, 256, 64, 64),     # GQA
+    (3, 16, 1, 192, 32, 64),    # MQA, non-pow2 batch
+])
+def test_flash_decode_sweep(B, Hq, n_kv, S, hd, bs, dtype):
+    q = jax.random.normal(jax.random.key(1), (B, Hq, hd), dtype)
+    k = jax.random.normal(jax.random.key(2), (B, n_kv, S, hd), dtype)
+    v = jax.random.normal(jax.random.key(3), (B, n_kv, S, hd), dtype)
+    lens = jnp.arange(B) * (S // (B + 1)) + S // 2
+    mask = jnp.arange(S)[None, :] < lens[:, None]
+    got = flash_decode(q, k, v, mask, interpret=True, block_s=bs)
+    want = flash_decode_ref(q, k, v, mask)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_decode_int8_kv():
+    B, Hq, n_kv, S, hd = 2, 8, 2, 256, 64
+    q = jax.random.normal(jax.random.key(1), (B, Hq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.key(2), (B, n_kv, S, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(3), (B, n_kv, S, hd), jnp.float32)
+    mask = jnp.ones((B, S), bool)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    got = flash_decode(q, kq, vq, mask, ks, vs, interpret=True, block_s=64)
+    want = flash_decode_ref(q, kq.astype(jnp.float32) * ks,
+                            vq.astype(jnp.float32) * vs, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+@pytest.mark.parametrize("B,D,F,bf", [
+    (2, 64, 256, 128),
+    (4, 128, 512, 512),
+    (8, 256, 384, 128),
+])
+def test_fused_ffn_sweep(B, D, F, bf, act):
+    x = jax.random.normal(jax.random.key(4), (B, D), jnp.float32)
+    wg = jax.random.normal(jax.random.key(5), (D, F), jnp.float32) * 0.1
+    wu = jax.random.normal(jax.random.key(6), (D, F), jnp.float32) * 0.1
+    wd = jax.random.normal(jax.random.key(7), (F, D), jnp.float32) * 0.1
+    got = fused_ffn(x, wg, wu, wd, act=act, interpret=True, block_f=bf,
+                    out_dtype=jnp.float32)
+    want = fused_ffn_ref(x, wg, wu, wd, act=act)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,129 @@
+"""Per-arch smoke tests (REDUCED configs): forward/train step on CPU with
+shape + no-NaN assertions, plus prefill→decode consistency for every family.
+The FULL configs are exercised only by the dry-run (ShapeDtypeStruct)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs.registry import ASSIGNED
+from repro.models import NULL_CTX, build_model
+
+ARCHS = sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = ASSIGNED[arch].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    batch = make_batch(cfg)
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: api.loss(p, batch, NULL_CTX)))(params)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), f"{arch}: NaN loss"
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads)
+             if g.dtype != jnp.int8)
+    assert np.isfinite(gn) and gn > 0, f"{arch}: degenerate grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_shapes(arch):
+    cfg = ASSIGNED[arch].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    B, S = 2, 24
+    batch = make_batch(cfg, B=B, S=S)
+    batch.pop("labels")
+    caches, logits = jax.jit(lambda p, b: api.prefill(p, b, NULL_CTX))(
+        params, batch)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    caches, logits2 = jax.jit(lambda p, c, t: api.decode(p, c, t, NULL_CTX))(
+        params, caches, jnp.zeros((B,), jnp.int32))
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits2))), f"{arch}: NaN decode logits"
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "granite-3-2b",
+                                  "qwen2-0.5b", "phi3-medium-14b",
+                                  "internvl2-76b", "whisper-medium"])
+def test_prefill_decode_equals_full_forward(arch):
+    """Exact for attention archs (same math, same dtype path)."""
+    cfg = ASSIGNED[arch].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    B, S = 2, 17
+    toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0, cfg.vocab_size)
+    batch = make_batch(cfg, B=B, S=S)
+    batch.pop("labels")
+    batch["tokens"] = toks[:, :S]
+    full = dict(batch, tokens=toks)
+    caches, _ = api.prefill(params, batch, NULL_CTX)
+    caches, lg = api.decode(params, caches, toks[:, S], NULL_CTX)
+    _, lg_full = api.prefill(params, full, NULL_CTX)
+    np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                               np.asarray(lg_full[:, 0], np.float32),
+                               rtol=3e-2, atol=5e-2)   # bf16 p·v flash path
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "recurrentgemma-9b"])
+def test_recurrent_prefill_decode_consistency(arch):
+    """f32 exactness for the recurrent families (bf16 adds state noise)."""
+    cfg = ASSIGNED[arch].reduced().replace(dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    B, S = 2, 40                        # beyond the reduced window (32)
+    toks = jax.random.randint(jax.random.key(1), (B, S + 3), 0, cfg.vocab_size)
+    caches, _ = api.prefill(params, {"tokens": toks[:, :S]}, NULL_CTX)
+    for i in range(3):
+        caches, lg = api.decode(params, caches, toks[:, S + i], NULL_CTX)
+    _, lg_full = api.prefill(params, {"tokens": toks}, NULL_CTX)
+    a, b = np.asarray(lg[:, 0]), np.asarray(lg_full[:, 0])
+    rel = np.max(np.abs(a - b)) / max(np.max(np.abs(b)), 1e-6)
+    assert rel < 1e-4, f"{arch}: rel_err {rel}"
+
+
+@pytest.mark.parametrize("arch", ["qwen3-moe-235b-a22b", "phi3.5-moe-42b-a6.6b"])
+def test_moe_nodrop_consistency(arch):
+    cfg = ASSIGNED[arch].reduced()
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=0.0))
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    B, S = 2, 17
+    toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0, cfg.vocab_size)
+    caches, _ = api.prefill(params, {"tokens": toks[:, :S]}, NULL_CTX)
+    caches, lg = api.decode(params, caches, toks[:, S], NULL_CTX)
+    _, lg_full = api.prefill(params, {"tokens": toks}, NULL_CTX)
+    np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                               np.asarray(lg_full[:, 0], np.float32),
+                               rtol=3e-2, atol=5e-2)   # bf16 routing-order noise
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    cfg = ASSIGNED["internlm2-1.8b"].reduced()
+    api16 = build_model(cfg)
+    api8 = build_model(cfg.replace(kv_dtype="int8"))
+    params = api16.init(jax.random.key(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0, cfg.vocab_size)
+    c16, _ = api16.prefill(params, {"tokens": toks[:, :S]}, NULL_CTX)
+    c8, _ = api8.prefill(params, {"tokens": toks[:, :S]}, NULL_CTX)
+    _, l16 = api16.decode(params, c16, toks[:, S], NULL_CTX)
+    _, l8 = api8.decode(params, c8, toks[:, S], NULL_CTX)
+    a, b = np.asarray(l8[:, 0], np.float32), np.asarray(l16[:, 0], np.float32)
+    rel = np.max(np.abs(a - b)) / max(np.max(np.abs(b)), 1e-6)
+    assert rel < 0.08, f"int8 KV deviates too much: {rel}"
+
+
+def test_param_counts_are_sane():
+    from repro.models.registry import count_params
+    n = count_params(ASSIGNED["qwen3-moe-235b-a22b"])
+    na = count_params(ASSIGNED["qwen3-moe-235b-a22b"], active_only=True)
+    assert 2.0e11 < n < 2.7e11, n            # ≈235B
+    assert 1.5e10 < na < 3.0e10, na          # ≈22B active
+    n2 = count_params(ASSIGNED["qwen2-0.5b"])
+    assert 3e8 < n2 < 7e8, n2

@@ -1,0 +1,177 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analytical import (EPYC_9684X, baseline_llama_cpp,
+                                   paper_system, stage_latency)
+from repro.core.residency import paradox_table
+from repro.configs.registry import ASSIGNED
+from repro.kv.cache import KVCache, slot_valid_mask, window_slots
+from repro.quant.int8 import dequantize, int8_matmul, quantize_int8
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# INT8 quantization
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(1, 48), st.floats(0.1, 100.0))
+@settings(**SETTINGS)
+def test_int8_roundtrip_error_bound(r, c, scale):
+    x = np.linspace(-scale, scale, r * c, dtype=np.float32).reshape(r, c)
+    q = quantize_int8(jnp.asarray(x), axis=-1)
+    back = np.asarray(dequantize(q, jnp.float32))
+    # symmetric int8: error ≤ amax/127 per row (half-step ⇒ /254, keep slack)
+    amax = np.abs(x).max(axis=1, keepdims=True)
+    assert np.all(np.abs(back - x) <= amax / 127.0 + 1e-6)
+
+
+@given(st.integers(1, 4), st.integers(8, 64), st.integers(4, 32))
+@settings(**SETTINGS)
+def test_int8_matmul_relative_error(b, k, n):
+    key = jax.random.key(b * 1000 + k * 10 + n)
+    x = jax.random.normal(key, (b, k), jnp.float32)
+    w = jax.random.normal(jax.random.key(7), (k, n), jnp.float32)
+    wq = quantize_int8(w, axis=0)
+    got = np.asarray(int8_matmul(x, wq, out_dtype=jnp.float32))
+    want = np.asarray(x @ w)
+    denom = np.maximum(np.abs(want).max(), 1e-3)
+    assert np.abs(got - want).max() / denom < 0.05
+
+
+# --------------------------------------------------------------------------
+# Online-softmax (flash) merge is order-independent & matches full softmax
+# --------------------------------------------------------------------------
+
+@given(st.integers(2, 6), st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_online_softmax_merge(n_blocks, blk, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.normal(size=(n_blocks, blk)).astype(np.float32) * 5
+    v = rng.normal(size=(n_blocks, blk, 3)).astype(np.float32)
+    # full softmax
+    flat = s.reshape(-1)
+    p = np.exp(flat - flat.max())
+    p /= p.sum()
+    want = p @ v.reshape(-1, 3)
+    # online merge over blocks, in a shuffled order
+    order = rng.permutation(n_blocks)
+    m, l, o = -np.inf, 0.0, np.zeros(3)
+    for i in order:
+        mb = s[i].max()
+        mn = max(m, mb)
+        pb = np.exp(s[i] - mn)
+        corr = np.exp(m - mn)
+        l = l * corr + pb.sum()
+        o = o * corr + pb @ v[i]
+        m = mn
+    np.testing.assert_allclose(o / l, want, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Ring-buffer cache semantics vs a python simulation
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 40), st.integers(2, 12), st.integers(2, 12))
+@settings(**SETTINGS)
+def test_ring_buffer_mask_matches_simulation(n_tokens, size, window):
+    window = max(window, size)  # ring must be ≥ window... size ≤ window
+    size = min(size, window)
+    mask = np.asarray(slot_valid_mask(size, window, jnp.int32(n_tokens - 1)))
+    # python sim: slot s holds the largest p < n_tokens with p % size == s
+    for s in range(size):
+        ps = [p for p in range(n_tokens) if p % size == s]
+        p = ps[-1] if ps else None
+        expect = (p is not None and p > (n_tokens - 1) - window)
+        assert mask[s] == expect, (n_tokens, size, window, s, p)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU associative scan == sequential recurrence
+# --------------------------------------------------------------------------
+
+@given(st.integers(2, 32), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_linear_recurrence_scan_equals_sequential(T, C, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.5, 1.0, size=(1, T, C)).astype(np.float32)
+    b = rng.normal(size=(1, T, C)).astype(np.float32)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h_scan = jax.lax.associative_scan(combine, (jnp.asarray(a),
+                                                   jnp.asarray(b)), axis=1)
+    h = np.zeros((1, C), np.float32)
+    for t in range(T):
+        h = a[:, t] * h + b[:, t]
+    np.testing.assert_allclose(np.asarray(h_scan)[:, -1], h, rtol=2e-4,
+                               atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# Analytical model invariants (§2.3, §6.2)
+# --------------------------------------------------------------------------
+
+@given(st.sampled_from(sorted(ASSIGNED)), st.sampled_from([1024, 4096]),
+       st.sampled_from([1, 8, 32]))
+@settings(max_examples=15, deadline=None)
+def test_paper_system_never_slower_than_operator_centric(arch, ctx_len, batch):
+    cfg = ASSIGNED[arch]
+    ours = paper_system(cfg, batch=batch, ctx_len=ctx_len, n_stages=4)
+    base = baseline_llama_cpp(cfg, batch=batch, ctx_len=ctx_len, n_stages=4)
+    assert ours["tpot_s"] <= base["tpot_s"] * 1.001
+
+
+def test_kv_pressure_paradox_depth_invariance():
+    """§2.3: per-domain KV pressure is pipeline-depth invariant."""
+    cfg = ASSIGNED["internlm2-1.8b"]
+    tab = paradox_table(cfg, ctx_len=4096, batch=8)
+    vals = list(tab.values())
+    assert max(vals) - min(vals) < 1e-6 * max(vals)
+
+
+def test_stage_latency_monotone_in_context():
+    cfg = ASSIGNED["granite-3-2b"]
+    ls = [stage_latency(cfg, EPYC_9684X, batch=8, ctx_len=c, n_stages=2)
+          for c in (512, 2048, 8192)]
+    assert ls[0] <= ls[1] <= ls[2]
+
+
+# --------------------------------------------------------------------------
+# MoE dispatch conservation
+# --------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_moe_matches_dense_loop_reference(seed):
+    import dataclasses
+    from repro.models.moe import make_moe_params, moe_ffn
+    from repro.models import NULL_CTX, common
+    cfg = ASSIGNED["phi3.5-moe-42b-a6.6b"].reduced()
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=0.0),
+                      dtype="float32")
+    p = make_moe_params(jax.random.key(seed % 1000), cfg)
+    x = jax.random.normal(jax.random.key(seed % 997), (1, 5, cfg.d_model),
+                          jnp.float32)
+    got, _ = moe_ffn(p, x, cfg, NULL_CTX, train=False)
+    # dense loop reference
+    xf = x.reshape(-1, cfg.d_model)
+    logits = xf @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    vals, idx = jax.lax.top_k(probs, cfg.moe.experts_per_token)
+    vals = vals / vals.sum(-1, keepdims=True)
+    want = np.zeros_like(np.asarray(xf))
+    for t in range(xf.shape[0]):
+        for j in range(cfg.moe.experts_per_token):
+            e = int(idx[t, j])
+            g = np.asarray(jax.nn.silu(xf[t] @ p["w_gate"][e]))
+            u = np.asarray(xf[t] @ p["w_up"][e])
+            want[t] += float(vals[t, j]) * (g * u) @ np.asarray(p["w_down"][e])
+    np.testing.assert_allclose(np.asarray(got).reshape(-1, cfg.d_model),
+                               want, rtol=2e-3, atol=2e-3)
