@@ -1,0 +1,19 @@
+# Single gate every PR runs. `make test` is the tier-1 verify from ROADMAP.md.
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test test-fast bench-smoke lint check
+
+test:            ## tier-1 verify (full suite, fail fast)
+	python -m pytest -x -q
+
+test-fast:       ## skip the slow multi-device subprocess tests
+	python -m pytest -x -q --ignore=tests/test_distributed.py
+
+bench-smoke:     ## fast benchmark subset (CSV contract sanity)
+	python -m benchmarks.run table2_end_to_end fig10_runtime
+
+lint:            ## dependency-free syntax gate
+	python -m compileall -q src tests benchmarks examples
+
+check: lint test

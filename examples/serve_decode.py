@@ -1,12 +1,12 @@
-"""End-to-end serving driver: batched requests through the ServingEngine
-(static AOT dispatch, slot-swap batching) with TPOT/throughput stats — the
-paper's measurement loop at laptop scale.
+"""End-to-end serving driver: continuous-batching requests through the
+ServingEngine (static AOT dispatch, per-slot admission) with TPOT/TTFT/
+queue-delay stats — the paper's measurement loop at laptop scale, extended
+with the staggered-arrival workload the drain baseline cannot serve well.
 
-    PYTHONPATH=src python examples/serve_decode.py [--arch internlm2-1.8b]
+    PYTHONPATH=src python examples/serve_decode.py [--arch internlm2-1.8b] \
+        [--arrival-every 4] [--mode drain]
 """
 import argparse
-
-import numpy as np
 
 from repro.launch.serve import serve
 
@@ -16,14 +16,27 @@ ap.add_argument("--requests", type=int, default=12)
 ap.add_argument("--batch-slots", type=int, default=4)
 ap.add_argument("--prompt-len", type=int, default=32)
 ap.add_argument("--max-new", type=int, default=16)
+ap.add_argument("--mode", default="auto",
+                choices=("auto", "continuous", "drain"))
+ap.add_argument("--arrival-every", type=int, default=2,
+                help="request i arrives at decode step i*N (0 = all at start)")
 args = ap.parse_args()
 
 print(f"serving {args.requests} requests on {args.arch} "
       f"(batch={args.batch_slots}, prompt={args.prompt_len}, "
-      f"max_new={args.max_new})")
+      f"max_new={args.max_new}, mode={args.mode}, "
+      f"arrival_every={args.arrival_every})")
 stats = serve(args.arch, args.requests, args.batch_slots, args.prompt_len,
-              args.max_new)
-print(f"\ncompleted:   {stats['completed']}")
+              args.max_new, mode=args.mode, arrival_every=args.arrival_every)
+print(f"\nmode:        {stats['mode']}")
+print(f"completed:   {stats['completed']} "
+      f"({stats['admissions']} admissions, "
+      f"{stats['overlapped_admissions']} into a live batch)")
 print(f"TPOT mean:   {stats['tpot_mean_ms']:.2f} ms "
       f"(p50 {stats['tpot_p50_ms']:.2f}, p99 {stats['tpot_p99_ms']:.2f})")
+print(f"TTFT mean:   {stats['ttft_mean_ms']:.1f} ms "
+      f"(p99 {stats['ttft_p99_ms']:.1f}); "
+      f"queue delay mean {stats['queue_delay_mean_ms']:.1f} ms")
 print(f"throughput:  {stats['throughput_tok_s']:.1f} tok/s")
+compiles = {k: v["compiles"] for k, v in stats["runtime"].items()}
+print(f"compiles:    {compiles} (must stay 1 per step — zero retracing)")

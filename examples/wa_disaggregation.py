@@ -42,8 +42,8 @@ caches, _ = api.prefill(params, {"tokens": toks[:, :S]}, NULL_CTX)
 _, want = api.decode(params, caches, toks[:, S], NULL_CTX)
 
 wa = WADisaggregated(cfg, mesh, WAPlan(True, 2, 2, "demo"))
-kv = {"k": caches.k.astype(jnp.float32), "v": caches.v.astype(jnp.float32),
-      "k_scale": None, "v_scale": None, "length": caches.length}
+kv = caches._replace(k=caches.k.astype(jnp.float32),
+                     v=caches.v.astype(jnp.float32))
 kv2, got = wa.decode_step(params, kv, toks[:, S])
 err = float(jnp.max(jnp.abs(got - want)))
 print(f"\nWA-disaggregated decode max|Δ| vs colocated: {err:.2e} "

@@ -1,0 +1,57 @@
+"""JAX version-compat shims.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and renamed ``check_rep`` → ``check_vma``, replaced the ``auto`` axis set with
+its complement ``axis_names``). The repo targets both API generations: library
+code and subprocess test snippets import :func:`shard_map` from here instead of
+touching ``jax`` directly.
+"""
+from __future__ import annotations
+
+from typing import Callable, FrozenSet, Optional
+
+import jax
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a per-device LIST of dicts on
+    0.4.x and a plain dict on newer JAX; normalize to one dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca
+
+
+def axis_size(axis_name) -> jax.Array:
+    """``jax.lax.axis_size`` appeared after 0.4.x; fall back to psum(1)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f: Callable, mesh, in_specs, out_specs,
+              axis_names: Optional[FrozenSet[str]] = None,
+              check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None):
+    """Dispatch to ``jax.shard_map`` when present, else the experimental one.
+
+    ``axis_names``: the MANUAL axes (new-API convention). Omitted → manual over
+    every mesh axis. ``check_vma``/``check_rep`` are aliases (new/old names).
+    """
+    check = check_vma if check_vma is not None else check_rep
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = frozenset(axis_names)
+        if check is not None:
+            kw["check_vma"] = check
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    if check is not None:
+        kw["check_rep"] = check
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -60,9 +60,10 @@ def _pod_specs(tree):
 def _shard_map(f, mesh, in_specs, out_specs):
     """Partial-manual shard_map: manual over 'pod', auto over data/model —
     inner GSPMD rules keep working while we schedule the pipeline by hand."""
-    return jax.shard_map(f, mesh=mesh, in_specs=_pod_specs(in_specs),
-                         out_specs=_pod_specs(out_specs),
-                         axis_names=frozenset({"pod"}), check_vma=False)
+    from repro.core.compat import shard_map
+    return shard_map(f, mesh=mesh, in_specs=_pod_specs(in_specs),
+                     out_specs=_pod_specs(out_specs),
+                     axis_names=frozenset({"pod"}), check_vma=False)
 
 
 def stage_params(params: Dict[str, Any], n_stages: int) -> Dict[str, Any]:
@@ -142,14 +143,18 @@ def make_pp_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                           (n_stages, B, 1, cfg.vocab_size))
 
     # ------------------- per-stage body (manual over 'pod') ---------------
-    def body(blocks, head, caches, tokens):
+    # NOTE: the stage index arrives as an explicit P("pod")-sharded iota
+    # instead of lax.axis_index("pod") — axis_index under partial-manual
+    # shard_map lowers to a PartitionId instruction that SPMD partitioning
+    # rejects on older JAX.
+    def body(stage_ids, blocks, head, caches, tokens):
         blocks = jax.tree.map(lambda a: a[0], blocks)         # (Lp, ...)
         k = caches["k"][0]                                    # (Lp,B,kv,S,hd)
         v = caches["v"][0]
         ks = caches["k_scale"][0]
         vs = caches["v_scale"][0]
         pos = caches["lengths"][0]
-        stage = lax.axis_index("pod")
+        stage = stage_ids[0]
         emb = common.embed(head["embed"], tokens[0][:, None], ctx)
         x = jnp.where(stage == 0, emb.astype(caches["x_carry"].dtype),
                       caches["x_carry"][0])
@@ -163,25 +168,31 @@ def make_pp_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
             layer, x, (blocks, k, v, ks, vs), unroll=common.scan_unroll())
         xf = common.apply_norm(cfg.norm, head["ln_f"], x, cfg.norm_eps)
         logits = common.unembed_logits(unembed_table(head, cfg), xf, ctx)
-        # paper's cross-node hop: embeddings only
-        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
-        x_next = lax.ppermute(x, "pod", perm)
+        # paper's cross-node hop (embeddings only) happens OUTSIDE the manual
+        # region — jnp.roll over the pod-sharded stage axis in `step` — since
+        # CollectivePermute inside a manual subgroup crashes the SPMD
+        # partitioner on older JAX; the roll lowers to the same permute.
         new_caches = {"k": k_n[None], "v": v_n[None],
                       "k_scale": ks_n[None], "v_scale": vs_n[None],
-                      "lengths": (pos + 1)[None], "x_carry": x_next[None]}
+                      "lengths": (pos + 1)[None], "x_carry": x[None]}
         return new_caches, logits[None].astype(jnp.float32)
 
     head_keys = [k for k in _HEAD_KEYS if k in staged_shape]
     head_specs = {k: p_specs[k] for k in head_keys}
     f_sharded = _shard_map(
         body, mesh,
-        (p_specs["blocks"], head_specs, c_specs, tok_spec),
+        (P("pod"), p_specs["blocks"], head_specs, c_specs, tok_spec),
         ({"k": kv_spec, "v": kv_spec, "k_scale": sc_spec, "v_scale": sc_spec,
           "lengths": P("pod"), "x_carry": c_specs["x_carry"]}, logit_spec))
 
     def step(params, caches, tokens):
         head = {k: params[k] for k in head_keys}
-        return f_sharded(params["blocks"], head, caches, tokens)
+        stage_ids = jnp.arange(n_stages, dtype=jnp.int32)
+        new_caches, logits = f_sharded(stage_ids, params["blocks"], head,
+                                       caches, tokens)
+        new_caches = dict(new_caches)
+        new_caches["x_carry"] = jnp.roll(new_caches["x_carry"], 1, axis=0)
+        return new_caches, logits
 
     name = f"{cfg.name}|{shape.name}|{executor}|pp{n_stages}"
     return StepBundle(

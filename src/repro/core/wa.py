@@ -38,7 +38,8 @@ from repro.core.residency import plan as residency_plan
 from repro.models import common
 from repro.models.attention import decode_attention, qkv_project
 from repro.models.sharding import ShardingCtx, sub_operator
-from repro.kv.cache import layer_append, layer_read, slot_valid_mask
+from repro.kv.cache import (KVCache, batch_valid_mask, layer_append,
+                            layer_append_slotted, layer_read, slot_valid_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -106,13 +107,12 @@ class WADisaggregated:
         self.a_ctx = ShardingCtx(self.a_mesh, sub_operator(False))
 
     # -- single layer pieces (weight side) ------------------------------
-    def _w_qkv(self, lp, x):
+    def _w_qkv(self, lp, x, positions):
+        """positions: (B,1) int32 — per-row RoPE phase (continuous batching
+        admits rows at different depths, so the W side must rotate per-row)."""
         cfg, ctx = self.cfg, self.w_ctx
         h = common.apply_norm(cfg.norm, lp["ln1"], x, cfg.norm_eps)
-        pos = self._pos
-        B = x.shape[0]
-        return qkv_project(lp["attn"], h, cfg, ctx,
-                           jnp.full((B, 1), pos, jnp.int32))
+        return qkv_project(lp["attn"], h, cfg, ctx, positions)
 
     def _w_post(self, lp, x, o):
         from repro.models.transformer import ffn_apply
@@ -133,6 +133,19 @@ class WADisaggregated:
         o = decode_attention(q[:, 0], kc, vc, mask, self.a_ctx)
         return (k_l, v_l, ks_l, vs_l), o
 
+    def _a_attend_slotted(self, kv_slices, q, k, v, positions, active,
+                          window=0):
+        """Per-slot cursors live WITH the KV on the attention node — the
+        weight node never tracks who occupies which slot (admission is an
+        A-side state change, matching the paper's ownership split)."""
+        k_l, v_l, ks_l, vs_l = kv_slices
+        k_l, v_l, ks_l, vs_l = layer_append_slotted(
+            k_l, v_l, ks_l, vs_l, k[:, 0], v[:, 0], positions, window, active)
+        kc, vc = layer_read(k_l, v_l, ks_l, vs_l, dtype=q.dtype)
+        mask = batch_valid_mask(k_l.shape[2], window, positions)
+        o = decode_attention(q[:, 0], kc, vc, mask, self.a_ctx)
+        return (k_l, v_l, ks_l, vs_l), o
+
     # -- route helpers ------------------------------------------------------
     def _to_a(self, x):
         return jax.device_put(x, NamedSharding(self.a_mesh,
@@ -143,34 +156,60 @@ class WADisaggregated:
                                                P("data", None, None)))
 
     # -- decode step --------------------------------------------------------
-    def decode_step(self, params, caches, tokens):
-        """Python-orchestrated per-layer routing. params live on W (weights
-        resident, no KV there); caches live on A. Used for correctness and
-        for the Fig 11 breakdown; the analytical model covers scaling."""
+    def _layer_loop(self, params, cache: KVCache, tokens, positions, attend):
+        """Shared per-layer W→A→W routing. ``positions``: (B,1) per-row RoPE
+        phase; ``attend(kv_slices, q, k, v)`` runs the A-side program and
+        returns (updated slices, o). Returns (new k/v/scale stacks, logits)."""
         cfg = self.cfg
-        self._pos = caches["length"]
-        pos = self._pos
         x = common.embed(params["embed"], tokens[:, None], self.w_ctx)
-        L = cfg.n_layers
-        for i in range(L):
+        k_st, v_st = cache.k, cache.v
+        ks_st, vs_st = cache.k_scale, cache.v_scale
+        for i in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[i], params["blocks"])
-            q, k, v = self._w_qkv(lp, x)
+            q, k, v = self._w_qkv(lp, x, positions)
             # W → A : route per-head activations (the "embeddings move" hop)
             q, k, v = self._to_a(q), self._to_a(k), self._to_a(v)
             kv_i = tuple(None if c is None else c[i]
-                         for c in (caches["k"], caches["v"],
-                                   caches["k_scale"], caches["v_scale"]))
-            kv_i, o = self._a_attend(kv_i, q, k, v, pos)
-            caches["k"] = caches["k"].at[i].set(kv_i[0])
-            caches["v"] = caches["v"].at[i].set(kv_i[1])
+                         for c in (k_st, v_st, ks_st, vs_st))
+            kv_i, o = attend(kv_i, q, k, v)
+            k_st = k_st.at[i].set(kv_i[0])
+            v_st = v_st.at[i].set(kv_i[1])
             if kv_i[2] is not None:
-                caches["k_scale"] = caches["k_scale"].at[i].set(kv_i[2])
-                caches["v_scale"] = caches["v_scale"].at[i].set(kv_i[3])
+                ks_st = ks_st.at[i].set(kv_i[2])
+                vs_st = vs_st.at[i].set(kv_i[3])
             # A → W
             o = self._to_w(o[:, None])
             x = self._w_post(lp, x, o)
         x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
         from repro.models.transformer import unembed_table
-        logits = common.unembed_logits(unembed_table(params, cfg), x, self.w_ctx)
-        caches["length"] = pos + 1
-        return caches, logits
+        logits = common.unembed_logits(unembed_table(params, cfg), x,
+                                       self.w_ctx)
+        return (k_st, v_st, ks_st, vs_st), logits
+
+    def decode_step(self, params, cache: KVCache, tokens):
+        """Python-orchestrated per-layer routing. params live on W (weights
+        resident, no KV there); KV lives on A. Used for correctness and
+        for the Fig 11 breakdown; the analytical model covers scaling."""
+        pos = cache.length
+        B = tokens.shape[0]
+        (k, v, ks, vs), logits = self._layer_loop(
+            params, cache, tokens, jnp.full((B, 1), pos, jnp.int32),
+            lambda kv_i, q, kk, vv: self._a_attend(kv_i, q, kk, vv, pos,
+                                                   window=cache.window))
+        return cache._replace(k=k, v=v, k_scale=ks, v_scale=vs,
+                              length=pos + 1), logits
+
+    def decode_step_slotted(self, params, cache: KVCache, tokens,
+                            positions, active):
+        """Continuous-batching decode in the WA-decoupled path: per-slot
+        cursors + active mask (DESIGN.md §7). Slot admission itself is the
+        same ``write_slot_kv`` the colocated engine uses — the A node owns
+        the KV, so admission touches only A-side state."""
+        (k, v, ks, vs), logits = self._layer_loop(
+            params, cache, tokens, positions[:, None],
+            lambda kv_i, q, kk, vv: self._a_attend_slotted(
+                kv_i, q, kk, vv, positions, active, window=cache.window))
+        new_len = jnp.maximum(
+            cache.length, jnp.max(jnp.where(active, positions, 0)) + 1)
+        return cache._replace(k=k, v=v, k_scale=ks, v_scale=vs,
+                              length=new_len), logits

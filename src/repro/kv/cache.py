@@ -64,9 +64,15 @@ def init_kv_cache(n_layers: int, batch: int, n_kv: int, max_len: int,
     size = min(window, max_len) if window else max_len
     store = jnp.int8 if quantized else dtype
     shape = (n_layers, batch, n_kv, size, head_dim)
-    z = jnp.zeros(shape, store)
-    sc = jnp.zeros(shape[:-1] + (1,), jnp.float32) if quantized else None
-    return KVCache(z, z, sc, sc, jnp.zeros((), jnp.int32), window=window)
+    # k/v (and the scales) must be DISTINCT buffers: the serving engine
+    # donates the whole cache pytree per step, and XLA rejects donating one
+    # buffer twice
+    mk = lambda s, dt: jnp.zeros(s, dt)
+    sshape = shape[:-1] + (1,)
+    return KVCache(mk(shape, store), mk(shape, store),
+                   mk(sshape, jnp.float32) if quantized else None,
+                   mk(sshape, jnp.float32) if quantized else None,
+                   jnp.zeros((), jnp.int32), window=window)
 
 
 def _slot(cache: KVCache, pos: jax.Array) -> jax.Array:
@@ -155,6 +161,87 @@ def layer_read(k_l, v_l, k_scale_l, v_scale_l, dtype=jnp.bfloat16):
         return (dequantize_kv(k_l, k_scale_l, dtype),
                 dequantize_kv(v_l, v_scale_l, dtype))
     return k_l.astype(dtype), v_l.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot (continuous-batching) API — the serving engine admits a request
+# into ONE batch slot while the other slots keep decoding (DESIGN.md §7).
+# Shapes stay static: the slot index and per-row cursors are traced scalars /
+# (B,) vectors, so every program below compiles exactly once.
+# ---------------------------------------------------------------------------
+
+def layer_append_slotted(k_l: jax.Array, v_l: jax.Array, k_scale_l, v_scale_l,
+                         k_new: jax.Array, v_new: jax.Array,
+                         positions: jax.Array, window: int,
+                         active: Optional[jax.Array] = None):
+    """Per-row append: row ``b`` writes ``k_new[b]`` at its OWN cursor
+    ``positions[b]`` (vmapped dynamic_update_slice — rows may sit at
+    different depths). k_l/v_l: (B,n_kv,S,hd); k_new/v_new: (B,n_kv,hd);
+    positions: (B,) int32; active: (B,) bool — inactive rows keep their
+    slice byte-identical (retired slots must not pollute the cache)."""
+    size = k_l.shape[2]
+    slots = jax.lax.rem(positions, size) if window else positions
+    if active is None:
+        active = jnp.ones(positions.shape, bool)
+
+    def row(dst, new, slot, act):
+        upd = jax.lax.dynamic_update_slice(
+            dst, new[:, None, :].astype(dst.dtype), (0, slot, 0))
+        return jnp.where(act, upd, dst)
+
+    if k_scale_l is not None:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        return (jax.vmap(row)(k_l, kq, slots, active),
+                jax.vmap(row)(v_l, vq, slots, active),
+                jax.vmap(row)(k_scale_l, ks, slots, active),
+                jax.vmap(row)(v_scale_l, vs, slots, active))
+    return (jax.vmap(row)(k_l, k_new, slots, active),
+            jax.vmap(row)(v_l, v_new, slots, active), None, None)
+
+
+def batch_valid_mask(size: int, window: int, positions: jax.Array) -> jax.Array:
+    """(B,S) bool — per-row ``slot_valid_mask`` (decode order: append→attend);
+    row b attends exactly the positions its own cursor has written."""
+    return jax.vmap(lambda p: slot_valid_mask(size, window, p))(positions)
+
+
+def write_slot_kv(dst: KVCache, src: KVCache, slot) -> KVCache:
+    """Admission: copy the batch-1 cache ``src`` (a fresh prefill) into batch
+    slot ``slot`` of ``dst``. ``slot`` may be traced — ONE compiled program
+    serves every slot. Seq lengths may differ (registry prefill sizes its
+    cache as prompt+slack): the first min(S_src, S_dst) positions are copied,
+    which covers the prompt for non-windowed caches. The cursor ``length``
+    is NOT per-slot here — slotted decode threads per-row positions
+    explicitly — so it is kept as max() purely as an upper bound."""
+    n = min(src.k.shape[3], dst.k.shape[3])
+
+    def put(d, s):
+        if d is None:
+            return None
+        s = jax.lax.slice_in_dim(s, 0, n, axis=3).astype(d.dtype)
+        return jax.lax.dynamic_update_slice(d, s, (0, slot, 0, 0, 0))
+
+    return dst._replace(k=put(dst.k, src.k), v=put(dst.v, src.v),
+                        k_scale=put(dst.k_scale, src.k_scale),
+                        v_scale=put(dst.v_scale, src.v_scale),
+                        length=jnp.maximum(dst.length, src.length))
+
+
+def reset_slot(cache: KVCache, slot) -> KVCache:
+    """Zero one batch slot's K/V (retire). Not required for correctness —
+    masked attention never reads past a slot's cursor and admission
+    overwrites the prompt region — but keeps retired garbage out of cache
+    dumps and makes slot-state invariants checkable."""
+    def zero(d):
+        if d is None:
+            return None
+        z = jnp.zeros((d.shape[0], 1) + d.shape[2:], d.dtype)
+        return jax.lax.dynamic_update_slice(d, z, (0, slot, 0, 0, 0))
+
+    return cache._replace(k=zero(cache.k), v=zero(cache.v),
+                          k_scale=zero(cache.k_scale),
+                          v_scale=zero(cache.v_scale))
 
 
 def slot_valid_mask(size: int, window: int, query_pos: jax.Array) -> jax.Array:

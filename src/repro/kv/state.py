@@ -52,6 +52,52 @@ def write_state(state: RecurrentState, layer: jax.Array,
     return RecurrentState(new_h, new_c)
 
 
+# ---------------------------------------------------------------------------
+# Per-slot (continuous-batching) support — attention-free states are O(1) in
+# context, so admission is a single per-slot overwrite (DESIGN.md §7).
+# ---------------------------------------------------------------------------
+
+def write_slot_tree(dst, src, slot, batch_axis: int = 1):
+    """Admission for recurrent-state pytrees: copy the batch-1 pytree ``src``
+    into index ``slot`` along ``batch_axis`` of every leaf. Leaves with rank
+    ≤ batch_axis (scalar cursors) take the elementwise max as an upper
+    bound. ``slot`` may be traced — one compiled program serves all slots."""
+    def put(d, s):
+        if d is None:
+            return None
+        if d.ndim <= batch_axis:
+            return jnp.maximum(d, s) if d.shape == s.shape else d
+        start = (0,) * batch_axis + (slot,) + (0,) * (d.ndim - batch_axis - 1)
+        return jax.lax.dynamic_update_slice(d, s.astype(d.dtype), start)
+
+    return jax.tree.map(put, dst, src)
+
+
+def reset_slot_tree(state, slot, batch_axis: int = 1):
+    """Zero one batch slot of every leaf (retire a finished request)."""
+    zeros = jax.tree.map(
+        lambda a: jnp.zeros(a.shape[:batch_axis] + (1,)
+                            + a.shape[batch_axis + 1:], a.dtype)
+        if a.ndim > batch_axis else a, state)
+    return write_slot_tree(state, zeros, slot, batch_axis)
+
+
+def mask_slots(active: jax.Array, new_tree, old_tree, batch_axis: int = 1):
+    """Active-slot masking for recurrent decode: every step rewrites the
+    WHOLE state, so retired rows must be selected back to their old value
+    (the KV path masks at the append instead). active: (B,) bool."""
+    def sel(n, o):
+        if n is None:
+            return None
+        if n.ndim <= batch_axis:
+            return n
+        shape = [1] * n.ndim
+        shape[batch_axis] = n.shape[batch_axis]
+        return jnp.where(active.reshape(shape), n, o)
+
+    return jax.tree.map(sel, new_tree, old_tree)
+
+
 def conv_step(conv_state: jax.Array, x_new: jax.Array, conv_w: jax.Array,
               conv_b: Optional[jax.Array] = None):
     """Causal depthwise conv, one step. conv_state: (B,W-1,C); x_new: (B,C);

@@ -86,7 +86,8 @@ def _probe_cost(cfg, shape, multi_pod, executor, pod_strategy):
                                    pod_strategy=pod_strategy)
                 lowered = bundle.lower()
                 compiled = lowered.compile()
-                cost = compiled.cost_analysis()
+                from repro.core.compat import cost_analysis
+                cost = cost_analysis(compiled)
                 coll = parse_collectives(compiled.as_text(),
                                          mesh.devices.shape, mesh.axis_names)
             vals.append({
@@ -138,7 +139,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             lowered = bundle.lower()
             compiled = lowered.compile()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            from repro.core.compat import cost_analysis
+            cost = cost_analysis(compiled)
             hlo = compiled.as_text()
         chips = int(np.prod(mesh.devices.shape))
         coll = parse_collectives(hlo, mesh.devices.shape, mesh.axis_names)

@@ -1,12 +1,17 @@
-"""Serving driver: batched decode with the static AOT runtime.
+"""Serving driver: continuous-batching decode with the static AOT runtime.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
-        --requests 8 --batch 4 --prompt-len 32 --max-new 16 --reduced
+        --requests 8 --batch 4 --prompt-len 32 --max-new 16 --reduced \
+        --arrival-every 4
 
-Reports the paper's metrics (TPOT mean/p50/p99, throughput) from real
-measured steps on this host (reduced configs) — the measurement side of the
-Table 2 methodology; benchmarks/table2_end_to_end.py compares these against
-the analytical model.
+Reports the paper's metrics (TPOT mean/p50/p99, throughput) plus the
+scheduler-side metrics the continuous engine adds (per-request TTFT, queue
+delay, overlapped admissions) from real measured steps on this host (reduced
+configs) — the measurement side of the Table 2 methodology;
+benchmarks/table2_end_to_end.py compares these against the analytical model.
+
+``--mode drain`` runs the legacy drain-then-refill baseline for A/B
+comparison (late arrivals starve until the whole batch empties — DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -20,24 +25,34 @@ from repro.models.sharding import ShardingCtx, operator_centric, sub_operator
 from repro.runtime.serving import Request, ServingEngine
 
 
+def make_requests(cfg, n_requests: int, prompt_len: int, max_new: int,
+                  seed: int = 0, arrival_every: int = 0):
+    """Synthetic workload; ``arrival_every`` > 0 staggers arrivals so request
+    i becomes visible at decode step i*arrival_every (mid-serve admission)."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, prompt_len,
+                                        dtype=np.int32),
+                    max_new_tokens=max_new,
+                    arrival_step=i * arrival_every)
+            for i in range(n_requests)]
+
+
 def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
           max_new: int, *, reduced: bool = True, seed: int = 0,
-          executor: str = "sub_operator"):
+          executor: str = "sub_operator", mode: str = "auto",
+          arrival_every: int = 0):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
     api = build_model(cfg)
     ctx = ShardingCtx(None, sub_operator() if executor == "sub_operator"
                       else operator_centric())
-    rng = np.random.default_rng(seed)
     import jax
     params = api.init(jax.random.key(seed))
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size, prompt_len,
-                                        dtype=np.int32),
-                    max_new_tokens=max_new)
-            for i in range(n_requests)]
-    eng = ServingEngine(api, ctx, batch_slots, prompt_len)
+    reqs = make_requests(cfg, n_requests, prompt_len, max_new, seed,
+                         arrival_every)
+    eng = ServingEngine(api, ctx, batch_slots, prompt_len, mode=mode)
     stats = eng.run(params, reqs)
     return stats
 
@@ -50,10 +65,25 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "continuous", "drain"))
+    ap.add_argument("--arrival-every", type=int, default=0,
+                    help="stagger: request i arrives at step i*N (0 = all "
+                         "at start)")
     args = ap.parse_args(argv)
     stats = serve(args.arch, args.requests, args.batch, args.prompt_len,
-                  args.max_new)
+                  args.max_new, mode=args.mode,
+                  arrival_every=args.arrival_every)
+    per_req = stats.pop("per_request")
+    rt = stats.pop("runtime")
     print("serve stats:", stats)
+    print("per-request:")
+    for m in per_req:
+        print(f"  rid={m['rid']:3d} admit@{m['admit_step']:4d} "
+              f"queue={m['queue_delay_ms']:8.1f}ms "
+              f"ttft={m['ttft_ms']:8.1f}ms tpot={m['tpot_ms']:6.2f}ms")
+    print("runtime:", {k: {kk: round(vv, 3) if isinstance(vv, float) else vv
+                           for kk, vv in v.items()} for k, v in rt.items()})
 
 
 if __name__ == "__main__":

@@ -31,6 +31,16 @@ class ModelAPI(NamedTuple):
     decode: Callable
     init_caches: Callable
     input_specs: Callable
+    # -- continuous-batching extensions (None → family only serves in the
+    #    drain-then-refill mode; see runtime/serving.py + DESIGN.md §7) -----
+    # decode_slotted(params, caches, tokens, positions, active, ctx)
+    #   → (caches, logits): per-slot cursors + active mask through decode
+    decode_slotted: Optional[Callable] = None
+    # write_slot(caches, single, slot) → caches: admit a batch-1 prefill
+    #   into one batch slot (slot is traced — one program for all slots)
+    write_slot: Optional[Callable] = None
+    # reset_slot(caches, slot) → caches: zero a retired slot's state
+    reset_slot: Optional[Callable] = None
 
 
 # ---------------------------------------------------------------------------
@@ -59,12 +69,28 @@ def _build_transformer(cfg: ModelConfig) -> ModelAPI:
     def init_caches(batch, max_len):
         return T.make_cache(cfg, batch, max_len)
 
+    def decode_slotted(params, caches, tokens, positions, active, ctx):
+        return T.decode_step_slotted(params, caches, tokens, positions,
+                                     active, cfg, ctx)
+
+    from repro.kv.cache import reset_slot, write_slot_kv
+
     return ModelAPI(cfg, lambda k: T.init_params(k, cfg), loss, prefill,
-                    decode, init_caches, _lm_input_specs(cfg))
+                    decode, init_caches, _lm_input_specs(cfg),
+                    decode_slotted=decode_slotted,
+                    write_slot=write_slot_kv,
+                    reset_slot=reset_slot)
 
 
 def _build_ssm(cfg: ModelConfig) -> ModelAPI:
     from repro.models import ssm as S
+    from repro.kv.state import mask_slots, reset_slot_tree, write_slot_tree
+
+    def decode_slotted(params, state, tokens, positions, active, ctx):
+        # attention-free: the recurrence is position-independent, so the
+        # per-slot cursors only gate WHICH rows commit their state update
+        new_state, logits = S.decode_step(params, state, tokens, cfg, ctx)
+        return mask_slots(active, new_state, state), logits
 
     return ModelAPI(
         cfg,
@@ -73,7 +99,10 @@ def _build_ssm(cfg: ModelConfig) -> ModelAPI:
         lambda p, b, ctx: S.prefill(p, b["tokens"], cfg, ctx),
         lambda p, c, t, ctx: S.decode_step(p, c, t, cfg, ctx),
         lambda batch, max_len: S.make_state(cfg, batch),
-        _lm_input_specs(cfg))
+        _lm_input_specs(cfg),
+        decode_slotted=decode_slotted,
+        write_slot=write_slot_tree,
+        reset_slot=reset_slot_tree)
 
 
 def _build_hybrid(cfg: ModelConfig) -> ModelAPI:

@@ -140,6 +140,45 @@ def block_decode(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
     return x, (k_l, v_l, ks_l, vs_l)
 
 
+def block_decode_slotted(p: dict, x: jax.Array, cfg: ModelConfig,
+                         ctx: ShardingCtx, kv_slices: Tuple,
+                         positions: jax.Array, active: jax.Array,
+                         window: int = 0) -> Tuple[jax.Array, Tuple]:
+    """``block_decode`` with PER-ROW cursors (continuous batching): row b
+    appends at its own ``positions[b]`` and attends over its own prefix.
+    Inactive rows write nothing (their KV slice stays byte-identical); their
+    activations still flow — static shapes — but the engine masks the
+    resulting logits.
+
+    Deliberately a twin of ``block_decode`` rather than its replacement: the
+    vmapped per-row writes and (B,S) masks cost measurably more than the
+    shared-cursor path, which stays on the uniform fast form (drain serving,
+    pipeline decode). Keep the bodies in sync — the equality
+    decode_step == decode_step_slotted under a uniform cursor is enforced by
+    tests/test_serving_scheduler.py."""
+    from repro.kv.cache import (batch_valid_mask, layer_append_slotted,
+                                layer_read)
+    B = x.shape[0]
+    k_l, v_l, ks_l, vs_l = kv_slices
+    h = common.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
+    h = ctx.ann(h, "batch", "seq", "embed")
+    q, k, v = qkv_project(p["attn"], h, cfg, ctx, positions[:, None])
+    k_l, v_l, ks_l, vs_l = layer_append_slotted(
+        k_l, v_l, ks_l, vs_l, k[:, 0], v[:, 0], positions, window, active)
+    kc, vc = layer_read(k_l, v_l, ks_l, vs_l, dtype=x.dtype)
+    kc = ctx.ann(kc, "batch", "kv_heads", "kv_seq", "head_dim")
+    vc = ctx.ann(vc, "batch", "kv_heads", "kv_seq", "head_dim")
+    mask = batch_valid_mask(k_l.shape[2], window, positions)       # (B,S)
+    o = decode_attention(q[:, 0], kc, vc, mask, ctx)
+    o = common.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
+    x = ctx.ann(x + o, "batch", "seq", "embed_shard")
+    h = common.apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
+    h = ctx.ann(h, "batch", "seq", "embed")
+    f, _ = _mix_ffn(p, h, cfg, ctx, train=False)
+    x = ctx.ann(x + f, "batch", "seq", "embed_shard")
+    return x, (k_l, v_l, ks_l, vs_l)
+
+
 # ---------------------------------------------------------------------------
 # Whole-model parameter init
 # ---------------------------------------------------------------------------
@@ -311,6 +350,49 @@ def decode_step(params, cache: KVCache, tokens: jax.Array, cfg: ModelConfig,
     else:
         (k_new, v_new), (ks_new, vs_new) = ys, (None, None)
     cache = KVCache(k_new, v_new, ks_new, vs_new, pos + 1,
+                    window=cache.window)
+    x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    logits = common.unembed_logits(unembed_table(params, cfg), x, ctx)
+    return cache, logits
+
+
+def decode_step_slotted(params, cache: KVCache, tokens: jax.Array,
+                        positions: jax.Array, active: jax.Array,
+                        cfg: ModelConfig, ctx: ShardingCtx
+                        ) -> Tuple[KVCache, jax.Array]:
+    """Continuous-batching decode step (DESIGN.md §7). tokens/positions/
+    active: (B,). Mirrors ``decode_step`` but each row carries its OWN
+    cursor: row b appends at positions[b] and attends 0..positions[b]; the
+    shared ``cache.length`` is kept only as an upper bound. Equal to
+    ``decode_step`` when all rows share one cursor and are active."""
+    x = common.embed(params["embed"], tokens[:, None], ctx)
+    if cfg.pos == "learned":
+        x = x + jnp.take(params["pos_embed"], positions,
+                         axis=0)[:, None].astype(x.dtype)
+    quant = cache.is_quantized
+
+    def body(h, xs):
+        if quant:
+            lp, k_l, v_l, ks_l, vs_l = xs
+        else:
+            lp, k_l, v_l = xs
+            ks_l = vs_l = None
+        h, (k_l, v_l, ks_l, vs_l) = block_decode_slotted(
+            lp, h, cfg, ctx, (k_l, v_l, ks_l, vs_l), positions, active,
+            window=cache.window)
+        ys = (k_l, v_l, ks_l, vs_l) if quant else (k_l, v_l)
+        return h, ys
+
+    xs = (params["blocks"], cache.k, cache.v) + \
+        ((cache.k_scale, cache.v_scale) if quant else ())
+    x, ys = jax.lax.scan(body, x, xs, unroll=common.scan_unroll())
+    if quant:
+        k_new, v_new, ks_new, vs_new = ys
+    else:
+        (k_new, v_new), (ks_new, vs_new) = ys, (None, None)
+    new_len = jnp.maximum(
+        cache.length, jnp.max(jnp.where(active, positions, 0)) + 1)
+    cache = KVCache(k_new, v_new, ks_new, vs_new, new_len,
                     window=cache.window)
     x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
     logits = common.unembed_logits(unembed_table(params, cfg), x, ctx)

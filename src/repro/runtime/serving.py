@@ -1,14 +1,27 @@
-"""Batched decode serving engine.
+"""Continuous-batching decode serving engine under STATIC shapes.
 
-Decode-centric per the paper ("decoding ... is the long-running steady state
-and dominates execution time"). Static batch slots (static shapes — the AOT
-runtime requirement); finished requests are swapped out between steps, giving
-continuous-batching-lite without dynamic shapes (the paper defers full
-continuous batching to future work, §7.2 — we implement the slot-swap form
-that preserves socket/chip-local hot state).
+The paper's prototype serves a fixed decode batch and defers continuous
+batching to future work (§7.2). This engine closes that gap without leaving
+the cache-resident/static-shape regime the paper's runtime depends on:
 
-Tracks TPOT (time-per-output-token) and per-phase latency, the paper's
-headline metrics (Table 2).
+- the decode batch is a fixed set of SLOTS (static shapes → AOT compile once),
+- a queued request is admitted into any free slot *mid-serve*: a batch-1
+  prefill runs, its cache is written into the slot (``ModelAPI.write_slot``),
+  and the slot's cursor restarts — no drain, no retrace,
+- every row carries its own cursor (``positions``) and an ``active`` mask is
+  threaded through decode (``ModelAPI.decode_slotted``) so retired slots
+  neither write KV nor pollute the argmax,
+- all three step programs (prefill-1, admit, decode) are AOT-compiled through
+  ``StaticRuntime`` — ``stats()`` must show compiles == 1 per step with only
+  ``calls`` growing across admissions (the §4.3 pinned-pool invariant).
+
+The previous drain-then-refill loop is kept as ``mode="drain"`` — it is the
+baseline the continuous scheduler is measured against (late-arrival TTFT) and
+the fallback for model families without slotted support (DESIGN.md §7).
+
+Per-request accounting: queue delay (enqueue→admit), TTFT (enqueue→first
+token), TPOT (steady-state inter-token time) — the serving-side metrics of
+the paper's Table 2 methodology.
 """
 from __future__ import annotations
 
@@ -20,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.registry import ModelAPI
+from repro.models.registry import DECODE_SLACK, ModelAPI
 from repro.models.sharding import ShardingCtx
 from repro.runtime.static_runtime import StaticRuntime
 
@@ -30,39 +43,73 @@ class Request:
     rid: int
     prompt: np.ndarray                  # (S,) int32
     max_new_tokens: int
+    arrival_step: int = 0               # decode step at which it reaches the queue
     generated: List[int] = field(default_factory=list)
     t_enqueue: float = 0.0
+    t_admitted: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    admit_step: int = -1                # decode step at which it got a slot
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
 
+    def metrics(self) -> Dict[str, Any]:
+        n = len(self.generated)
+        return {
+            "rid": self.rid,
+            "tokens": n,
+            "arrival_step": self.arrival_step,
+            "admit_step": self.admit_step,
+            "queue_delay_ms": max(0.0, self.t_admitted - self.t_enqueue) * 1e3,
+            "ttft_ms": max(0.0, self.t_first_token - self.t_enqueue) * 1e3,
+            "tpot_ms": ((self.t_done - self.t_first_token) / (n - 1) * 1e3
+                        if n > 1 else 0.0),
+        }
+
 
 class ServingEngine:
-    """Greedy decoding over fixed batch slots."""
+    """Greedy decoding over fixed batch slots with per-slot admission.
+
+    mode="continuous": slot-level scheduler (requires the ModelAPI slotted
+    extensions); mode="drain": legacy drain-then-refill baseline;
+    mode="auto": continuous when the family supports it.
+
+    ``raw_decode`` (optional): an eager decode-step callable
+    ``(params, caches, tokens, positions, active) -> (caches, logits)`` used
+    INSTEAD of the AOT-compiled slotted decode — the hook through which the
+    WA-disaggregated backend (two submeshes, python-orchestrated routing)
+    plugs into the same admission scheduler.
+    """
 
     def __init__(self, api: ModelAPI, ctx: ShardingCtx, batch_slots: int,
                  prompt_len: int, runtime: Optional[StaticRuntime] = None,
-                 greedy: bool = True):
+                 greedy: bool = True, mode: str = "auto",
+                 max_new_cap: int = DECODE_SLACK,
+                 raw_decode: Optional[Callable] = None):
+        if mode not in ("auto", "continuous", "drain"):
+            raise ValueError(mode)
+        # continuous mode always needs write_slot (admission); the decode
+        # half comes from either api.decode_slotted or a raw_decode override
+        slotted_ok = api.write_slot is not None and (
+            api.decode_slotted is not None or raw_decode is not None)
+        if mode == "continuous" and not slotted_ok:
+            raise ValueError(
+                f"{api.config.family} family has no slotted decode support")
         self.api = api
         self.ctx = ctx
         self.slots = batch_slots
         self.prompt_len = prompt_len
+        self.max_new_cap = min(max_new_cap, DECODE_SLACK)
+        self.mode = ("continuous" if slotted_ok else "drain") \
+            if mode == "auto" else mode
         self.rt = runtime or StaticRuntime()
         self.queue: List[Request] = []
-        self.active: List[Optional[Request]] = [None] * batch_slots
         self.tpot_samples: List[float] = []
         self._params = None
-        self._caches = None
-        self._last_tokens = None
-        # static-runtime dispatch: trace once, call forever (§4.3 analogue)
-        self._prefill_jit = jax.jit(
-            lambda p, b: self.api.prefill(p, b, self.ctx))
-        self._decode_jit = jax.jit(
-            lambda p, c, t: self.api.decode(p, c, t, self.ctx),
-            donate_argnums=(1,))
+        self._raw_decode = raw_decode
+        self._prepared = False
 
     # ------------------------------------------------------------------
     def load(self, params):
@@ -73,37 +120,84 @@ class ServingEngine:
         self.queue.append(req)
 
     # ------------------------------------------------------------------
-    def _prefill_batch(self):
-        """Fill every empty slot, then prefill the whole batch at once."""
-        newly = []
-        for i in range(self.slots):
-            if self.active[i] is None and self.queue:
-                self.active[i] = self.queue.pop(0)
-                newly.append(i)
-        if not any(self.active):
-            return False
-        toks = np.zeros((self.slots, self.prompt_len), np.int32)
-        for i, r in enumerate(self.active):
-            if r is not None:
-                toks[i, :len(r.prompt)] = r.prompt[:self.prompt_len]
-        batch = {"tokens": jnp.asarray(toks)}
-        self._caches, logits = self._prefill_jit(self._params, batch)
-        nxt = jnp.argmax(logits[:, -1], axis=-1)
-        self._record_tokens(nxt)
-        self._last_tokens = nxt.astype(jnp.int32)
-        return True
+    # AOT step programs — compiled ONCE at first run; admission/decode are
+    # cached-executable calls from then on (zero retracing, §4.3 analogue).
+    # ------------------------------------------------------------------
+    def _prepare_continuous(self, params):
+        api, ctx = self.api, self.ctx
+        B, P = self.slots, self.prompt_len
 
-    def _record_tokens(self, nxt):
-        now = time.monotonic()
-        arr = np.asarray(nxt)
-        for i, r in enumerate(self.active):
-            if r is None or r.done:
-                continue
-            if not r.generated:
-                r.t_first_token = now
-            r.generated.append(int(arr[i]))
-            if r.done:
-                r.t_done = now
+        def prefill1_fn(p, toks):
+            caches, logits = api.prefill(p, {"tokens": toks}, ctx)
+            return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+        def admit_fn(caches, single, slot):
+            return api.write_slot(caches, single, slot)
+
+        def postprocess(logits, positions, active):
+            # active-slot mask: retired slots emit a fixed token id 0 and
+            # never advance — finished requests cannot pollute the stream
+            nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            return jnp.where(active, nxt, 0), \
+                positions + active.astype(jnp.int32)
+
+        def decode_fn(p, caches, tokens, positions, active):
+            caches, logits = api.decode_slotted(p, caches, tokens, positions,
+                                                active, ctx)
+            return (caches,) + postprocess(logits, positions, active)
+
+        self._caches = api.init_caches(B, P + self.max_new_cap)
+        toks1 = jnp.zeros((1, P), jnp.int32)
+        single_aval, _ = jax.eval_shape(prefill1_fn, params, toks1)
+        pos0 = jnp.zeros((B,), jnp.int32)
+        act0 = jnp.zeros((B,), bool)
+        tok0 = jnp.zeros((B,), jnp.int32)
+        self._prefill1 = self.rt.compile_step(
+            "serve_prefill1", prefill1_fn, (params, toks1))
+        self._admit = self.rt.compile_step(
+            "serve_admit", admit_fn,
+            (self._caches, single_aval, jnp.zeros((), jnp.int32)),
+            donate_argnums=(0,))
+        if self._raw_decode is None:
+            self._decode = self.rt.compile_step(
+                "serve_decode", decode_fn,
+                (params, self._caches, tok0, pos0, act0),
+                donate_argnums=(1,))
+        else:
+            raw = self._raw_decode
+
+            def decode_eager(p, caches, tokens, positions, active):
+                caches, logits = raw(p, caches, tokens, positions, active)
+                return (caches,) + postprocess(logits, positions, active)
+            self._decode = decode_eager
+
+    def _prepare_drain(self, params):
+        api, ctx = self.api, self.ctx
+
+        def prefill_fn(p, toks):
+            caches, logits = api.prefill(p, {"tokens": toks}, ctx)
+            return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+        def decode_fn(p, caches, tokens):
+            caches, logits = api.decode(p, caches, tokens, ctx)
+            return caches, jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+
+        toks0 = jnp.zeros((self.slots, self.prompt_len), jnp.int32)
+        caches_aval, tok_aval = jax.eval_shape(prefill_fn, params, toks0)
+        self._prefill_b = self.rt.compile_step(
+            "serve_prefill_batch", prefill_fn, (params, toks0))
+        self._decode_b = self.rt.compile_step(
+            "serve_decode_drain", decode_fn, (params, caches_aval, tok_aval),
+            donate_argnums=(1,))
+
+    def _prepare(self, params):
+        if self._prepared:
+            return
+        if self.mode == "continuous":
+            self._prepare_continuous(params)
+        else:
+            self._prepare_drain(params)
+        self._prepared = True
 
     # ------------------------------------------------------------------
     def run(self, params, requests: List[Request],
@@ -111,38 +205,171 @@ class ServingEngine:
         """Serve all requests to completion; returns latency stats."""
         self.load(params)
         for r in requests:
-            self.submit(r)
+            if r.max_new_tokens > self.max_new_cap:
+                raise ValueError(
+                    f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
+                    f"exceeds cache slack {self.max_new_cap}")
+        self._prepare(params)
+        if self.mode == "continuous":
+            return self._run_continuous(params, requests, max_steps)
+        return self._run_drain(params, requests, max_steps)
+
+    def _pad_prompt(self, r: Request) -> np.ndarray:
+        """(prompt_len,) — prompt truncated/zero-padded to the static width."""
+        row = np.zeros((self.prompt_len,), np.int32)
+        row[:len(r.prompt)] = r.prompt[:self.prompt_len]
+        return row
+
+    # ------------------------------------------------------------------
+    def _run_continuous(self, params, requests, max_steps):
+        pending = sorted(requests, key=lambda r: r.arrival_step)
+        active_req: List[Optional[Request]] = [None] * self.slots
+        positions = np.zeros((self.slots,), np.int32)
+        last_tok = np.zeros((self.slots,), np.int32)
+        caches = self._caches
         done: List[Request] = []
-        steps = 0
-        while (self.queue or any(r is not None for r in self.active)) \
-                and steps < max_steps:
-            if self._caches is None:
-                if not self._prefill_batch():
-                    break
+        steps = admissions = overlapped = 0
+        while pending or self.queue or any(r is not None for r in active_req):
+            if steps >= max_steps:
+                break
+            while pending and pending[0].arrival_step <= steps:
+                self.submit(pending.pop(0))
+            # -- admission: fill EVERY free slot from the queue, no drain --
+            # "overlapped" = admitted while the batch was already live at the
+            # start of this round (cold-start fills at step 0 don't count)
+            batch_live = any(a is not None for a in active_req)
+            for i in range(self.slots):
+                if active_req[i] is not None or not self.queue:
+                    continue
+                r = self.queue.pop(0)
+                if batch_live:
+                    overlapped += 1
+                r.t_admitted = time.monotonic()
+                r.admit_step = steps
+                single, first = self._prefill1(
+                    params, jnp.asarray(self._pad_prompt(r)[None]))
+                caches = self._admit(caches, single,
+                                     jnp.asarray(i, jnp.int32))
+                first.block_until_ready()
+                r.t_first_token = time.monotonic()
+                r.generated.append(int(np.asarray(first)[0]))
+                admissions += 1
+                if r.done:                       # max_new_tokens == 1
+                    r.t_done = r.t_first_token
+                    done.append(r)
+                    continue
+                active_req[i] = r
+                positions[i] = self.prompt_len
+                last_tok[i] = r.generated[-1]
+            active = np.array([a is not None for a in active_req])
+            if not active.any():
+                steps += 1                       # idle tick: await arrivals
+                continue
+            # -- one fused decode step over all slots ----------------------
             t0 = time.monotonic()
-            self._caches, logits = self._decode_jit(
-                self._params, self._caches, self._last_tokens)
-            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-            nxt.block_until_ready()
+            caches, nxt, new_pos = self._decode(
+                params, caches, jnp.asarray(last_tok),
+                jnp.asarray(positions), jnp.asarray(active))
+            nxt = np.asarray(nxt)
             self.tpot_samples.append(time.monotonic() - t0)
-            self._record_tokens(nxt)
-            self._last_tokens = nxt
+            positions = np.asarray(new_pos).copy()
+            last_tok = nxt.copy()
             steps += 1
-            # retire finished requests; refill slots → next loop prefills
-            for i, r in enumerate(self.active):
+            now = time.monotonic()
+            for i, r in enumerate(active_req):
+                if r is None:
+                    continue
+                r.generated.append(int(nxt[i]))
+                if r.done:
+                    r.t_done = now
+                    done.append(r)
+                    active_req[i] = None         # freed → admitted next step
+        self._caches = caches
+        return self._stats(done, steps, admissions, overlapped)
+
+    # ------------------------------------------------------------------
+    def _run_drain(self, params, requests, max_steps):
+        """Legacy baseline: prefill only when the WHOLE batch has drained —
+        one long request starves every queued request (kept for comparison
+        and for families without slotted support)."""
+        pending = sorted(requests, key=lambda r: r.arrival_step)
+        active_req: List[Optional[Request]] = [None] * self.slots
+        caches = None
+        last = None
+        done: List[Request] = []
+        steps = admissions = 0
+        while pending or self.queue or any(r is not None for r in active_req):
+            if steps >= max_steps:
+                break
+            while pending and pending[0].arrival_step <= steps:
+                self.submit(pending.pop(0))
+            if caches is None:
+                toks = np.zeros((self.slots, self.prompt_len), np.int32)
+                for i in range(self.slots):
+                    if active_req[i] is None and self.queue:
+                        r = self.queue.pop(0)
+                        r.t_admitted = time.monotonic()
+                        r.admit_step = steps
+                        active_req[i] = r
+                        admissions += 1
+                    if active_req[i] is not None:
+                        toks[i] = self._pad_prompt(active_req[i])
+                if not any(r is not None for r in active_req):
+                    steps += 1                   # idle tick: await arrivals
+                    continue
+                caches, first = self._prefill_b(params, jnp.asarray(toks))
+                first.block_until_ready()
+                now = time.monotonic()
+                first = np.asarray(first)
+                for i, r in enumerate(active_req):
+                    if r is not None and not r.generated:
+                        r.t_first_token = now
+                        r.generated.append(int(first[i]))
+                        if r.done:
+                            r.t_done = now
+                last = jnp.asarray(first.astype(np.int32))
+            t0 = time.monotonic()
+            caches, nxt = self._decode_b(params, caches, last)
+            nxt_np = np.asarray(nxt)
+            self.tpot_samples.append(time.monotonic() - t0)
+            last = nxt
+            steps += 1
+            now = time.monotonic()
+            for i, r in enumerate(active_req):
+                if r is None or r.done:
+                    continue
+                r.generated.append(int(nxt_np[i]))
+                if r.done:
+                    r.t_done = now
+            for i, r in enumerate(active_req):
                 if r is not None and r.done:
                     done.append(r)
-                    self.active[i] = None
-            if all(r is None for r in self.active):
-                self._caches = None      # batch drained → allow re-prefill
+                    active_req[i] = None
+            if all(r is None for r in active_req):
+                caches = None                    # drained → allow re-prefill
+        return self._stats(done, steps, admissions, 0)
+
+    # ------------------------------------------------------------------
+    def _stats(self, done, steps, admissions, overlapped) -> Dict[str, Any]:
         tp = np.array(self.tpot_samples[1:] or [0.0])
+        per_req = [r.metrics() for r in sorted(done, key=lambda r: r.rid)]
+        ttfts = np.array([m["ttft_ms"] for m in per_req] or [0.0])
+        qd = np.array([m["queue_delay_ms"] for m in per_req] or [0.0])
         return {
+            "mode": self.mode,
             "completed": len(done),
             "decode_steps": steps,
+            "admissions": admissions,
+            "overlapped_admissions": overlapped,
             "tpot_mean_ms": float(tp.mean() * 1e3),
             "tpot_p50_ms": float(np.percentile(tp, 50) * 1e3) if len(tp) else 0.0,
             "tpot_p99_ms": float(np.percentile(tp, 99) * 1e3) if len(tp) else 0.0,
+            "ttft_mean_ms": float(ttfts.mean()),
+            "ttft_p99_ms": float(np.percentile(ttfts, 99)),
+            "queue_delay_mean_ms": float(qd.mean()),
             "throughput_tok_s": float(
                 sum(len(r.generated) for r in done)
                 / max(sum(self.tpot_samples), 1e-9)),
+            "per_request": per_req,
+            "runtime": self.rt.stats(),
         }

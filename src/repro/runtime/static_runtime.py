@@ -40,7 +40,8 @@ class CompiledStep:
         return self.compiled(*args)
 
     def cost_analysis(self):
-        return self.compiled.cost_analysis()
+        from repro.core.compat import cost_analysis
+        return cost_analysis(self.compiled)
 
     def memory_analysis(self):
         return self.compiled.memory_analysis()
@@ -92,5 +93,15 @@ class StaticRuntime:
         return out
 
     def stats(self) -> Dict[str, Dict]:
-        return {name: {"compile_s": s.compile_s, "calls": s.calls}
-                for (name, *_), s in self._cache.items()}
+        """Per-step-name compile/call accounting. ``compiles`` counts distinct
+        (mesh, signature) variants — a steady-state serving loop must show
+        compiles == 1 per step with only ``calls`` growing (zero retracing
+        across admissions; the §4.3 pinned-pool invariant)."""
+        out: Dict[str, Dict] = {}
+        for (name, *_), s in self._cache.items():
+            rec = out.setdefault(name,
+                                 {"compiles": 0, "compile_s": 0.0, "calls": 0})
+            rec["compiles"] += 1
+            rec["compile_s"] += s.compile_s
+            rec["calls"] += s.calls
+        return out

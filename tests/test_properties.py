@@ -1,7 +1,15 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skipped wholesale when ``hypothesis`` is not installed (it is a dev extra —
+see requirements-dev.txt), so the tier-1 suite stays runnable from a bare
+environment.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.analytical import (EPYC_9684X, baseline_llama_cpp,

@@ -1,0 +1,265 @@
+"""Continuous-batching scheduler tests (DESIGN.md §7).
+
+Covers the four scheduler invariants the ISSUE demands:
+- staggered arrivals fill freed slots WITHOUT a batch drain,
+- late arrivals see strictly earlier admission (and therefore better TTFT)
+  than under the drain-then-refill baseline,
+- the active-slot mask keeps retired slots from writing KV / emitting tokens,
+- zero retracing across admissions (StaticRuntime.stats(): compiles == 1).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED
+from repro.models import NULL_CTX, build_model
+from repro.runtime.serving import Request, ServingEngine
+from repro.runtime.static_runtime import StaticRuntime
+
+PROMPT_LEN = 8
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    return cfg, api, params
+
+
+def _requests(cfg, plan, seed=0):
+    """plan: list of (max_new, arrival_step)."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                        dtype=np.int32),
+                    max_new_tokens=new, arrival_step=arr)
+            for i, (new, arr) in enumerate(plan)]
+
+
+# ---------------------------------------------------------------------------
+# admission without drain
+# ---------------------------------------------------------------------------
+
+def test_staggered_arrivals_fill_freed_slots_without_drain(dense):
+    cfg, api, params = dense
+    # rid0 short, rid1 long, rid2 arrives mid-serve: rid2 must take rid0's
+    # freed slot WHILE rid1 is still decoding (no drain).
+    reqs = _requests(cfg, [(3, 0), (12, 0), (3, 2)])
+    eng = ServingEngine(api, NULL_CTX, batch_slots=2, prompt_len=PROMPT_LEN,
+                        mode="continuous")
+    stats = eng.run(params, reqs, max_steps=200)
+    assert stats["completed"] == 3
+    assert stats["overlapped_admissions"] >= 1
+    long_done_step = reqs[1].admit_step + reqs[1].max_new_tokens
+    assert reqs[2].admit_step < long_done_step, \
+        "late request waited for the batch to drain"
+    for r in reqs:
+        assert len(r.generated) == r.max_new_tokens
+
+
+def test_continuous_beats_drain_admission_for_late_arrivals(dense):
+    cfg, api, params = dense
+    plan = [(2, 0), (14, 0), (2, 3)]
+    cont = _requests(cfg, plan)
+    drain = _requests(cfg, plan)
+    s_cont = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN,
+                           mode="continuous").run(params, cont, max_steps=300)
+    s_drain = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN,
+                            mode="drain").run(params, drain, max_steps=300)
+    assert s_cont["completed"] == s_drain["completed"] == 3
+    # drain: rid2 waits until BOTH initial requests finish; continuous: it
+    # takes rid0's slot as soon as it frees
+    assert cont[2].admit_step < drain[2].admit_step
+    assert drain[2].admit_step >= drain[1].max_new_tokens - 1
+    # both modes produce identical greedy tokens for identical prompts
+    for a, b in zip(cont, drain):
+        assert a.generated == b.generated
+
+
+def test_generation_matches_standalone_greedy_decode(dense):
+    """Admission into a mid-serve slot must not perturb the math: every
+    request's tokens equal a standalone batch-1 prefill+decode."""
+    cfg, api, params = dense
+    reqs = _requests(cfg, [(5, 0), (5, 0), (5, 2), (5, 4)])
+
+    def ref(prompt):
+        caches, logits = jax.jit(lambda p, b: api.prefill(p, b, NULL_CTX))(
+            params, {"tokens": jnp.asarray(prompt[None])})
+        cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        out = [int(cur[0])]
+        step = jax.jit(lambda p, c, t: api.decode(p, c, t, NULL_CTX))
+        for _ in range(4):
+            caches, logits = step(params, caches, cur)
+            cur = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            out.append(int(cur[0]))
+        return out
+
+    refs = [ref(r.prompt) for r in reqs]
+    eng = ServingEngine(api, NULL_CTX, batch_slots=2, prompt_len=PROMPT_LEN,
+                        mode="continuous")
+    stats = eng.run(params, reqs, max_steps=200)
+    assert stats["completed"] == 4
+    for r, want in zip(reqs, refs):
+        assert r.generated == want, r.rid
+
+
+# ---------------------------------------------------------------------------
+# active-slot masking
+# ---------------------------------------------------------------------------
+
+def test_active_mask_freezes_retired_slot_kv(dense):
+    """decode_slotted with active=[True, False]: row 1's KV slice must stay
+    byte-identical (retired slots write nothing)."""
+    cfg, api, params = dense
+    toks = jnp.ones((2, PROMPT_LEN), jnp.int32)
+    caches, logits = api.prefill(params, {"tokens": toks}, NULL_CTX)
+    positions = jnp.array([PROMPT_LEN, PROMPT_LEN], jnp.int32)
+    active = jnp.array([True, False])
+    cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    new, _ = jax.jit(lambda p, c, t: api.decode_slotted(
+        p, c, t, positions, active, NULL_CTX))(params, caches, cur)
+    k0, k1 = np.asarray(caches.k), np.asarray(new.k)
+    v0, v1 = np.asarray(caches.v), np.asarray(new.v)
+    # retired row frozen…
+    np.testing.assert_array_equal(k0[:, 1], k1[:, 1])
+    np.testing.assert_array_equal(v0[:, 1], v1[:, 1])
+    # …while the active row appended at its cursor
+    assert not np.array_equal(k0[:, 0], k1[:, 0])
+
+
+def test_finished_requests_emit_exactly_max_new(dense):
+    cfg, api, params = dense
+    reqs = _requests(cfg, [(2, 0), (9, 0)])
+    eng = ServingEngine(api, NULL_CTX, batch_slots=2, prompt_len=PROMPT_LEN,
+                        mode="continuous")
+    eng.run(params, reqs, max_steps=100)
+    # rid0 retires at step 1 but the loop runs to step 8 — the mask must
+    # keep it from accumulating tokens past its budget
+    assert len(reqs[0].generated) == 2
+    assert len(reqs[1].generated) == 9
+
+
+def test_slotted_decode_equals_joint_decode_when_uniform(dense):
+    """With one shared cursor and all rows active, decode_slotted IS
+    decode — the continuous path costs nothing in fidelity."""
+    cfg, api, params = dense
+    toks = jax.random.randint(jax.random.key(1), (2, PROMPT_LEN), 0,
+                              cfg.vocab_size)
+    c0, logits = api.prefill(params, {"tokens": toks}, NULL_CTX)
+    cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    c_ref, want = api.decode(params, c0, cur, NULL_CTX)
+    c1, logits2 = api.prefill(params, {"tokens": toks}, NULL_CTX)
+    positions = jnp.full((2,), PROMPT_LEN, jnp.int32)
+    c_got, got = api.decode_slotted(params, c1, cur, positions,
+                                    jnp.array([True, True]), NULL_CTX)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(np.asarray(c_ref.k), np.asarray(c_got.k))
+
+
+# ---------------------------------------------------------------------------
+# zero retracing across admissions (§4.3 pinned-pool invariant)
+# ---------------------------------------------------------------------------
+
+def test_no_retrace_across_admissions(dense):
+    cfg, api, params = dense
+    rt = StaticRuntime()
+    reqs = _requests(cfg, [(4, 0), (4, 0), (4, 1), (4, 3), (4, 5)])
+    eng = ServingEngine(api, NULL_CTX, batch_slots=2, prompt_len=PROMPT_LEN,
+                        runtime=rt, mode="continuous")
+    stats = eng.run(params, reqs, max_steps=200)
+    assert stats["completed"] == 5
+    assert stats["admissions"] == 5
+    rs = stats["runtime"]
+    assert set(rs) == {"serve_prefill1", "serve_admit", "serve_decode"}
+    for name, rec in rs.items():
+        assert rec["compiles"] == 1, (name, rec)   # zero retracing
+    assert rs["serve_prefill1"]["calls"] == 5
+    assert rs["serve_admit"]["calls"] == 5
+    assert rs["serve_decode"]["calls"] == stats["decode_steps"]
+
+
+# ---------------------------------------------------------------------------
+# per-request accounting + ssm family
+# ---------------------------------------------------------------------------
+
+def test_per_request_metrics_present(dense):
+    cfg, api, params = dense
+    reqs = _requests(cfg, [(3, 0), (3, 2)])
+    stats = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN).run(
+        params, reqs, max_steps=100)
+    assert stats["mode"] == "continuous"
+    assert len(stats["per_request"]) == 2
+    for m in stats["per_request"]:
+        assert m["ttft_ms"] > 0
+        assert m["tpot_ms"] >= 0
+        assert m["queue_delay_ms"] >= 0
+        assert m["admit_step"] >= 0
+
+
+def test_ssm_family_serves_continuously():
+    """Attention-free states admit per-slot too (write_slot_tree); tokens
+    must match standalone generation despite staggered admission."""
+    cfg = ASSIGNED["mamba2-1.3b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, PROMPT_LEN, dtype=np.int32)
+               for _ in range(3)]
+
+    def ref(prompt):
+        state, logits = jax.jit(lambda p, b: api.prefill(p, b, NULL_CTX))(
+            params, {"tokens": jnp.asarray(prompt[None])})
+        cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        out = [int(cur[0])]
+        step = jax.jit(lambda p, c, t: api.decode(p, c, t, NULL_CTX))
+        for _ in range(3):
+            state, logits = step(params, state, cur)
+            cur = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            out.append(int(cur[0]))
+        return out
+
+    refs = [ref(p) for p in prompts]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=4, arrival_step=2 * i)
+            for i, p in enumerate(prompts)]
+    eng = ServingEngine(api, NULL_CTX, batch_slots=2, prompt_len=PROMPT_LEN)
+    stats = eng.run(params, reqs, max_steps=100)
+    assert stats["mode"] == "continuous"
+    assert stats["completed"] == 3
+    for r, want in zip(reqs, refs):
+        assert r.generated == want, r.rid
+
+
+def test_reset_slot_zeroes_one_slot_only(dense):
+    cfg, api, params = dense
+    toks = jnp.ones((2, PROMPT_LEN), jnp.int32)
+    caches, _ = api.prefill(params, {"tokens": toks}, NULL_CTX)
+    out = jax.jit(lambda c: api.reset_slot(c, jnp.asarray(1, jnp.int32)))(
+        caches)
+    assert not np.asarray(out.k[:, 1]).any()
+    np.testing.assert_array_equal(np.asarray(out.k[:, 0]),
+                                  np.asarray(caches.k[:, 0]))
+
+
+def test_reset_slot_tree_zeroes_recurrent_state():
+    cfg = ASSIGNED["mamba2-1.3b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    toks = jnp.ones((2, PROMPT_LEN), jnp.int32)
+    state, _ = api.prefill(params, {"tokens": toks}, NULL_CTX)
+    out = jax.jit(lambda s: api.reset_slot(s, jnp.asarray(0, jnp.int32)))(
+        state)
+    assert not np.asarray(out.h[:, 0]).any()
+    np.testing.assert_array_equal(np.asarray(out.h[:, 1]),
+                                  np.asarray(state.h[:, 1]))
+
+
+def test_unsupported_family_falls_back_to_drain():
+    cfg = ASSIGNED["recurrentgemma-9b"].reduced()
+    api = build_model(cfg)
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="auto")
+    assert eng.mode == "drain"
+    with pytest.raises(ValueError):
+        ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous")
