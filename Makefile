@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke lint check
+.PHONY: test test-fast bench-smoke bench-serve lint check
 
 test:            ## tier-1 verify (full suite, fail fast)
 	python -m pytest -x -q
@@ -11,7 +11,10 @@ test-fast:       ## skip the slow multi-device subprocess tests
 	python -m pytest -x -q --ignore=tests/test_distributed.py
 
 bench-smoke:     ## fast benchmark subset (CSV contract sanity)
-	python -m benchmarks.run table2_end_to_end fig10_runtime
+	python -m benchmarks.run table2_end_to_end fig10_runtime serve_tpot
+
+bench-serve:     ## serving TPOT/TTFT per-step vs macro-step (BENCH_serving.json)
+	python -m benchmarks.run serve_tpot
 
 lint:            ## dependency-free syntax gate
 	python -m compileall -q src tests benchmarks examples

@@ -19,6 +19,7 @@ ALL = [
     "fig9_wa_separation",
     "fig10_runtime",
     "fig11_breakdown",
+    "serve_tpot",
     "roofline_report",
     "hillclimb_report",
 ]

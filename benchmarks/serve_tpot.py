@@ -1,0 +1,123 @@
+"""Serving TPOT/TTFT: per-step vs macro-step decode (BENCH_serving.json).
+
+The macro-step engine's claim (ISSUE 3 / DESIGN.md §7): moving the host
+sync from every token to every ``block_size`` tokens removes per-token
+dispatch + transfer stalls from the decode critical path — the step-axis
+analogue of the paper's sub-operator dependency relaxation (§5). This
+benchmark measures exactly that on the CPU dry-run config:
+
+- the SAME staggered-arrival workload through the per-step engine
+  (block_size=1) and the macro-step engine (block_size=8, chunk-bucketed
+  length-aware KV),
+- per-mode TPOT (mean/p50/p99 per micro-step), TTFT, decode-token
+  throughput, host syncs per generated token, and compile counts (every
+  program must compile exactly once),
+- results go to the CSV contract AND to ``BENCH_serving.json`` at the repo
+  root — the committed perf-trajectory artifact.
+
+Each engine is run twice and the SECOND run is reported: AOT compiles all
+land in ``prepare`` (first run), so run 2 is the steady-state the paper's
+§4.3 regime cares about.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit
+
+BLOCK_SIZE = 8
+KV_BUCKET_CHUNK = 32
+PROMPT_LEN = 16
+SLOTS = 2
+MAX_NEW_CAP = 64
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
+
+
+def _workload(cfg, seed=0):
+    # one LONG request holding a slot + shorts arriving mid-serve — the
+    # continuous-scheduler scenario of benchmarks/table2_end_to_end.py
+    rng = np.random.default_rng(seed)
+    from repro.runtime.serving import Request
+    plan = [(48, 0)] + [(8, 4 * i) for i in range(1, 6)]
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                        dtype=np.int32),
+                    max_new_tokens=new, arrival_step=arr)
+            for i, (new, arr) in enumerate(plan)]
+
+
+def run():
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models import build_model
+    from repro.models.sharding import ShardingCtx, sub_operator
+    from repro.runtime.serving import ServingEngine
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    ctx = ShardingCtx(None, sub_operator())
+
+    modes = {
+        "per_step": dict(block_size=1),
+        "macro_step": dict(block_size=BLOCK_SIZE,
+                           kv_bucket_chunk=KV_BUCKET_CHUNK),
+    }
+    report = {"config": {"arch": "qwen2-0.5b (reduced)",
+                         "prompt_len": PROMPT_LEN, "batch_slots": SLOTS,
+                         "max_new_cap": MAX_NEW_CAP,
+                         "block_size": BLOCK_SIZE,
+                         "kv_bucket_chunk": KV_BUCKET_CHUNK}}
+    for name, kw in modes.items():
+        eng = ServingEngine(api, ctx, SLOTS, PROMPT_LEN, mode="continuous",
+                            max_new_cap=MAX_NEW_CAP, **kw)
+        eng.run(params, _workload(cfg), max_steps=1000)   # warm (compiles)
+        st = eng.run(params, _workload(cfg), max_steps=1000)
+        compiles = {k: v["compiles"] for k, v in st["runtime"].items()}
+        report[name] = {
+            "completed": st["completed"],
+            "tpot_mean_ms": st["tpot_mean_ms"],
+            "tpot_p50_ms": st["tpot_p50_ms"],
+            "tpot_p99_ms": st["tpot_p99_ms"],
+            "ttft_mean_ms": st["ttft_mean_ms"],
+            "ttft_p99_ms": st["ttft_p99_ms"],
+            "throughput_tok_s": st["throughput_tok_s"],
+            "decode_tokens": st["decode_tokens"],
+            "host_syncs": st["host_syncs"],
+            "syncs_per_token": st["syncs_per_token"],
+            "tokens_per_macro_step_mean": st["tokens_per_macro_step_mean"],
+            "max_compiles_per_step": max(compiles.values()),
+            "compiles": compiles,
+        }
+        emit(f"serving/{name}/tpot", st["tpot_mean_ms"] * 1e3,
+             f"p50_ms={st['tpot_p50_ms']:.3f};p99_ms={st['tpot_p99_ms']:.3f};"
+             f"throughput_tok_s={st['throughput_tok_s']:.1f}")
+        emit(f"serving/{name}/ttft", st["ttft_mean_ms"] * 1e3,
+             f"p99_ms={st['ttft_p99_ms']:.1f}")
+        emit(f"serving/{name}/host_syncs_per_token",
+             st["syncs_per_token"] * 1e6,
+             f"host_syncs={st['host_syncs']};"
+             f"decode_tokens={st['decode_tokens']};"
+             f"max_compiles_per_step={max(compiles.values())}")
+    speedup = (report["per_step"]["tpot_mean_ms"]
+               / max(report["macro_step"]["tpot_mean_ms"], 1e-9))
+    sync_drop = (report["per_step"]["syncs_per_token"]
+                 / max(report["macro_step"]["syncs_per_token"], 1e-9))
+    report["macro_over_per_step"] = {
+        "tpot_speedup": speedup,
+        "host_sync_reduction": sync_drop,
+    }
+    emit("serving/macro_over_per_step", speedup,
+         f"tpot_speedup={speedup:.2f};host_sync_reduction={sync_drop:.1f}")
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    run()

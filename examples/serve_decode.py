@@ -4,7 +4,7 @@ queue-delay stats — the paper's measurement loop at laptop scale, extended
 with the staggered-arrival workload the drain baseline cannot serve well.
 
     PYTHONPATH=src python examples/serve_decode.py [--arch internlm2-1.8b] \
-        [--arrival-every 4] [--mode drain]
+        [--arrival-every 4] [--mode drain] [--block-size 8]
 """
 import argparse
 
@@ -20,14 +20,21 @@ ap.add_argument("--mode", default="auto",
                 choices=("auto", "continuous", "drain"))
 ap.add_argument("--arrival-every", type=int, default=2,
                 help="request i arrives at decode step i*N (0 = all at start)")
+ap.add_argument("--block-size", type=int, default=8,
+                help="decode micro-steps per host sync (macro-step decode)")
+ap.add_argument("--kv-bucket-chunk", type=int, default=64,
+                help="KV bucket granularity for length-aware decode "
+                     "(block mode; 0 = full extent)")
 args = ap.parse_args()
 
 print(f"serving {args.requests} requests on {args.arch} "
       f"(batch={args.batch_slots}, prompt={args.prompt_len}, "
       f"max_new={args.max_new}, mode={args.mode}, "
-      f"arrival_every={args.arrival_every})")
+      f"arrival_every={args.arrival_every}, block_size={args.block_size})")
 stats = serve(args.arch, args.requests, args.batch_slots, args.prompt_len,
-              args.max_new, mode=args.mode, arrival_every=args.arrival_every)
+              args.max_new, mode=args.mode, arrival_every=args.arrival_every,
+              block_size=args.block_size,
+              kv_bucket_chunk=args.kv_bucket_chunk)
 print(f"\nmode:        {stats['mode']}")
 print(f"completed:   {stats['completed']} "
       f"({stats['admissions']} admissions, "
@@ -37,6 +44,10 @@ print(f"TPOT mean:   {stats['tpot_mean_ms']:.2f} ms "
 print(f"TTFT mean:   {stats['ttft_mean_ms']:.1f} ms "
       f"(p99 {stats['ttft_p99_ms']:.1f}); "
       f"queue delay mean {stats['queue_delay_mean_ms']:.1f} ms")
-print(f"throughput:  {stats['throughput_tok_s']:.1f} tok/s")
+print(f"throughput:  {stats['throughput_tok_s']:.1f} decode tok/s "
+      f"({stats['decode_tokens']} decode tokens)")
+print(f"host syncs:  {stats['host_syncs']} "
+      f"({stats['syncs_per_token']:.3f}/token; "
+      f"{stats['tokens_per_macro_step_mean']:.1f} tok/macro-step)")
 compiles = {k: v["compiles"] for k, v in stats["runtime"].items()}
 print(f"compiles:    {compiles} (must stay 1 per step — zero retracing)")

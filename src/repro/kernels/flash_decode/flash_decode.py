@@ -13,6 +13,13 @@ Grid: (B, n_kv, n_S) — S innermost; per-(batch, kv-head) accumulators
 (o, m, l) are carried as revisited output blocks (interpret-mode friendly).
 GQA folds the head group G = Hq // n_kv into the query block.
 Supports INT8 KV via per-position scales (paper runs fully-INT8 KV).
+
+Length-aware tile skipping: ``kv_limit`` (a traced (1,1) int32 operand — NO
+recompile as cursors advance) is the max live KV extent; every tile whose
+first position is past it skips the whole score/PV body under ``pl.when``.
+In a serving cache padded to prompt_len + slack the live prefix is usually a
+small fraction of S_max, so most tiles retire after one scalar compare —
+the kernel-level twin of the engine's chunk-bucketed program selection.
 """
 from __future__ import annotations
 
@@ -26,8 +33,9 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref,
-            o_ref, m_ref, l_ref, *, n_s: int, scale: float, quantized: bool):
+def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref, lim_ref,
+            o_ref, m_ref, l_ref, *, n_s: int, block_s: int, scale: float,
+            quantized: bool):
     s_idx = pl.program_id(2)
 
     @pl.when(s_idx == 0)
@@ -36,27 +44,31 @@ def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
-    k = k_ref[0, 0].astype(jnp.float32)                  # (S_blk, hd)
-    v = v_ref[0, 0].astype(jnp.float32)
-    if quantized:
-        k = k * ks_ref[0, 0].astype(jnp.float32)         # (S_blk,1) scales
-        v = v * vs_ref[0, 0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    mask = mask_ref[0]                                   # (S_blk,)
-    s = jnp.where(mask[None, :], s, NEG_INF)
+    # tile early-out: positions [s_idx*bs, ...) wholly past every live
+    # cursor contribute nothing — skip scores AND value aggregation
+    @pl.when(s_idx * block_s < lim_ref[0, 0])
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (S_blk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, 0].astype(jnp.float32)     # (S_blk,1) scales
+            v = v * vs_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = mask_ref[0]                               # (S_blk,)
+        s = jnp.where(mask[None, :], s, NEG_INF)
 
-    m_prev = m_ref[0, 0]                                 # (G, 1)
-    m_blk = jnp.max(s, axis=1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_blk)
-    p = jnp.exp(s - m_new)                               # (G, S_blk)
-    corr = jnp.exp(m_prev - m_new)                       # (G, 1)
-    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p, axis=1, keepdims=True)
-    o_ref[0, 0] = (o_ref[0, 0] * corr
-                   + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                                         preferred_element_type=jnp.float32))
-    m_ref[0, 0] = m_new
+        m_prev = m_ref[0, 0]                             # (G, 1)
+        m_blk = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new)                           # (G, S_blk)
+        corr = jnp.exp(m_prev - m_new)                   # (G, 1)
+        l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p, axis=1, keepdims=True)
+        o_ref[0, 0] = (o_ref[0, 0] * corr
+                       + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                             preferred_element_type=jnp.float32))
+        m_ref[0, 0] = m_new
 
     @pl.when(s_idx == n_s - 1)
     def _norm():
@@ -68,9 +80,17 @@ def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref,
 def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                         k_scale, v_scale, mask: jax.Array, *,
                         block_s: int = 512, scale: float = None,
-                        interpret: bool = False) -> jax.Array:
+                        interpret: bool = False,
+                        kv_limit=None) -> jax.Array:
     """q: (B,Hq,hd); k/v: (B,n_kv,S,hd) (int8 ⇒ scales (B,n_kv,S,1) f32,
-    else pass None); mask: (B,S) bool → (B,Hq,hd) f32."""
+    else pass None); mask: (B,S) bool → (B,Hq,hd) f32.
+
+    ``kv_limit``: optional scalar/0-d/(1,1) int32 — max live KV extent over
+    the batch (e.g. ``max(positions) + 1`` after the append). Tiles wholly
+    past it are skipped. TRACED, not static: callers pass a fresh value
+    every step with zero recompilation. The caller must guarantee the mask
+    is already False at positions >= kv_limit — the limit is a fast-path
+    hint, never a semantic mask."""
     B, Hq, hd = q.shape
     _, n_kv, S, _ = k.shape
     G = Hq // n_kv
@@ -84,10 +104,15 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         k_scale = jnp.ones((B, n_kv, 1, 1), jnp.float32)
         v_scale = jnp.ones((B, n_kv, 1, 1), jnp.float32)
     ss = k_scale.shape[2]
+    if kv_limit is None:
+        kv_limit = jnp.full((1, 1), S, jnp.int32)
+    else:
+        kv_limit = jnp.asarray(kv_limit, jnp.int32).reshape(1, 1)
 
     grid = (B, n_kv, n_s)
     o, m, l = pl.pallas_call(
-        functools.partial(_kernel, n_s=n_s, scale=sc, quantized=quantized),
+        functools.partial(_kernel, n_s=n_s, block_s=bs, scale=sc,
+                          quantized=quantized),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
@@ -100,6 +125,7 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                          (lambda b, h, s: (b, h, s, 0)) if quantized
                          else (lambda b, h, s: (b, h, 0, 0))),
             pl.BlockSpec((1, bs), lambda b, h, s: (b, s)),
+            pl.BlockSpec((1, 1), lambda b, h, s: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
@@ -112,5 +138,5 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
             jax.ShapeDtypeStruct((B, n_kv, G, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(qg, k, v, k_scale, v_scale, mask)
+    )(qg, k, v, k_scale, v_scale, mask, kv_limit)
     return o.reshape(B, Hq, hd)

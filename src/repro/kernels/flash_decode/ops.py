@@ -18,15 +18,20 @@ def _on_tpu() -> bool:
                                              "block_s"))
 def flash_decode(q, k, v, mask, k_scale=None, v_scale=None, *,
                  use_pallas: bool = None, interpret: bool = False,
-                 block_s: int = 512) -> jax.Array:
-    """Decode attention. q: (B,Hq,hd); k/v: (B,n_kv,S,hd); mask: (B,S)."""
+                 block_s: int = 512, kv_limit=None) -> jax.Array:
+    """Decode attention. q: (B,Hq,hd); k/v: (B,n_kv,S,hd); mask: (B,S).
+
+    ``kv_limit`` (optional, traced int32): max live KV extent — the Pallas
+    kernel skips tiles wholly past it (length-aware walk); the jnp reference
+    applies it as a mask cut so both paths agree numerically."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas or interpret:
         return flash_decode_pallas(q, k, v, k_scale, v_scale, mask,
                                    block_s=block_s,
-                                   interpret=interpret or not _on_tpu())
+                                   interpret=interpret or not _on_tpu(),
+                                   kv_limit=kv_limit)
     if k_scale is not None:
         k = k.astype(jnp.float32) * k_scale
         v = v.astype(jnp.float32) * v_scale
-    return flash_decode_ref(q, k, v, mask)
+    return flash_decode_ref(q, k, v, mask, kv_limit=kv_limit)

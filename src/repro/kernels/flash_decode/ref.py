@@ -10,12 +10,18 @@ NEG_INF = -1e30
 
 
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
-                     mask: jax.Array, scale: float = None) -> jax.Array:
-    """q: (B,Hq,hd); k/v: (B,n_kv,S,hd); mask: (B,S) bool → (B,Hq,hd) f32."""
+                     mask: jax.Array, scale: float = None,
+                     kv_limit=None) -> jax.Array:
+    """q: (B,Hq,hd); k/v: (B,n_kv,S,hd); mask: (B,S) bool → (B,Hq,hd) f32.
+    ``kv_limit`` folds into the mask (positions >= limit never attend) —
+    the oracle form of the Pallas kernel's tile early-out."""
     B, Hq, hd = q.shape
     n_kv = k.shape[1]
     G = Hq // n_kv
     sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if kv_limit is not None:
+        lim = jnp.asarray(kv_limit, jnp.int32).reshape(())
+        mask = mask & (jnp.arange(k.shape[2], dtype=jnp.int32)[None] < lim)
     qg = q.reshape(B, n_kv, G, hd).astype(jnp.float32)
     s = jnp.einsum("bkgh,bksh->bkgs", qg, k.astype(jnp.float32)) * sc
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)

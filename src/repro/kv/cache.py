@@ -163,6 +163,21 @@ def layer_read(k_l, v_l, k_scale_l, v_scale_l, dtype=jnp.bfloat16):
     return k_l.astype(dtype), v_l.astype(dtype)
 
 
+def layer_read_bucket(k_l, v_l, k_scale_l, v_scale_l, bucket: int,
+                      dtype=jnp.bfloat16):
+    """``layer_read`` over only the first ``bucket`` positions (static slice
+    of the STORED buffers, so int8 caches dequantize just the bucket — the
+    length-aware decode path never upcasts KV it will not attend).
+    ``bucket`` of 0 or >= S is the full-extent read."""
+    S = k_l.shape[2]
+    if bucket and bucket < S:
+        cut = lambda a: (None if a is None
+                         else jax.lax.slice_in_dim(a, 0, bucket, axis=2))
+        k_l, v_l = cut(k_l), cut(v_l)
+        k_scale_l, v_scale_l = cut(k_scale_l), cut(v_scale_l)
+    return layer_read(k_l, v_l, k_scale_l, v_scale_l, dtype)
+
+
 # ---------------------------------------------------------------------------
 # Per-slot (continuous-batching) API — the serving engine admits a request
 # into ONE batch slot while the other slots keep decoding (DESIGN.md §7).

@@ -41,7 +41,8 @@ def make_requests(cfg, n_requests: int, prompt_len: int, max_new: int,
 def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
           max_new: int, *, reduced: bool = True, seed: int = 0,
           executor: str = "sub_operator", mode: str = "auto",
-          arrival_every: int = 0):
+          arrival_every: int = 0, block_size: int = 1,
+          kv_bucket_chunk: int = 0):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -52,7 +53,9 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
     params = api.init(jax.random.key(seed))
     reqs = make_requests(cfg, n_requests, prompt_len, max_new, seed,
                          arrival_every)
-    eng = ServingEngine(api, ctx, batch_slots, prompt_len, mode=mode)
+    eng = ServingEngine(api, ctx, batch_slots, prompt_len, mode=mode,
+                        block_size=block_size,
+                        kv_bucket_chunk=kv_bucket_chunk)
     stats = eng.run(params, reqs)
     return stats
 
@@ -70,10 +73,18 @@ def main(argv=None):
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="stagger: request i arrives at step i*N (0 = all "
                          "at start)")
+    ap.add_argument("--block-size", type=int, default=1,
+                    help="decode micro-steps per host sync (macro-step "
+                         "decode; 1 = per-token engine)")
+    ap.add_argument("--kv-bucket-chunk", type=int, default=0,
+                    help="KV bucket granularity for length-aware decode "
+                         "(block mode; 0 = full extent)")
     args = ap.parse_args(argv)
     stats = serve(args.arch, args.requests, args.batch, args.prompt_len,
                   args.max_new, mode=args.mode,
-                  arrival_every=args.arrival_every)
+                  arrival_every=args.arrival_every,
+                  block_size=args.block_size,
+                  kv_bucket_chunk=args.kv_bucket_chunk)
     per_req = stats.pop("per_request")
     rt = stats.pop("runtime")
     print("serve stats:", stats)

@@ -270,6 +270,59 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Length-aware (chunk-bucketed) decode attention
+#
+# A freshly admitted request sits at position ~prompt_len while the cache is
+# sized for prompt_len + slack: scanning the full padded extent every step
+# wastes bandwidth exactly where the paper says coordination/cache-path cost
+# dominates decode (§5). The bucketed variant slices the KV to the smallest
+# chunk multiple covering every live cursor — the bucket is a STATIC python
+# int, so each bucket is its own compiled program (the serving engine fixes
+# the bucket set at prepare time and picks per macro-step on the host).
+# ---------------------------------------------------------------------------
+
+def kv_buckets(s_max: int, chunk: int) -> Tuple[int, ...]:
+    """Static bucket set for a cache of extent ``s_max``: chunk multiples
+    ``(chunk, 2*chunk, ...)`` with ``s_max`` always the last (full) bucket.
+    ``chunk <= 0`` disables bucketing (single full-extent program)."""
+    if chunk <= 0 or chunk >= s_max:
+        return (s_max,)
+    return tuple(range(chunk, s_max, chunk)) + (s_max,)
+
+
+def bucket_for(needed: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket covering ``needed`` KV positions (falls back to the
+    full extent — the engine guarantees needed <= s_max)."""
+    for b in buckets:
+        if b >= needed:
+            return b
+    return buckets[-1]
+
+
+def decode_attention_bucketed(q: jax.Array, k: jax.Array, v: jax.Array,
+                              mask: jax.Array, ctx: ShardingCtx,
+                              kv_bucket: int = 0,
+                              scale: Optional[float] = None) -> jax.Array:
+    """``decode_attention`` over only the first ``kv_bucket`` KV positions
+    (static slice). The caller must guarantee every attendable position is
+    < kv_bucket — the mask cannot recover positions sliced away.
+    ``kv_bucket`` of 0 or >= S is the identity (full extent).
+
+    This is the bucketed form for callers holding DEQUANTIZED (B,n_kv,S,hd)
+    tensors. The serving decode path slices one level lower instead —
+    ``kv/cache.py::layer_read_bucket`` cuts the stored (possibly int8)
+    buffers before dequantization — and then calls plain decode_attention.
+    The two slices must keep identical semantics (first-``kv_bucket``
+    prefix); test_macro_step.py pins both against the full-extent walk."""
+    S = k.shape[2]
+    if kv_bucket and kv_bucket < S:
+        k = jax.lax.slice_in_dim(k, 0, kv_bucket, axis=2)
+        v = jax.lax.slice_in_dim(v, 0, kv_bucket, axis=2)
+        mask = jax.lax.slice_in_dim(mask, 0, kv_bucket, axis=mask.ndim - 1)
+    return decode_attention(q, k, v, mask, ctx, scale)
+
+
+# ---------------------------------------------------------------------------
 # GQA projection parameter bundle
 # ---------------------------------------------------------------------------
 

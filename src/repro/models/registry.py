@@ -33,14 +33,61 @@ class ModelAPI(NamedTuple):
     input_specs: Callable
     # -- continuous-batching extensions (None → family only serves in the
     #    drain-then-refill mode; see runtime/serving.py + DESIGN.md §7) -----
-    # decode_slotted(params, caches, tokens, positions, active, ctx)
-    #   → (caches, logits): per-slot cursors + active mask through decode
+    # decode_slotted(params, caches, tokens, positions, active, ctx,
+    #                kv_bucket=0)
+    #   → (caches, logits): per-slot cursors + active mask through decode;
+    #   kv_bucket (static) caps the attended KV extent (length-aware walk)
     decode_slotted: Optional[Callable] = None
     # write_slot(caches, single, slot) → caches: admit a batch-1 prefill
     #   into one batch slot (slot is traced — one program for all slots)
     write_slot: Optional[Callable] = None
     # reset_slot(caches, slot) → caches: zero a retired slot's state
     reset_slot: Optional[Callable] = None
+    # decode_block(params, caches, tokens, positions, active, remaining,
+    #              eos_ids, ctx, *, block_size, kv_bucket=0): T greedy
+    #   micro-steps in ONE program with on-device per-slot halting — the
+    #   macro-step decode path (DESIGN.md §7); see make_decode_block
+    decode_block: Optional[Callable] = None
+
+
+def make_decode_block(decode_slotted: Callable) -> Callable:
+    """Lift a family's ``decode_slotted`` into a macro-step ``decode_block``:
+    ``block_size`` greedy micro-steps inside one ``lax.scan`` — caches,
+    cursors, halt masks and sampled tokens all advance ON DEVICE, so the
+    host syncs once per block instead of once per token (the step-axis
+    analogue of the paper's sub-operator dependency relaxation, §5).
+
+    Per-slot halting: ``remaining[b]`` is row b's token budget and
+    ``eos_ids[b]`` an optional stop id (< 0 disables). A row that exhausts
+    its budget or emits its EOS flips its own ``active`` bit mid-block and
+    idles (no KV writes, token id 0) without host intervention.
+
+    Returns ``(caches, toks (T,B) int32, emitted (T,B) bool, last_tok,
+    positions, active, remaining)`` — ``emitted[t, b]`` marks micro-steps
+    that really generated a token, so the host can unpack the block without
+    guessing which zeros are padding."""
+
+    def decode_block(params, caches, tokens, positions, active, remaining,
+                     eos_ids, ctx, *, block_size: int, kv_bucket: int = 0):
+        def micro(carry, _):
+            caches, tok, pos, act, rem = carry
+            caches, logits = decode_slotted(params, caches, tok, pos, act,
+                                            ctx, kv_bucket=kv_bucket)
+            nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            nxt = jnp.where(act, nxt, 0)
+            emitted = act
+            step = act.astype(jnp.int32)
+            pos = pos + step
+            rem = rem - step
+            act = act & (rem > 0) & ((eos_ids < 0) | (nxt != eos_ids))
+            return (caches, nxt, pos, act, rem), (nxt, emitted)
+
+        (caches, tok, pos, act, rem), (toks, emitted) = jax.lax.scan(
+            micro, (caches, tokens, positions, active, remaining),
+            None, length=block_size)
+        return caches, toks, emitted, tok, pos, act, rem
+
+    return decode_block
 
 
 # ---------------------------------------------------------------------------
@@ -69,9 +116,10 @@ def _build_transformer(cfg: ModelConfig) -> ModelAPI:
     def init_caches(batch, max_len):
         return T.make_cache(cfg, batch, max_len)
 
-    def decode_slotted(params, caches, tokens, positions, active, ctx):
+    def decode_slotted(params, caches, tokens, positions, active, ctx,
+                       kv_bucket: int = 0):
         return T.decode_step_slotted(params, caches, tokens, positions,
-                                     active, cfg, ctx)
+                                     active, cfg, ctx, kv_bucket=kv_bucket)
 
     from repro.kv.cache import reset_slot, write_slot_kv
 
@@ -79,18 +127,18 @@ def _build_transformer(cfg: ModelConfig) -> ModelAPI:
                     decode, init_caches, _lm_input_specs(cfg),
                     decode_slotted=decode_slotted,
                     write_slot=write_slot_kv,
-                    reset_slot=reset_slot)
+                    reset_slot=reset_slot,
+                    decode_block=make_decode_block(decode_slotted))
 
 
 def _build_ssm(cfg: ModelConfig) -> ModelAPI:
     from repro.models import ssm as S
-    from repro.kv.state import mask_slots, reset_slot_tree, write_slot_tree
+    from repro.kv.state import reset_slot_tree, write_slot_tree
 
-    def decode_slotted(params, state, tokens, positions, active, ctx):
-        # attention-free: the recurrence is position-independent, so the
-        # per-slot cursors only gate WHICH rows commit their state update
-        new_state, logits = S.decode_step(params, state, tokens, cfg, ctx)
-        return mask_slots(active, new_state, state), logits
+    def decode_slotted(params, state, tokens, positions, active, ctx,
+                       kv_bucket: int = 0):
+        return S.decode_step_slotted(params, state, tokens, positions,
+                                     active, cfg, ctx, kv_bucket=kv_bucket)
 
     return ModelAPI(
         cfg,
@@ -102,7 +150,8 @@ def _build_ssm(cfg: ModelConfig) -> ModelAPI:
         _lm_input_specs(cfg),
         decode_slotted=decode_slotted,
         write_slot=write_slot_tree,
-        reset_slot=reset_slot_tree)
+        reset_slot=reset_slot_tree,
+        decode_block=make_decode_block(decode_slotted))
 
 
 def _build_hybrid(cfg: ModelConfig) -> ModelAPI:

@@ -277,6 +277,22 @@ def decode_step(params, state: RecurrentState, tokens, cfg, ctx):
     return state, logits
 
 
+def decode_step_slotted(params, state: RecurrentState, tokens,
+                        positions, active, cfg: ModelConfig,
+                        ctx: ShardingCtx, kv_bucket: int = 0
+                        ) -> Tuple[RecurrentState, jax.Array]:
+    """Continuous-batching decode step (DESIGN.md §7). Attention-free: the
+    recurrence is position-independent, so the per-slot cursors only gate
+    WHICH rows commit their state update (``mask_slots`` selects retired
+    rows back to their old state — every step rewrites the whole tree).
+    ``kv_bucket`` is accepted for API symmetry with the KV families and
+    ignored: O(1) state has no length axis to walk."""
+    from repro.kv.state import mask_slots
+    del positions, kv_bucket
+    new_state, logits = decode_step(params, state, tokens, cfg, ctx)
+    return mask_slots(active, new_state, state), logits
+
+
 def make_state(cfg: ModelConfig, batch: int) -> RecurrentState:
     d_in, nh, hd, N, G, W = dims(cfg)
     return init_ssd_state(cfg.n_layers, batch, nh, hd, N, W,

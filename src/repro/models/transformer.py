@@ -143,12 +143,18 @@ def block_decode(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
 def block_decode_slotted(p: dict, x: jax.Array, cfg: ModelConfig,
                          ctx: ShardingCtx, kv_slices: Tuple,
                          positions: jax.Array, active: jax.Array,
-                         window: int = 0) -> Tuple[jax.Array, Tuple]:
+                         window: int = 0,
+                         kv_bucket: int = 0) -> Tuple[jax.Array, Tuple]:
     """``block_decode`` with PER-ROW cursors (continuous batching): row b
     appends at its own ``positions[b]`` and attends over its own prefix.
     Inactive rows write nothing (their KV slice stays byte-identical); their
     activations still flow — static shapes — but the engine masks the
     resulting logits.
+
+    ``kv_bucket`` > 0 (non-windowed caches only) reads and attends only the
+    first ``kv_bucket`` cache positions — the length-aware decode path. The
+    caller must guarantee max(positions) < kv_bucket; the serving engine
+    picks the bucket per macro-step from the live cursors.
 
     Deliberately a twin of ``block_decode`` rather than its replacement: the
     vmapped per-row writes and (B,S) masks cost measurably more than the
@@ -157,18 +163,20 @@ def block_decode_slotted(p: dict, x: jax.Array, cfg: ModelConfig,
     decode_step == decode_step_slotted under a uniform cursor is enforced by
     tests/test_serving_scheduler.py."""
     from repro.kv.cache import (batch_valid_mask, layer_append_slotted,
-                                layer_read)
+                                layer_read_bucket)
     B = x.shape[0]
     k_l, v_l, ks_l, vs_l = kv_slices
+    if window:
+        kv_bucket = 0                       # ring buffers have no prefix order
     h = common.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
     h = ctx.ann(h, "batch", "seq", "embed")
     q, k, v = qkv_project(p["attn"], h, cfg, ctx, positions[:, None])
     k_l, v_l, ks_l, vs_l = layer_append_slotted(
         k_l, v_l, ks_l, vs_l, k[:, 0], v[:, 0], positions, window, active)
-    kc, vc = layer_read(k_l, v_l, ks_l, vs_l, dtype=x.dtype)
+    kc, vc = layer_read_bucket(k_l, v_l, ks_l, vs_l, kv_bucket, dtype=x.dtype)
     kc = ctx.ann(kc, "batch", "kv_heads", "kv_seq", "head_dim")
     vc = ctx.ann(vc, "batch", "kv_heads", "kv_seq", "head_dim")
-    mask = batch_valid_mask(k_l.shape[2], window, positions)       # (B,S)
+    mask = batch_valid_mask(kc.shape[2], window, positions)        # (B,Sb)
     o = decode_attention(q[:, 0], kc, vc, mask, ctx)
     o = common.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
     x = ctx.ann(x + o, "batch", "seq", "embed_shard")
@@ -358,13 +366,14 @@ def decode_step(params, cache: KVCache, tokens: jax.Array, cfg: ModelConfig,
 
 def decode_step_slotted(params, cache: KVCache, tokens: jax.Array,
                         positions: jax.Array, active: jax.Array,
-                        cfg: ModelConfig, ctx: ShardingCtx
-                        ) -> Tuple[KVCache, jax.Array]:
+                        cfg: ModelConfig, ctx: ShardingCtx,
+                        kv_bucket: int = 0) -> Tuple[KVCache, jax.Array]:
     """Continuous-batching decode step (DESIGN.md §7). tokens/positions/
     active: (B,). Mirrors ``decode_step`` but each row carries its OWN
     cursor: row b appends at positions[b] and attends 0..positions[b]; the
     shared ``cache.length`` is kept only as an upper bound. Equal to
-    ``decode_step`` when all rows share one cursor and are active."""
+    ``decode_step`` when all rows share one cursor and are active.
+    ``kv_bucket``: static length-aware KV extent (see block_decode_slotted)."""
     x = common.embed(params["embed"], tokens[:, None], ctx)
     if cfg.pos == "learned":
         x = x + jnp.take(params["pos_embed"], positions,
@@ -379,7 +388,7 @@ def decode_step_slotted(params, cache: KVCache, tokens: jax.Array,
             ks_l = vs_l = None
         h, (k_l, v_l, ks_l, vs_l) = block_decode_slotted(
             lp, h, cfg, ctx, (k_l, v_l, ks_l, vs_l), positions, active,
-            window=cache.window)
+            window=cache.window, kv_bucket=kv_bucket)
         ys = (k_l, v_l, ks_l, vs_l) if quant else (k_l, v_l)
         return h, ys
 

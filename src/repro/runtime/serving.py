@@ -11,9 +11,22 @@ the cache-resident/static-shape regime the paper's runtime depends on:
 - every row carries its own cursor (``positions``) and an ``active`` mask is
   threaded through decode (``ModelAPI.decode_slotted``) so retired slots
   neither write KV nor pollute the argmax,
-- all three step programs (prefill-1, admit, decode) are AOT-compiled through
-  ``StaticRuntime`` — ``stats()`` must show compiles == 1 per step with only
-  ``calls`` growing across admissions (the §4.3 pinned-pool invariant).
+- **macro-step decode** (``block_size`` = T > 1): decode runs as
+  ``ModelAPI.decode_block`` — T greedy micro-steps inside ONE AOT-compiled
+  ``lax.scan``, with per-slot on-device halting (token budget + optional EOS
+  id as ``(B,)`` operands). The host syncs ONCE per T tokens instead of once
+  per token and admission waits for block boundaries — the step-axis analogue
+  of the paper's sub-operator dependency relaxation (§5): synchronize where
+  the dependency is (block edges), not at every operator/token boundary,
+- **length-aware KV walking**: in block mode each macro-step runs the block
+  program compiled for the smallest KV *bucket* (chunk multiple) covering
+  every live cursor + T — freshly admitted requests stop paying for the
+  padded ``prompt_len + slack`` extent (``kv_bucket_chunk``; bucket set
+  fixed at prepare time, one compiled program per bucket),
+- all step programs (prefill-1, admit, per-bucket decode blocks) are
+  AOT-compiled through ``StaticRuntime`` — ``stats()`` must show
+  compiles == 1 per program with only ``calls`` growing across admissions
+  (the §4.3 pinned-pool invariant).
 
 The previous drain-then-refill loop is kept as ``mode="drain"`` — it is the
 baseline the continuous scheduler is measured against (late-arrival TTFT) and
@@ -21,18 +34,23 @@ the fallback for model families without slotted support (DESIGN.md §7).
 
 Per-request accounting: queue delay (enqueue→admit), TTFT (enqueue→first
 token), TPOT (steady-state inter-token time) — the serving-side metrics of
-the paper's Table 2 methodology.
+the paper's Table 2 methodology. Engine-level: decode-token throughput
+(decode-produced tokens over decode wall-time only — prefill first-tokens
+are excluded from BOTH sides), host syncs per decode token (the macro-step
+headline metric) and per-macro-step token counts.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kv.cache import KVCache
+from repro.models.attention import bucket_for, kv_buckets
 from repro.models.registry import DECODE_SLACK, ModelAPI
 from repro.models.sharding import ShardingCtx
 from repro.runtime.static_runtime import StaticRuntime
@@ -44,6 +62,7 @@ class Request:
     prompt: np.ndarray                  # (S,) int32
     max_new_tokens: int
     arrival_step: int = 0               # decode step at which it reaches the queue
+    eos_id: int = -1                    # stop id (< 0 → budget-only halting)
     generated: List[int] = field(default_factory=list)
     t_enqueue: float = 0.0
     t_admitted: float = 0.0
@@ -53,6 +72,9 @@ class Request:
 
     @property
     def done(self) -> bool:
+        if self.eos_id >= 0 and self.generated \
+                and self.generated[-1] == self.eos_id:
+            return True
         return len(self.generated) >= self.max_new_tokens
 
     def metrics(self) -> Dict[str, Any]:
@@ -76,24 +98,54 @@ class ServingEngine:
     extensions); mode="drain": legacy drain-then-refill baseline;
     mode="auto": continuous when the family supports it.
 
-    ``raw_decode`` (optional): an eager decode-step callable
+    ``block_size`` (T): decode micro-steps per host round-trip. T == 1 is the
+    per-step engine (one ``serve_decode`` program, one host sync per token);
+    T > 1 runs ``ModelAPI.decode_block`` with on-device halt masks — one host
+    sync per T tokens, admission at block boundaries only.
+
+    ``kv_bucket_chunk`` (block mode, KV-cache families): > 0 compiles one
+    decode-block program per KV bucket (chunk multiples up to the cache
+    extent) and picks the smallest covering bucket per macro-step on the
+    host. 0 disables bucketing (single full-extent block program).
+
+    ``debug_reset_slots``: zero a slot's cache state when its request
+    retires (``ModelAPI.reset_slot``, one more AOT program). Never required
+    for correctness — masked attention cannot read past a cursor — but keeps
+    cache dumps clean and slot-state invariants checkable.
+
+    ``raw_decode`` (optional, T == 1 only): an eager decode-step callable
     ``(params, caches, tokens, positions, active) -> (caches, logits)`` used
     INSTEAD of the AOT-compiled slotted decode — the hook through which the
     WA-disaggregated backend (two submeshes, python-orchestrated routing)
     plugs into the same admission scheduler.
+
+    An engine instance may be ``run()`` repeatedly: per-run accumulators
+    (timings, sync counts, queues) reset and the slot caches are allocated
+    fresh each run, while the AOT-compiled programs persist (compiles == 1
+    across every run of the engine's lifetime).
     """
 
     def __init__(self, api: ModelAPI, ctx: ShardingCtx, batch_slots: int,
                  prompt_len: int, runtime: Optional[StaticRuntime] = None,
                  greedy: bool = True, mode: str = "auto",
                  max_new_cap: int = DECODE_SLACK,
-                 raw_decode: Optional[Callable] = None):
+                 raw_decode: Optional[Callable] = None,
+                 block_size: int = 1, kv_bucket_chunk: int = 0,
+                 debug_reset_slots: bool = False):
         if mode not in ("auto", "continuous", "drain"):
             raise ValueError(mode)
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if block_size > 1 and raw_decode is not None:
+            raise ValueError("raw_decode is a per-step hook; macro-step "
+                             "decode (block_size > 1) requires the AOT "
+                             "decode_block path")
         # continuous mode always needs write_slot (admission); the decode
-        # half comes from either api.decode_slotted or a raw_decode override
-        slotted_ok = api.write_slot is not None and (
-            api.decode_slotted is not None or raw_decode is not None)
+        # half comes from api.decode_block (T > 1), api.decode_slotted or a
+        # raw_decode override (T == 1)
+        decode_ok = (api.decode_block is not None if block_size > 1 else
+                     api.decode_slotted is not None or raw_decode is not None)
+        slotted_ok = api.write_slot is not None and decode_ok
         if mode == "continuous" and not slotted_ok:
             raise ValueError(
                 f"{api.config.family} family has no slotted decode support")
@@ -104,14 +156,40 @@ class ServingEngine:
         self.max_new_cap = min(max_new_cap, DECODE_SLACK)
         self.mode = ("continuous" if slotted_ok else "drain") \
             if mode == "auto" else mode
+        self.block_size = block_size
+        self.kv_bucket_chunk = kv_bucket_chunk
+        self.debug_reset_slots = debug_reset_slots
         self.rt = runtime or StaticRuntime()
         self.queue: List[Request] = []
-        self.tpot_samples: List[float] = []
         self._params = None
         self._raw_decode = raw_decode
         self._prepared = False
+        self._buckets: Tuple[int, ...] = ()
+        self._reset = None
+        self._reset_per_run()
 
     # ------------------------------------------------------------------
+    def _reset_per_run(self):
+        """Per-run accumulators. An engine reused across ``run()`` calls
+        must not leak timing samples or sync counts from a previous run
+        (stats would blend workloads), and ``self._caches`` from a finished
+        run must never seed the next one (stale KV in freed slots)."""
+        self.tpot_samples: List[float] = []
+        self.host_syncs = 0
+        self._decode_tokens = 0
+        self._decode_time = 0.0
+        self._block_tokens: List[int] = []
+        self._macro_steps = 0
+        self.queue = []
+
+    def _host_sync(self, *arrays):
+        """THE counted device→host round-trip of the decode loop — the
+        coordination cost the macro-step engine amortizes (1 sync per
+        ``block_size`` tokens). Tests assert on ``self.host_syncs``."""
+        self.host_syncs += 1
+        out = tuple(np.asarray(a) for a in arrays)
+        return out if len(out) > 1 else out[0]
+
     def load(self, params):
         self._params = params
 
@@ -123,9 +201,13 @@ class ServingEngine:
     # AOT step programs — compiled ONCE at first run; admission/decode are
     # cached-executable calls from then on (zero retracing, §4.3 analogue).
     # ------------------------------------------------------------------
+    def _fresh_caches(self):
+        return self.api.init_caches(self.slots,
+                                    self.prompt_len + self.max_new_cap)
+
     def _prepare_continuous(self, params):
         api, ctx = self.api, self.ctx
-        B, P = self.slots, self.prompt_len
+        B, P, T = self.slots, self.prompt_len, self.block_size
 
         def prefill1_fn(p, toks):
             caches, logits = api.prefill(p, {"tokens": toks}, ctx)
@@ -141,12 +223,7 @@ class ServingEngine:
             return jnp.where(active, nxt, 0), \
                 positions + active.astype(jnp.int32)
 
-        def decode_fn(p, caches, tokens, positions, active):
-            caches, logits = api.decode_slotted(p, caches, tokens, positions,
-                                                active, ctx)
-            return (caches,) + postprocess(logits, positions, active)
-
-        self._caches = api.init_caches(B, P + self.max_new_cap)
+        caches_aval = jax.eval_shape(self._fresh_caches)
         toks1 = jnp.zeros((1, P), jnp.int32)
         single_aval, _ = jax.eval_shape(prefill1_fn, params, toks1)
         pos0 = jnp.zeros((B,), jnp.int32)
@@ -156,12 +233,48 @@ class ServingEngine:
             "serve_prefill1", prefill1_fn, (params, toks1))
         self._admit = self.rt.compile_step(
             "serve_admit", admit_fn,
-            (self._caches, single_aval, jnp.zeros((), jnp.int32)),
+            (caches_aval, single_aval, jnp.zeros((), jnp.int32)),
             donate_argnums=(0,))
+        if self.debug_reset_slots and api.reset_slot is not None:
+            self._reset = self.rt.compile_step(
+                "serve_reset", lambda c, slot: api.reset_slot(c, slot),
+                (caches_aval, jnp.zeros((), jnp.int32)), donate_argnums=(0,))
+        if T > 1:
+            # -- macro-step block programs, one per KV bucket --------------
+            # Bucketing applies only to prefix-ordered KV caches; recurrent
+            # states (and ring buffers) get the single full program.
+            bucketable = isinstance(caches_aval, KVCache) \
+                and not caches_aval.window
+            s_max = caches_aval.k.shape[3] if bucketable else 0
+            self._buckets = kv_buckets(s_max, self.kv_bucket_chunk) \
+                if bucketable and self.kv_bucket_chunk > 0 else (0,)
+            rem0 = jnp.zeros((B,), jnp.int32)
+            eos0 = jnp.full((B,), -1, jnp.int32)
+            self._decode_blocks: Dict[int, Callable] = {}
+            for sb in self._buckets:
+                name = "serve_decode_block" if len(self._buckets) == 1 \
+                    else f"serve_decode_block_s{sb}"
+
+                def block_fn(p, caches, tok, pos, act, rem, eos, _sb=sb):
+                    return api.decode_block(p, caches, tok, pos, act, rem,
+                                            eos, ctx, block_size=T,
+                                            kv_bucket=_sb)
+
+                self._decode_blocks[sb] = self.rt.compile_step(
+                    name, block_fn,
+                    (params, caches_aval, tok0, pos0, act0, rem0, eos0),
+                    donate_argnums=(1,))
+            return
+
+        def decode_fn(p, caches, tokens, positions, active):
+            caches, logits = api.decode_slotted(p, caches, tokens, positions,
+                                                active, ctx)
+            return (caches,) + postprocess(logits, positions, active)
+
         if self._raw_decode is None:
             self._decode = self.rt.compile_step(
                 "serve_decode", decode_fn,
-                (params, self._caches, tok0, pos0, act0),
+                (params, caches_aval, tok0, pos0, act0),
                 donate_argnums=(1,))
         else:
             raw = self._raw_decode
@@ -202,7 +315,9 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def run(self, params, requests: List[Request],
             max_steps: int = 10_000) -> Dict[str, Any]:
-        """Serve all requests to completion; returns latency stats."""
+        """Serve all requests to completion; returns latency stats.
+        Reusable: each call starts from fresh caches and fresh accumulators
+        (AOT programs persist — zero recompilation across runs)."""
         self.load(params)
         for r in requests:
             if r.max_new_tokens > self.max_new_cap:
@@ -210,6 +325,7 @@ class ServingEngine:
                     f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
                     f"exceeds cache slack {self.max_new_cap}")
         self._prepare(params)
+        self._reset_per_run()
         if self.mode == "continuous":
             return self._run_continuous(params, requests, max_steps)
         return self._run_drain(params, requests, max_steps)
@@ -221,26 +337,20 @@ class ServingEngine:
         return row
 
     # ------------------------------------------------------------------
-    def _run_continuous(self, params, requests, max_steps):
-        pending = sorted(requests, key=lambda r: r.arrival_step)
-        active_req: List[Optional[Request]] = [None] * self.slots
-        positions = np.zeros((self.slots,), np.int32)
-        last_tok = np.zeros((self.slots,), np.int32)
-        caches = self._caches
-        done: List[Request] = []
-        steps = admissions = overlapped = 0
-        while pending or self.queue or any(r is not None for r in active_req):
-            if steps >= max_steps:
-                break
-            while pending and pending[0].arrival_step <= steps:
-                self.submit(pending.pop(0))
-            # -- admission: fill EVERY free slot from the queue, no drain --
-            # "overlapped" = admitted while the batch was already live at the
-            # start of this round (cold-start fills at step 0 don't count)
-            batch_live = any(a is not None for a in active_req)
-            for i in range(self.slots):
-                if active_req[i] is not None or not self.queue:
-                    continue
+    def _admit_requests(self, params, caches, active_req, steps, batch_live):
+        """Fill EVERY free slot from the queue (no drain). Returns
+        (caches, admissions, overlapped, finished, admitted) —
+        ``finished`` are requests done at their first (prefill) token,
+        ``admitted`` the (slot, request) pairs now occupying a slot (the
+        caller initializes its cursor/halt arrays from these)."""
+        admissions = overlapped = 0
+        finished: List[Request] = []
+        admitted: List[Tuple[int, Request]] = []
+        for i in range(self.slots):
+            # retry the SAME slot while admissions complete at their first
+            # token (max_new_tokens == 1 / instant EOS) — a one-token
+            # request must not idle the slot until the next boundary
+            while active_req[i] is None and self.queue:
                 r = self.queue.pop(0)
                 if batch_live:
                     overlapped += 1
@@ -254,11 +364,44 @@ class ServingEngine:
                 r.t_first_token = time.monotonic()
                 r.generated.append(int(np.asarray(first)[0]))
                 admissions += 1
-                if r.done:                       # max_new_tokens == 1
+                if r.done:
                     r.t_done = r.t_first_token
-                    done.append(r)
+                    finished.append(r)
+                    # the admit DID write its prompt KV — zero it like any
+                    # other retirement so dumps stay clean
+                    if self._reset is not None:
+                        caches = self._reset(caches,
+                                             jnp.asarray(i, jnp.int32))
                     continue
                 active_req[i] = r
+                admitted.append((i, r))
+        return caches, admissions, overlapped, finished, admitted
+
+    def _run_continuous(self, params, requests, max_steps):
+        if self.block_size > 1:
+            return self._run_continuous_block(params, requests, max_steps)
+        pending = sorted(requests, key=lambda r: r.arrival_step)
+        active_req: List[Optional[Request]] = [None] * self.slots
+        positions = np.zeros((self.slots,), np.int32)
+        last_tok = np.zeros((self.slots,), np.int32)
+        caches = self._fresh_caches()
+        done: List[Request] = []
+        steps = admissions = overlapped = 0
+        while pending or self.queue or any(r is not None for r in active_req):
+            if steps >= max_steps:
+                break
+            while pending and pending[0].arrival_step <= steps:
+                self.submit(pending.pop(0))
+            # -- admission: fill EVERY free slot from the queue, no drain --
+            # "overlapped" = admitted while the batch was already live at the
+            # start of this round (cold-start fills at step 0 don't count)
+            batch_live = any(a is not None for a in active_req)
+            caches, n_adm, n_ovl, finished, new_slots = self._admit_requests(
+                params, caches, active_req, steps, batch_live)
+            admissions += n_adm
+            overlapped += n_ovl
+            done.extend(finished)
+            for i, r in new_slots:
                 positions[i] = self.prompt_len
                 last_tok[i] = r.generated[-1]
             active = np.array([a is not None for a in active_req])
@@ -270,9 +413,15 @@ class ServingEngine:
             caches, nxt, new_pos = self._decode(
                 params, caches, jnp.asarray(last_tok),
                 jnp.asarray(positions), jnp.asarray(active))
-            nxt = np.asarray(nxt)
-            self.tpot_samples.append(time.monotonic() - t0)
-            positions = np.asarray(new_pos).copy()
+            nxt, new_pos = self._host_sync(nxt, new_pos)
+            dt = time.monotonic() - t0
+            self.tpot_samples.append(dt)
+            self._decode_time += dt
+            n_tok = int(active.sum())
+            self._decode_tokens += n_tok
+            self._block_tokens.append(n_tok)
+            self._macro_steps += 1
+            positions = new_pos.copy()
             last_tok = nxt.copy()
             steps += 1
             now = time.monotonic()
@@ -284,6 +433,96 @@ class ServingEngine:
                     r.t_done = now
                     done.append(r)
                     active_req[i] = None         # freed → admitted next step
+                    if self._reset is not None:
+                        caches = self._reset(caches,
+                                             jnp.asarray(i, jnp.int32))
+        self._caches = caches
+        return self._stats(done, steps, admissions, overlapped)
+
+    # ------------------------------------------------------------------
+    def _run_continuous_block(self, params, requests, max_steps):
+        """Macro-step scheduler: T decode micro-steps per device call, one
+        host sync + one admission round per block boundary. Per-slot halt
+        state (budget ``remaining``, ``eos`` ids) rides along as (B,)
+        operands so the device loop never needs the host to retire a slot.
+
+        Deliberately a twin of the T == 1 loop in ``_run_continuous``
+        (shared admission via ``_admit_requests``; the scheduler shell —
+        arrival pump, idle tick, retirement+reset — is kept in both).
+        A fix to the shell logic must land in BOTH loops; the token-equality
+        tests in test_macro_step.py catch divergence."""
+        T = self.block_size
+        pending = sorted(requests, key=lambda r: r.arrival_step)
+        active_req: List[Optional[Request]] = [None] * self.slots
+        positions = np.zeros((self.slots,), np.int32)
+        last_tok = np.zeros((self.slots,), np.int32)
+        remaining = np.zeros((self.slots,), np.int32)
+        eos = np.full((self.slots,), -1, np.int32)
+        caches = self._fresh_caches()
+        s_max = self.prompt_len + self.max_new_cap
+        done: List[Request] = []
+        steps = admissions = overlapped = 0
+        while pending or self.queue or any(r is not None for r in active_req):
+            if steps >= max_steps:
+                break
+            while pending and pending[0].arrival_step <= steps:
+                self.submit(pending.pop(0))
+            # -- admission at the block boundary ---------------------------
+            batch_live = any(a is not None for a in active_req)
+            caches, n_adm, n_ovl, finished, new_slots = self._admit_requests(
+                params, caches, active_req, steps, batch_live)
+            admissions += n_adm
+            overlapped += n_ovl
+            done.extend(finished)
+            for i, r in new_slots:
+                positions[i] = self.prompt_len
+                last_tok[i] = r.generated[-1]
+                remaining[i] = r.max_new_tokens - 1
+                eos[i] = r.eos_id
+            active = np.array([a is not None for a in active_req])
+            if not active.any():
+                steps += 1                       # idle tick: await arrivals
+                continue
+            # -- length-aware bucket: smallest compiled extent covering
+            #    every live cursor for the whole block -----------------------
+            if len(self._buckets) > 1:
+                needed = int(positions[active].max()) + T
+                sb = bucket_for(min(needed, s_max), self._buckets)
+            else:
+                sb = self._buckets[0]
+            # -- ONE device call = T micro-steps; ONE host sync ------------
+            t0 = time.monotonic()
+            caches, toks, emitted, last_d, pos_d, act_d, rem_d = \
+                self._decode_blocks[sb](
+                    params, caches, jnp.asarray(last_tok),
+                    jnp.asarray(positions), jnp.asarray(active),
+                    jnp.asarray(remaining), jnp.asarray(eos))
+            toks, emitted, last_d, pos_d, act_np, rem_d = \
+                self._host_sync(toks, emitted, last_d, pos_d, act_d, rem_d)
+            last_tok, positions, remaining = \
+                last_d.copy(), pos_d.copy(), rem_d.copy()
+            dt = time.monotonic() - t0
+            self.tpot_samples.append(dt / T)
+            self._decode_time += dt
+            n_tok = int(emitted.sum())
+            self._decode_tokens += n_tok
+            self._block_tokens.append(n_tok)
+            self._macro_steps += 1
+            steps += T
+            now = time.monotonic()
+            for i, r in enumerate(active_req):
+                if r is None:
+                    continue
+                for t in range(T):
+                    if emitted[t, i]:
+                        r.generated.append(int(toks[t, i]))
+                if not act_np[i]:                # budget/EOS halt on device
+                    r.t_done = now
+                    done.append(r)
+                    active_req[i] = None         # freed → next boundary
+                    if self._reset is not None:
+                        caches = self._reset(caches,
+                                             jnp.asarray(i, jnp.int32))
         self._caches = caches
         return self._stats(done, steps, admissions, overlapped)
 
@@ -330,17 +569,24 @@ class ServingEngine:
                 last = jnp.asarray(first.astype(np.int32))
             t0 = time.monotonic()
             caches, nxt = self._decode_b(params, caches, last)
-            nxt_np = np.asarray(nxt)
-            self.tpot_samples.append(time.monotonic() - t0)
+            nxt_np = self._host_sync(nxt)
+            dt = time.monotonic() - t0
+            self.tpot_samples.append(dt)
+            self._decode_time += dt
+            self._macro_steps += 1
             last = nxt
             steps += 1
             now = time.monotonic()
+            n_tok = 0
             for i, r in enumerate(active_req):
                 if r is None or r.done:
                     continue
                 r.generated.append(int(nxt_np[i]))
+                n_tok += 1
                 if r.done:
                     r.t_done = now
+            self._decode_tokens += n_tok
+            self._block_tokens.append(n_tok)
             for i, r in enumerate(active_req):
                 if r is not None and r.done:
                     done.append(r)
@@ -355,10 +601,17 @@ class ServingEngine:
         per_req = [r.metrics() for r in sorted(done, key=lambda r: r.rid)]
         ttfts = np.array([m["ttft_ms"] for m in per_req] or [0.0])
         qd = np.array([m["queue_delay_ms"] for m in per_req] or [0.0])
+        blk = np.array(self._block_tokens or [0.0])
+        # decode-token throughput: decode-PRODUCED tokens over decode
+        # wall-time — the prefill-produced first token is excluded from the
+        # numerator because its cost is not in the denominator
+        n_dec = self._decode_tokens
         return {
             "mode": self.mode,
+            "block_size": self.block_size,
             "completed": len(done),
             "decode_steps": steps,
+            "macro_steps": self._macro_steps,
             "admissions": admissions,
             "overlapped_admissions": overlapped,
             "tpot_mean_ms": float(tp.mean() * 1e3),
@@ -367,9 +620,11 @@ class ServingEngine:
             "ttft_mean_ms": float(ttfts.mean()),
             "ttft_p99_ms": float(np.percentile(ttfts, 99)),
             "queue_delay_mean_ms": float(qd.mean()),
-            "throughput_tok_s": float(
-                sum(len(r.generated) for r in done)
-                / max(sum(self.tpot_samples), 1e-9)),
+            "decode_tokens": n_dec,
+            "throughput_tok_s": float(n_dec / max(self._decode_time, 1e-9)),
+            "host_syncs": self.host_syncs,
+            "syncs_per_token": float(self.host_syncs / max(n_dec, 1)),
+            "tokens_per_macro_step_mean": float(blk.mean()),
             "per_request": per_req,
             "runtime": self.rt.stats(),
         }

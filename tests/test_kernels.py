@@ -51,6 +51,52 @@ def test_flash_decode_sweep(B, Hq, n_kv, S, hd, bs, dtype):
                                rtol=tol, atol=tol)
 
 
+def test_flash_decode_kv_limit_matches_full_walk():
+    """A kv_limit covering every masked position is a pure fast path — the
+    tile early-out must not change numerics; a CUTTING limit equals the ref
+    with the limit folded into the mask."""
+    B, Hq, n_kv, S, hd = 2, 8, 4, 256, 32
+    q = jax.random.normal(jax.random.key(1), (B, Hq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.key(2), (B, n_kv, S, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(3), (B, n_kv, S, hd), jnp.float32)
+    lens = jnp.array([70, 100])
+    mask = jnp.arange(S)[None, :] < lens[:, None]
+    want = flash_decode_ref(q, k, v, mask)
+    got = flash_decode(q, k, v, mask, interpret=True, block_s=64,
+                       kv_limit=jnp.asarray(100))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    got_cut = flash_decode(q, k, v, mask, interpret=True, block_s=64,
+                           kv_limit=jnp.asarray(64))
+    want_cut = flash_decode_ref(q, k, v, mask, kv_limit=64)
+    np.testing.assert_allclose(np.asarray(got_cut), np.asarray(want_cut),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_kv_limit_is_traced_not_static():
+    """Advancing cursors must NOT retrace: the same jitted kernel serves
+    every limit value (limit is an operand, not a static arg)."""
+    B, Hq, n_kv, S, hd = 1, 4, 4, 128, 32
+    q = jax.random.normal(jax.random.key(1), (B, Hq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.key(2), (B, n_kv, S, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(3), (B, n_kv, S, hd), jnp.float32)
+    traces = []
+
+    def fn(q, k, v, mask, lim):
+        traces.append(1)
+        return flash_decode(q, k, v, mask, interpret=True, block_s=32,
+                            kv_limit=lim)
+
+    jfn = jax.jit(fn)
+    for lim in (32, 64, 96):
+        mask = jnp.arange(S)[None, :] < lim
+        got = jfn(q, k, v, mask, jnp.asarray(lim))
+        want = flash_decode_ref(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+    assert len(traces) == 1, "kv_limit change retraced the kernel"
+
+
 def test_flash_decode_int8_kv():
     B, Hq, n_kv, S, hd = 2, 8, 2, 256, 64
     q = jax.random.normal(jax.random.key(1), (B, Hq, hd), jnp.float32)
