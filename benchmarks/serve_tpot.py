@@ -1,19 +1,30 @@
-"""Serving TPOT/TTFT: per-step vs macro-step decode (BENCH_serving.json).
+"""Serving TPOT/TTFT: per-step vs macro-step decode, and chunked vs
+monolithic prefill (BENCH_serving.json).
 
-The macro-step engine's claim (ISSUE 3 / DESIGN.md §7): moving the host
-sync from every token to every ``block_size`` tokens removes per-token
-dispatch + transfer stalls from the decode critical path — the step-axis
-analogue of the paper's sub-operator dependency relaxation (§5). This
-benchmark measures exactly that on the CPU dry-run config:
+Two claims are measured on the CPU dry-run config:
 
-- the SAME staggered-arrival workload through the per-step engine
-  (block_size=1) and the macro-step engine (block_size=8, chunk-bucketed
-  length-aware KV),
-- per-mode TPOT (mean/p50/p99 per micro-step), TTFT, decode-token
-  throughput, host syncs per generated token, and compile counts (every
-  program must compile exactly once),
-- results go to the CSV contract AND to ``BENCH_serving.json`` at the repo
-  root — the committed perf-trajectory artifact.
+1. Macro-step decode (ISSUE 3 / DESIGN.md §7): moving the host sync from
+   every token to every ``block_size`` tokens removes per-token dispatch +
+   transfer stalls from the decode critical path — the step-axis analogue
+   of the paper's sub-operator dependency relaxation (§5). Measured as the
+   SAME staggered-arrival workload through the per-step engine
+   (block_size=1) and the macro-step engine (block_size=8, chunk-bucketed
+   length-aware KV).
+
+2. Chunked prefill (ISSUE 4 / DESIGN.md §7): a LONG prompt admitted
+   mid-serve stalls every in-flight decoder for its whole monolithic
+   prefill; the chunked-prefill lane bounds that stall to one fixed-(1,C)
+   chunk per block boundary. Measured as a long-prompt staggered arrival
+   into a live decode batch: **max inter-token gap** (the decode-stall each
+   in-flight request observes) and the long request's TTFT, chunked vs
+   monolithic admission — the acceptance claim is max gap strictly lower
+   with TPOT no worse.
+
+Per mode: TPOT (mean/p50/p99 per micro-step), TTFT, decode-token
+throughput, host syncs per generated token, compile counts (every program
+must compile exactly once). Results go to the CSV contract AND to
+``BENCH_serving.json`` at the repo root — the committed perf-trajectory
+artifact.
 
 Each engine is run twice and the SECOND run is reported: AOT compiles all
 land in ``prepare`` (first run), so run 2 is the steady-state the paper's
@@ -33,6 +44,11 @@ KV_BUCKET_CHUNK = 32
 PROMPT_LEN = 16
 SLOTS = 2
 MAX_NEW_CAP = 64
+# -- long-prompt (chunked-prefill) scenario --------------------------------
+LP_PROMPT_LEN = 256          # static width = the long prompt's true length
+LP_SHORT_LEN = 8             # in-flight decoders hold short prompts
+LP_CHUNK = 32                # chunked lane: 256-token prompt = 8 chunks
+LP_KV_BUCKET = 64            # coarser buckets (extent 320 → 5 programs)
 JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_serving.json")
 
@@ -48,6 +64,73 @@ def _workload(cfg, seed=0):
                                         dtype=np.int32),
                     max_new_tokens=new, arrival_step=arr)
             for i, (new, arr) in enumerate(plan)]
+
+
+def _long_prompt_workload(cfg, seed=0):
+    # two short requests decoding when a LONG-prompt request lands mid-serve:
+    # its admission prefill is the decode-stall the chunked lane bounds
+    rng = np.random.default_rng(seed)
+    from repro.runtime.serving import Request
+    plan = [(48, 0, LP_SHORT_LEN), (8, 0, LP_SHORT_LEN),
+            (24, 8, LP_PROMPT_LEN)]
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, plen,
+                                        dtype=np.int32),
+                    max_new_tokens=new, arrival_step=arr)
+            for i, (new, arr, plen) in enumerate(plan)]
+
+
+def _long_prompt_scenario(api, params, ctx):
+    from repro.runtime.serving import ServingEngine
+    cfg = api.config
+    out = {"config": {"prompt_len": LP_PROMPT_LEN,
+                      "short_prompt_len": LP_SHORT_LEN,
+                      "prefill_chunk": LP_CHUNK,
+                      "block_size": BLOCK_SIZE,
+                      "kv_bucket_chunk": LP_KV_BUCKET,
+                      "batch_slots": SLOTS}}
+    for name, pc in (("monolithic", 0), ("chunked", LP_CHUNK)):
+        eng = ServingEngine(api, ctx, SLOTS, LP_PROMPT_LEN,
+                            mode="continuous", max_new_cap=MAX_NEW_CAP,
+                            block_size=BLOCK_SIZE,
+                            kv_bucket_chunk=LP_KV_BUCKET,
+                            prefill_chunk=pc)
+        eng.run(params, _long_prompt_workload(cfg), max_steps=2000)  # warm
+        st = eng.run(params, _long_prompt_workload(cfg), max_steps=2000)
+        compiles = {k: v["compiles"] for k, v in st["runtime"].items()}
+        long_req = next(m for m in st["per_request"] if m["rid"] == 2)
+        short_gaps = [m["max_gap_ms"] for m in st["per_request"]
+                      if m["rid"] != 2]
+        out[name] = {
+            "completed": st["completed"],
+            "tpot_mean_ms": st["tpot_mean_ms"],
+            "tpot_p99_ms": st["tpot_p99_ms"],
+            "max_inter_token_gap_ms": st["max_inter_token_gap_ms"],
+            "inflight_max_gap_ms": max(short_gaps),
+            "long_ttft_ms": long_req["ttft_ms"],
+            "ttft_mean_ms": st["ttft_mean_ms"],
+            "prefill_time_ms": st["prefill_time_ms"],
+            "prefill_chunks": st["prefill_chunks"],
+            "throughput_tok_s": st["throughput_tok_s"],
+            "max_compiles_per_step": max(compiles.values()),
+            "compiles": compiles,
+        }
+        emit(f"serving/long_prompt/{name}/inflight_max_gap",
+             max(short_gaps) * 1e3,
+             f"long_ttft_ms={long_req['ttft_ms']:.1f};"
+             f"tpot_mean_ms={st['tpot_mean_ms']:.3f};"
+             f"max_compiles_per_step={max(compiles.values())}")
+    out["chunked_over_monolithic"] = {
+        "inflight_gap_reduction": (out["monolithic"]["inflight_max_gap_ms"]
+                                   / max(out["chunked"]["inflight_max_gap_ms"],
+                                         1e-9)),
+        "tpot_ratio": (out["chunked"]["tpot_mean_ms"]
+                       / max(out["monolithic"]["tpot_mean_ms"], 1e-9)),
+    }
+    emit("serving/long_prompt/chunked_gap_reduction",
+         out["chunked_over_monolithic"]["inflight_gap_reduction"],
+         f"tpot_ratio={out['chunked_over_monolithic']['tpot_ratio']:.3f}")
+    return out
 
 
 def run():
@@ -113,6 +196,7 @@ def run():
     }
     emit("serving/macro_over_per_step", speedup,
          f"tpot_speedup={speedup:.2f};host_sync_reduction={sync_drop:.1f}")
+    report["long_prompt"] = _long_prompt_scenario(api, params, ctx)
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -25,16 +25,22 @@ ap.add_argument("--block-size", type=int, default=8,
 ap.add_argument("--kv-bucket-chunk", type=int, default=64,
                 help="KV bucket granularity for length-aware decode "
                      "(block mode; 0 = full extent)")
+ap.add_argument("--prefill-chunk", type=int, default=16,
+                help="chunked-prefill lane: admit prompts as fixed (1,C) "
+                     "chunks interleaved with decode blocks, length-true "
+                     "cursors (0 = monolithic admission)")
 args = ap.parse_args()
 
 print(f"serving {args.requests} requests on {args.arch} "
       f"(batch={args.batch_slots}, prompt={args.prompt_len}, "
       f"max_new={args.max_new}, mode={args.mode}, "
-      f"arrival_every={args.arrival_every}, block_size={args.block_size})")
+      f"arrival_every={args.arrival_every}, block_size={args.block_size}, "
+      f"prefill_chunk={args.prefill_chunk})")
 stats = serve(args.arch, args.requests, args.batch_slots, args.prompt_len,
               args.max_new, mode=args.mode, arrival_every=args.arrival_every,
               block_size=args.block_size,
-              kv_bucket_chunk=args.kv_bucket_chunk)
+              kv_bucket_chunk=args.kv_bucket_chunk,
+              prefill_chunk=args.prefill_chunk)
 print(f"\nmode:        {stats['mode']}")
 print(f"completed:   {stats['completed']} "
       f"({stats['admissions']} admissions, "

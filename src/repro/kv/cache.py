@@ -215,6 +215,52 @@ def layer_append_slotted(k_l: jax.Array, v_l: jax.Array, k_scale_l, v_scale_l,
             jax.vmap(row)(v_l, v_new, slots, active), None, None)
 
 
+def layer_write_chunk(k_l: jax.Array, v_l: jax.Array, k_scale_l, v_scale_l,
+                      k_new: jax.Array, v_new: jax.Array, slot,
+                      start, valid_len):
+    """Chunked-prefill write: ONE slot's (C,)-wide chunk lands at cache
+    positions [start, start+C) of row ``slot``. k_l/v_l: (B,n_kv,S,hd);
+    k_new/v_new: (n_kv,C,hd); slot/start/valid_len are traced scalars — one
+    compiled program serves every chunk of every prompt. Chunk positions
+    >= ``valid_len`` (last-chunk padding) keep their previous bytes, so the
+    cache past a prompt's true length is never touched and per-row cursor
+    masks stay the single source of validity. Quantizes per position when
+    scale slices are present (int8 caches store the chunk pre-dequant)."""
+    C = k_new.shape[1]
+    keep = (jnp.arange(C, dtype=jnp.int32) < valid_len)[None, :, None]
+
+    def put(dst, new):
+        if dst is None:
+            return None
+        cur = jax.lax.dynamic_slice(
+            dst, (slot, 0, start, 0), (1,) + new.shape)
+        new = jnp.where(keep, new.astype(dst.dtype), cur[0])
+        return jax.lax.dynamic_update_slice(dst, new[None],
+                                            (slot, 0, start, 0))
+
+    if k_scale_l is not None:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        return (put(k_l, kq), put(v_l, vq),
+                put(k_scale_l, ks), put(v_scale_l, vs))
+    return put(k_l, k_new), put(v_l, v_new), None, None
+
+
+def layer_read_slot(k_l, v_l, k_scale_l, v_scale_l, slot,
+                    dtype=jnp.bfloat16):
+    """``layer_read`` over ONE batch row (traced ``slot``): returns the
+    slot's (1,n_kv,S,hd) K/V in compute dtype — the chunk-prefill attention
+    reads the prefix it just extended without touching other slots."""
+    def take(a):
+        if a is None:
+            return None
+        return jax.lax.dynamic_slice(
+            a, (slot,) + (0,) * (a.ndim - 1), (1,) + a.shape[1:])
+
+    return layer_read(take(k_l), take(v_l), take(k_scale_l),
+                      take(v_scale_l), dtype)
+
+
 def batch_valid_mask(size: int, window: int, positions: jax.Array) -> jax.Array:
     """(B,S) bool — per-row ``slot_valid_mask`` (decode order: append→attend);
     row b attends exactly the positions its own cursor has written."""

@@ -42,10 +42,13 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
           max_new: int, *, reduced: bool = True, seed: int = 0,
           executor: str = "sub_operator", mode: str = "auto",
           arrival_every: int = 0, block_size: int = 1,
-          kv_bucket_chunk: int = 0):
+          kv_bucket_chunk: int = 0, prefill_chunk: int = 0):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
+    if mode == "drain" and prefill_chunk:
+        print("note: --prefill-chunk ignored (drain mode has no chunk lane)")
+        prefill_chunk = 0
     api = build_model(cfg)
     ctx = ShardingCtx(None, sub_operator() if executor == "sub_operator"
                       else operator_centric())
@@ -55,7 +58,8 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
                          arrival_every)
     eng = ServingEngine(api, ctx, batch_slots, prompt_len, mode=mode,
                         block_size=block_size,
-                        kv_bucket_chunk=kv_bucket_chunk)
+                        kv_bucket_chunk=kv_bucket_chunk,
+                        prefill_chunk=prefill_chunk)
     stats = eng.run(params, reqs)
     return stats
 
@@ -79,12 +83,17 @@ def main(argv=None):
     ap.add_argument("--kv-bucket-chunk", type=int, default=0,
                     help="KV bucket granularity for length-aware decode "
                          "(block mode; 0 = full extent)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill lane: admit prompts as fixed "
+                         "(1,C) chunks, one per block boundary, with "
+                         "length-true cursors (0 = monolithic admission)")
     args = ap.parse_args(argv)
     stats = serve(args.arch, args.requests, args.batch, args.prompt_len,
                   args.max_new, mode=args.mode,
                   arrival_every=args.arrival_every,
                   block_size=args.block_size,
-                  kv_bucket_chunk=args.kv_bucket_chunk)
+                  kv_bucket_chunk=args.kv_bucket_chunk,
+                  prefill_chunk=args.prefill_chunk)
     per_req = stats.pop("per_request")
     rt = stats.pop("runtime")
     print("serve stats:", stats)

@@ -270,6 +270,44 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Chunk-prefill attention (C queries against the KV cache)
+#
+# The chunked-prefill lane (DESIGN.md §7) runs a fixed (1, C) program per
+# prompt chunk: the chunk's C queries attend the full cache prefix the chunk
+# just extended. The chunk offset is a TRACED scalar, so the static band-pair
+# enumeration of ``flash_attention`` does not apply — this is the multi-query
+# generalization of ``decode_attention`` (plain masked softmax over the cache
+# extent), sharing its sharding annotations and its -inf/underflow masking
+# semantics so bucketed and full-extent reads stay bit-identical.
+# ---------------------------------------------------------------------------
+
+def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    mask: jax.Array, ctx: ShardingCtx,
+                    scale: Optional[float] = None) -> jax.Array:
+    """q: (B, C, Hq, hd); k/v: (B, n_kv, S, hd); mask: (C, S) or (B, C, S)
+    bool. → (B, C, Hq, hd). ``decode_attention`` is the C == 1 special case
+    (modulo the query axis layout)."""
+    B, C, Hq, hd = q.shape
+    n_kv = k.shape[1]
+    G = Hq // n_kv
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, C, n_kv, G, hd)
+    s = jnp.einsum("bqkgh,bksh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * sc  # (B,n_kv,G,C,S)
+    s = ctx.ann(s, "batch", "kv_heads", None, None, "kv_seq")
+    if mask.ndim == 2:
+        mask = mask[None]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqs,bksh->bqkgh",
+                   (p / jnp.maximum(l, 1e-30)).astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, C, Hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Length-aware (chunk-bucketed) decode attention
 #
 # A freshly admitted request sits at position ~prompt_len while the cache is

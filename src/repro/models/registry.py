@@ -48,6 +48,13 @@ class ModelAPI(NamedTuple):
     #   micro-steps in ONE program with on-device per-slot halting — the
     #   macro-step decode path (DESIGN.md §7); see make_decode_block
     decode_block: Optional[Callable] = None
+    # prefill_chunk(params, caches, tokens, slot, start, valid_len, ctx)
+    #   → (caches, logits (1,1,V)): ONE fixed-(1,C) program that writes slot
+    #   ``slot``'s prompt chunk [start, start+valid_len) at its per-slot
+    #   offset and attends/advances over the prefix — the chunked-prefill
+    #   lane (DESIGN.md §7). slot/start/valid_len traced: zero retracing
+    #   across chunks, prompts and slots. None → monolithic admission only.
+    prefill_chunk: Optional[Callable] = None
 
 
 def make_decode_block(decode_slotted: Callable) -> Callable:
@@ -123,12 +130,19 @@ def _build_transformer(cfg: ModelConfig) -> ModelAPI:
 
     from repro.kv.cache import reset_slot, write_slot_kv
 
+    def prefill_chunk(params, caches, tokens, slot, start, valid_len, ctx):
+        return T.prefill_chunk(params, caches, tokens, slot, start,
+                               valid_len, cfg, ctx)
+
     return ModelAPI(cfg, lambda k: T.init_params(k, cfg), loss, prefill,
                     decode, init_caches, _lm_input_specs(cfg),
                     decode_slotted=decode_slotted,
                     write_slot=write_slot_kv,
                     reset_slot=reset_slot,
-                    decode_block=make_decode_block(decode_slotted))
+                    decode_block=make_decode_block(decode_slotted),
+                    # VLM prompts interleave vision embeds — the token-only
+                    # chunk walk cannot cover them; monolithic admission only
+                    prefill_chunk=None if is_vlm else prefill_chunk)
 
 
 def _build_ssm(cfg: ModelConfig) -> ModelAPI:
@@ -139,6 +153,10 @@ def _build_ssm(cfg: ModelConfig) -> ModelAPI:
                        kv_bucket: int = 0):
         return S.decode_step_slotted(params, state, tokens, positions,
                                      active, cfg, ctx, kv_bucket=kv_bucket)
+
+    def prefill_chunk(params, state, tokens, slot, start, valid_len, ctx):
+        return S.prefill_chunk(params, state, tokens, slot, start,
+                               valid_len, cfg, ctx)
 
     return ModelAPI(
         cfg,
@@ -151,7 +169,8 @@ def _build_ssm(cfg: ModelConfig) -> ModelAPI:
         decode_slotted=decode_slotted,
         write_slot=write_slot_tree,
         reset_slot=reset_slot_tree,
-        decode_block=make_decode_block(decode_slotted))
+        decode_block=make_decode_block(decode_slotted),
+        prefill_chunk=prefill_chunk)
 
 
 def _build_hybrid(cfg: ModelConfig) -> ModelAPI:

@@ -192,6 +192,80 @@ def ssd_decode(p: Dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
     return out, H, conv_new.astype(jnp.float32)
 
 
+def ssd_chunk(p: Dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+              H0: jax.Array, conv0: jax.Array, valid_len: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One PROMPT chunk of the SSD recurrence with carried state (the
+    chunked-prefill lane, DESIGN.md §7): the quadratic intra-chunk form of
+    ``ssd_full_seq`` (nc == 1) plus the inter-chunk contribution of the
+    incoming state ``H0`` and the rolling conv window ``conv0``.
+
+    x: (1,C,D); H0: (1,nh,hd,N); conv0: (1,W-1,Ch); valid_len traced —
+    chunk positions >= valid_len are last-chunk padding and are exact
+    no-ops on the state (dt → 0 ⇒ decay 1, zero contribution — the same
+    trick ssd_full_seq uses for its pad-to-chunk-multiple). Returns
+    (y (1,C,D), H_end, conv_end) with conv_end holding the last W-1 REAL
+    inputs (dynamic slice at valid_len, so a partial final chunk hands
+    decode the right window)."""
+    d_in, nh, hd, N, G, W = dims(cfg)
+    B, C, _ = x.shape
+    z, xs, bc, dt_raw = _project(p, x, cfg, ctx)
+    valid = jnp.arange(C, dtype=jnp.int32) < valid_len          # (C,)
+    dt_raw = jnp.where(valid[None, :, None], dt_raw, -1e4)
+    # -- rolling causal conv across chunk boundaries --------------------
+    # same accumulation dtype/order as causal_conv so chunk 0 (conv0 == 0)
+    # is bit-identical to the monolithic zero-padded conv
+    xbc = jnp.concatenate([xs, bc], axis=-1)                    # (1,C,Ch)
+    full = jnp.concatenate([conv0.astype(xbc.dtype), xbc],
+                           axis=1)                              # (1,W-1+C,Ch)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)  # (W,Ch)
+    y_conv = sum(full[:, w:w + C, :]
+                 * conv_w[w][None, None, :].astype(xbc.dtype)
+                 for w in range(W))                             # (1,C,Ch)
+    conv_end = jax.lax.dynamic_slice(
+        full.astype(jnp.float32), (0, valid_len, 0),
+        (B, W - 1, full.shape[2]))
+    xs1 = jax.nn.silu(y_conv[..., :d_in].astype(jnp.float32))
+    bc1 = jax.nn.silu(y_conv[..., d_in:].astype(jnp.float32))
+    Bm = bc1[..., :G * N].reshape(B, C, G, N)
+    Cm = bc1[..., G * N:].reshape(B, C, G, N)
+    xh = xs1.reshape(B, C, nh, hd)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])                 # (B,C,nh) f32
+    A = -jnp.exp(p["A_log"])                                    # (nh,)
+    loga = dt * A
+    L = jnp.cumsum(loga, axis=1)                                # (B,C,nh)
+
+    # intra-chunk: M[t,s] = C_t·B_s · exp(L_t − L_s) · dt_s  (s ≤ t)
+    CB = jnp.einsum("bqgn,bsgn->bgqs", Cm, Bm)                  # (B,G,C,C)
+    CBh = jnp.repeat(CB, nh // G, axis=1)                       # (B,nh,C,C)
+    Lt = L.transpose(0, 2, 1)                                   # (B,nh,C)
+    decay = jnp.exp(Lt[:, :, :, None] - Lt[:, :, None, :])
+    tri = jnp.tril(jnp.ones((C, C), bool))
+    M = jnp.where(tri[None, None], CBh * decay, 0.0)
+    M = M * dt.transpose(0, 2, 1)[:, :, None, :]
+    y_intra = jnp.einsum("bhqs,bshp->bqhp", M, xh)
+
+    # inter-chunk: carried state decays into every position
+    Ch_r = jnp.repeat(Cm, nh // G, axis=2)                      # (B,C,nh,N)
+    y_inter = jnp.einsum("bqh,bqhn,bhpn->bqhp",
+                         jnp.exp(L), Ch_r, H0.astype(jnp.float32))
+
+    # end-of-chunk state: H_end = H0·exp(ΣL) + Σ_s exp(Σ_{u>s}) dt_s x_s⊗B_s
+    dec_end = jnp.exp(L[:, -1:, :] - L)                         # (B,C,nh)
+    Bh = jnp.repeat(Bm, nh // G, axis=2)                        # (B,C,nh,N)
+    H_end = H0.astype(jnp.float32) \
+        * jnp.exp(L[:, -1, :])[..., None, None] \
+        + jnp.einsum("bsh,bshp,bshn->bhpn", dec_end * dt, xh, Bh)
+
+    y = y_intra + y_inter + p["D_skip"][None, None, :, None] * xh
+    y = y.reshape(B, C, d_in).astype(x.dtype)
+    y = common.apply_norm("rmsnorm", p["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = ctx.ann(y, "batch", "seq", "mlp")
+    return common.linear(p["out_proj"], y), H_end, conv_end
+
+
 # ---------------------------------------------------------------------------
 # Whole-model (mamba2 stacks SSD blocks + final norm; no separate FFN)
 # ---------------------------------------------------------------------------
@@ -291,6 +365,48 @@ def decode_step_slotted(params, state: RecurrentState, tokens,
     del positions, kv_bucket
     new_state, logits = decode_step(params, state, tokens, cfg, ctx)
     return mask_slots(active, new_state, state), logits
+
+
+def prefill_chunk(params, state: RecurrentState, tokens, slot, start,
+                  valid_len, cfg: ModelConfig, ctx: ShardingCtx
+                  ) -> Tuple[RecurrentState, jax.Array]:
+    """Chunked prefill for the recurrent family (DESIGN.md §7): one fixed
+    (1,C) program advances slot ``slot``'s per-layer (H, conv window) by one
+    prompt chunk via ``ssd_chunk``. ``start == 0`` zeroes the slot's carried
+    state first (a freed slot may hold the previous occupant's state — KV
+    caches mask staleness with cursors, recurrences must overwrite it).
+    Returns (state', logits (1,1,V)) — logits at the last valid position,
+    meaningful on the prompt's final chunk."""
+    x = common.embed(params["embed"], tokens, ctx)
+    fresh = (start > 0).astype(jnp.float32)        # 0.0 on the first chunk
+
+    def body(h, xs):
+        lp, H_all, conv_all = xs
+        H0 = jax.lax.dynamic_slice(
+            H_all, (slot,) + (0,) * (H_all.ndim - 1),
+            (1,) + H_all.shape[1:]) * fresh
+        conv0 = jax.lax.dynamic_slice(
+            conv_all, (slot,) + (0,) * (conv_all.ndim - 1),
+            (1,) + conv_all.shape[1:]) * fresh
+        y = common.apply_norm(cfg.norm, lp["ln"], h, cfg.norm_eps)
+        y = ctx.ann(y, "batch", "seq", "embed")
+        o, H1, conv1 = ssd_chunk(lp["ssd"], y, cfg, ctx, H0, conv0,
+                                 valid_len)
+        H_all = jax.lax.dynamic_update_slice(
+            H_all, H1.astype(H_all.dtype), (slot,) + (0,) * (H1.ndim - 1))
+        conv_all = jax.lax.dynamic_update_slice(
+            conv_all, conv1.astype(conv_all.dtype),
+            (slot,) + (0,) * (conv1.ndim - 1))
+        return h + o, (H_all, conv_all)
+
+    x, (Hs, convs) = jax.lax.scan(
+        body, x, (params["blocks"], state.h, state.conv),
+        unroll=common.scan_unroll())
+    state = RecurrentState(h=Hs, conv=convs)
+    x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+    logits = common.unembed_logits(params["embed"]["table"], last, ctx)
+    return state, logits
 
 
 def make_state(cfg: ModelConfig, batch: int) -> RecurrentState:

@@ -92,14 +92,29 @@ def _mix_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
 def block_full_seq(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
                    positions: jax.Array, causal: bool = True,
                    window: int = 0, train: bool = True,
-                   q_chunk: int = 0) -> Tuple[jax.Array, jax.Array]:
-    """Full-sequence block (train/prefill path). x: (B,S,D)."""
+                   q_chunk: int = 0,
+                   kv_quant_roundtrip: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence block (train/prefill path). x: (B,S,D).
+
+    ``kv_quant_roundtrip`` (int8-KV prefill only): attend the
+    quantize→dequantize image of K/V — the exact values the cache will store
+    — so prefill logits are a function of what decode will actually attend.
+    Without it a chunked prefill (which reads its prefix back from the int8
+    cache) could not be token-exact against the monolithic program. The
+    ORIGINAL fp K/V still flow to the caller: ``write_prefill`` quantizes
+    them identically (same per-position scales), keeping stored bytes
+    byte-for-byte what they always were."""
     from repro.models.attention import q_chunk_for
+    from repro.quant.int8 import dequantize_kv
     qc = q_chunk or q_chunk_for(x.shape[1])
     h = common.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
     h = ctx.ann(h, "batch", "seq", "embed")
     q, k, v = qkv_project(p["attn"], h, cfg, ctx, positions)
-    o = flash_attention(q, k, v, causal, window,
+    k_att, v_att = k, v
+    if kv_quant_roundtrip:
+        k_att = dequantize_kv(*quantize_kv(k), dtype=k.dtype)
+        v_att = dequantize_kv(*quantize_kv(v), dtype=v.dtype)
+    o = flash_attention(q, k_att, v_att, causal, window,
                         min(qc, x.shape[1]), min(qc, x.shape[1]))
     o = ctx.ann(o, "batch", "seq", "act_heads", "head_dim")
     o = common.linear(p["attn"]["wo"], o.reshape(x.shape[0], x.shape[1], -1))
@@ -187,6 +202,49 @@ def block_decode_slotted(p: dict, x: jax.Array, cfg: ModelConfig,
     return x, (k_l, v_l, ks_l, vs_l)
 
 
+def block_prefill_chunk(p: dict, x: jax.Array, cfg: ModelConfig,
+                        ctx: ShardingCtx, kv_slices: Tuple,
+                        slot: jax.Array, start: jax.Array,
+                        valid_len: jax.Array) -> Tuple[jax.Array, Tuple]:
+    """Chunk-prefill block over ONE layer's cache slices (DESIGN.md §7
+    chunked-prefill lane). x: (1,C,D) — slot ``slot``'s prompt chunk with
+    absolute positions [start, start+C). Writes the chunk's K/V at its
+    per-slot offset (``layer_write_chunk``; positions >= valid_len are
+    last-chunk padding and never touch the cache), reads the slot's full
+    prefix back from the STORED buffers (int8 caches dequantize — the same
+    values every later decode step will attend) and runs causal chunk
+    attention against it. slot/start/valid_len are traced: one compiled
+    program serves every chunk of every prompt. Non-windowed caches only
+    (ring order has no stable per-position offset to write at)."""
+    from repro.kv.cache import layer_read_slot, layer_write_chunk
+    from repro.models.attention import chunk_attention
+    _, C, _ = x.shape
+    k_l, v_l, ks_l, vs_l = kv_slices
+    positions = start + jnp.arange(C, dtype=jnp.int32)[None]          # (1,C)
+    h = common.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
+    h = ctx.ann(h, "batch", "seq", "embed")
+    q, k, v = qkv_project(p["attn"], h, cfg, ctx, positions)
+    k_l, v_l, ks_l, vs_l = layer_write_chunk(
+        k_l, v_l, ks_l, vs_l, jnp.swapaxes(k[0], 0, 1),
+        jnp.swapaxes(v[0], 0, 1), slot, start, valid_len)
+    kc, vc = layer_read_slot(k_l, v_l, ks_l, vs_l, slot, dtype=x.dtype)
+    kc = ctx.ann(kc, "batch", "kv_heads", "kv_seq", "head_dim")
+    vc = ctx.ann(vc, "batch", "kv_heads", "kv_seq", "head_dim")
+    # causal over absolute positions: query i attends cache slots <= start+i
+    # (padding queries i >= valid_len attend zeros/stale slots — their
+    # outputs are discarded; valid queries only ever reach real positions)
+    mask = jnp.arange(k_l.shape[2], dtype=jnp.int32)[None, :] \
+        <= positions[0][:, None]                                      # (C,S)
+    o = chunk_attention(q, kc, vc, mask, ctx)
+    o = common.linear(p["attn"]["wo"], o.reshape(1, C, -1))
+    x = ctx.ann(x + o, "batch", "seq", "embed_shard")
+    h = common.apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
+    h = ctx.ann(h, "batch", "seq", "embed")
+    f, _ = _mix_ffn(p, h, cfg, ctx, train=False)
+    x = ctx.ann(x + f, "batch", "seq", "embed_shard")
+    return x, (k_l, v_l, ks_l, vs_l)
+
+
 # ---------------------------------------------------------------------------
 # Whole-model parameter init
 # ---------------------------------------------------------------------------
@@ -234,9 +292,14 @@ def forward_hidden(params, tokens: jax.Array, cfg: ModelConfig,
     elif cfg.pos == "sinusoidal":
         x = x + common.sinusoidal_pos(S, cfg.d_model)[None].astype(x.dtype)
 
+    # int8-KV prefill: attention sees the quantized image of K/V (what the
+    # cache stores) so prefill logits and chunked-prefill logits agree
+    roundtrip = collect_kv and not train and cfg.kv_dtype == "int8"
+
     def _blk(lp, h):
         y, extras = block_full_seq(lp, h, cfg, ctx, positions, causal=True,
-                                   train=train)
+                                   train=train,
+                                   kv_quant_roundtrip=roundtrip)
         q, k, v, a = extras
         return y, (k, v, None, a)
 
@@ -405,6 +468,59 @@ def decode_step_slotted(params, cache: KVCache, tokens: jax.Array,
                     window=cache.window)
     x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
     logits = common.unembed_logits(unembed_table(params, cfg), x, ctx)
+    return cache, logits
+
+
+def prefill_chunk(params, cache: KVCache, tokens: jax.Array, slot: jax.Array,
+                  start: jax.Array, valid_len: jax.Array, cfg: ModelConfig,
+                  ctx: ShardingCtx) -> Tuple[KVCache, jax.Array]:
+    """Chunked prefill: ONE fixed-(1,C) program reused for every chunk of
+    every prompt (DESIGN.md §7 chunked-prefill lane). tokens: (1,C) — the
+    chunk of slot ``slot``'s prompt covering absolute positions
+    [start, start+valid_len); chunk positions >= valid_len are last-chunk
+    padding (masked out of both the KV write and the returned logits).
+    Returns (cache', logits (1,1,V)) — logits at the chunk's LAST VALID
+    position, meaningful only on a prompt's final chunk (the first decoded
+    token). slot/start/valid_len are traced scalars: zero retracing across
+    chunks, prompts and slots."""
+    if cache.window:
+        raise ValueError("chunked prefill requires a non-windowed cache "
+                         "(ring order has no per-position write offset)")
+    x = common.embed(params["embed"], tokens, ctx)
+    C = tokens.shape[1]
+    positions = start + jnp.arange(C, dtype=jnp.int32)
+    if cfg.pos == "learned":
+        x = x + jnp.take(params["pos_embed"], positions,
+                         axis=0)[None].astype(x.dtype)
+    elif cfg.pos == "sinusoidal":
+        table = common.sinusoidal_pos(cache.k.shape[3], cfg.d_model)
+        x = x + jnp.take(table, positions, axis=0)[None].astype(x.dtype)
+    quant = cache.is_quantized
+
+    def body(h, xs):
+        if quant:
+            lp, k_l, v_l, ks_l, vs_l = xs
+        else:
+            lp, k_l, v_l = xs
+            ks_l = vs_l = None
+        h, (k_l, v_l, ks_l, vs_l) = block_prefill_chunk(
+            lp, h, cfg, ctx, (k_l, v_l, ks_l, vs_l), slot, start, valid_len)
+        ys = (k_l, v_l, ks_l, vs_l) if quant else (k_l, v_l)
+        return h, ys
+
+    xs = (params["blocks"], cache.k, cache.v) + \
+        ((cache.k_scale, cache.v_scale) if quant else ())
+    x, ys = jax.lax.scan(body, x, xs, unroll=common.scan_unroll())
+    if quant:
+        k_new, v_new, ks_new, vs_new = ys
+    else:
+        (k_new, v_new), (ks_new, vs_new) = ys, (None, None)
+    new_len = jnp.maximum(cache.length, start + valid_len)
+    cache = KVCache(k_new, v_new, ks_new, vs_new, new_len,
+                    window=cache.window)
+    x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+    logits = common.unembed_logits(unembed_table(params, cfg), last, ctx)
     return cache, logits
 
 

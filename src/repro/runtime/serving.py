@@ -5,39 +5,46 @@ batching to future work (§7.2). This engine closes that gap without leaving
 the cache-resident/static-shape regime the paper's runtime depends on:
 
 - the decode batch is a fixed set of SLOTS (static shapes → AOT compile once),
-- a queued request is admitted into any free slot *mid-serve*: a batch-1
-  prefill runs, its cache is written into the slot (``ModelAPI.write_slot``),
-  and the slot's cursor restarts — no drain, no retrace,
+- a queued request is admitted into any free slot *mid-serve* — no drain, no
+  retrace,
 - every row carries its own cursor (``positions``) and an ``active`` mask is
   threaded through decode (``ModelAPI.decode_slotted``) so retired slots
   neither write KV nor pollute the argmax,
 - **macro-step decode** (``block_size`` = T > 1): decode runs as
   ``ModelAPI.decode_block`` — T greedy micro-steps inside ONE AOT-compiled
-  ``lax.scan``, with per-slot on-device halting (token budget + optional EOS
-  id as ``(B,)`` operands). The host syncs ONCE per T tokens instead of once
-  per token and admission waits for block boundaries — the step-axis analogue
-  of the paper's sub-operator dependency relaxation (§5): synchronize where
-  the dependency is (block edges), not at every operator/token boundary,
+  ``lax.scan``, with per-slot on-device halting. The host syncs ONCE per T
+  tokens and admission waits for block boundaries — the step-axis analogue
+  of the paper's sub-operator dependency relaxation (§5),
+- **chunked-prefill lane** (``prefill_chunk`` = C > 0): admission prefill is
+  no longer one monolithic full-width program that stalls the whole decode
+  batch. Each block boundary runs AT MOST ONE fixed-(1,C) chunk
+  (``ModelAPI.prefill_chunk``) for the admitting slot, writing KV at the
+  slot's offset, then the decode block for live slots — in-flight TPOT pays
+  one chunk per boundary instead of a full-prompt stall. Prompt lengths are
+  TRUE lengths end to end: the cursor starts at the real length (short
+  prompts land in small KV buckets from step 0) and arbitrary lengths are
+  covered by the chunk loop — nothing is ever silently truncated,
 - **length-aware KV walking**: in block mode each macro-step runs the block
   program compiled for the smallest KV *bucket* (chunk multiple) covering
-  every live cursor + T — freshly admitted requests stop paying for the
-  padded ``prompt_len + slack`` extent (``kv_bucket_chunk``; bucket set
-  fixed at prepare time, one compiled program per bucket),
-- all step programs (prefill-1, admit, per-bucket decode blocks) are
-  AOT-compiled through ``StaticRuntime`` — ``stats()`` must show
-  compiles == 1 per program with only ``calls`` growing across admissions
-  (the §4.3 pinned-pool invariant).
+  every live cursor + T (``kv_bucket_chunk``),
+- all step programs are AOT-compiled through ``StaticRuntime`` — ``stats()``
+  must show compiles == 1 per program with only ``calls`` growing across
+  admissions (the §4.3 pinned-pool invariant).
 
-The previous drain-then-refill loop is kept as ``mode="drain"`` — it is the
-baseline the continuous scheduler is measured against (late-arrival TTFT) and
-the fallback for model families without slotted support (DESIGN.md §7).
+The engine is split into a host-side **SlotScheduler** (slot occupancy,
+arrival pump, cursors/halt operands, chunk-lane bookkeeping — decisions
+only) and a device-side **StepExecutor** (the compiled step programs and the
+slot caches — execution only); ``ServingEngine`` is the boundary loop that
+connects them. The previous drain-then-refill loop is kept as
+``mode="drain"`` — the baseline the continuous scheduler is measured
+against, and the fallback for model families without slotted support.
 
 Per-request accounting: queue delay (enqueue→admit), TTFT (enqueue→first
-token), TPOT (steady-state inter-token time) — the serving-side metrics of
-the paper's Table 2 methodology. Engine-level: decode-token throughput
-(decode-produced tokens over decode wall-time only — prefill first-tokens
-are excluded from BOTH sides), host syncs per decode token (the macro-step
-headline metric) and per-macro-step token counts.
+token, spanning chunk boundaries under chunked admission), TPOT, and max
+inter-token gap (the decode-stall a prefill inflicts on in-flight requests).
+Engine-level: decode-token throughput over decode wall-time only — prefill
+AND chunk-prefill wall-time are excluded from both sides — host syncs per
+decode token, and per-macro-step token counts.
 """
 from __future__ import annotations
 
@@ -59,7 +66,7 @@ from repro.runtime.static_runtime import StaticRuntime
 @dataclass
 class Request:
     rid: int
-    prompt: np.ndarray                  # (S,) int32
+    prompt: np.ndarray                  # (L,) int32 — TRUE length, no padding
     max_new_tokens: int
     arrival_step: int = 0               # decode step at which it reaches the queue
     eos_id: int = -1                    # stop id (< 0 → budget-only halting)
@@ -69,6 +76,8 @@ class Request:
     t_first_token: float = 0.0
     t_done: float = 0.0
     admit_step: int = -1                # decode step at which it got a slot
+    t_last_emit: float = 0.0            # last token-emission sync (gap stats)
+    max_gap: float = 0.0                # max inter-token gap (decode stall)
 
     @property
     def done(self) -> bool:
@@ -77,19 +86,360 @@ class Request:
             return True
         return len(self.generated) >= self.max_new_tokens
 
+    def note_emit(self, now: float):
+        """Token(s) for this request became host-visible at ``now``; the max
+        gap between consecutive emissions is the decode-stall metric (a
+        monolithic prefill of another request shows up here)."""
+        if self.t_last_emit > 0.0:
+            self.max_gap = max(self.max_gap, now - self.t_last_emit)
+        self.t_last_emit = now
+
     def metrics(self) -> Dict[str, Any]:
         n = len(self.generated)
         return {
             "rid": self.rid,
             "tokens": n,
+            "prompt_tokens": int(len(self.prompt)),
             "arrival_step": self.arrival_step,
             "admit_step": self.admit_step,
             "queue_delay_ms": max(0.0, self.t_admitted - self.t_enqueue) * 1e3,
             "ttft_ms": max(0.0, self.t_first_token - self.t_enqueue) * 1e3,
             "tpot_ms": ((self.t_done - self.t_first_token) / (n - 1) * 1e3
                         if n > 1 else 0.0),
+            "max_gap_ms": self.max_gap * 1e3,
         }
 
+
+def pad_row(prompt: np.ndarray, width: int) -> np.ndarray:
+    """Zero-pad a prompt (or prompt slice) up to a static width. PAD ONLY:
+    callers must have rejected anything longer (the silent-truncation fix
+    deleted every truncating path)."""
+    assert len(prompt) <= width, (len(prompt), width)
+    row = np.zeros((width,), np.int32)
+    row[:len(prompt)] = prompt
+    return row
+
+
+# ---------------------------------------------------------------------------
+# SlotScheduler — the HOST half of the scheduler/executor split
+# ---------------------------------------------------------------------------
+
+class SlotScheduler:
+    """Slot occupancy, arrival pump, per-slot cursors/halt operands and the
+    chunked-prefill lane bookkeeping. Pure host state: it decides WHAT runs
+    at each block boundary and never touches a device array — the
+    StepExecutor owns every compiled call (DESIGN.md §7)."""
+
+    FREE, PREFILL, DECODE = "free", "prefill", "decode"
+
+    def __init__(self, n_slots: int, requests: List[Request],
+                 queue: List[Request]):
+        self.n = n_slots
+        self.pending = sorted(requests, key=lambda r: r.arrival_step)
+        self.queue = queue                       # engine-owned (submit target)
+        self.req: List[Optional[Request]] = [None] * n_slots
+        self.phase = [self.FREE] * n_slots
+        self.filled = [0] * n_slots              # prompt tokens written so far
+        self.prefill_fifo: List[int] = []        # slots awaiting chunk work
+        self.positions = np.zeros((n_slots,), np.int32)
+        self.last_tok = np.zeros((n_slots,), np.int32)
+        self.remaining = np.zeros((n_slots,), np.int32)
+        self.eos = np.full((n_slots,), -1, np.int32)
+
+    # -- queue / occupancy ------------------------------------------------
+    def work_remaining(self) -> bool:
+        return bool(self.pending or self.queue
+                    or any(p != self.FREE for p in self.phase))
+
+    def pump(self, step: int):
+        """Arrival simulation: requests whose arrival_step has come move to
+        the queue (already validated by run()). Stamped here UNLESS the
+        request was submit()ted before run() — its enqueue time is the
+        submit, and queue_delay/TTFT must keep counting from there."""
+        while self.pending and self.pending[0].arrival_step <= step:
+            r = self.pending.pop(0)
+            if not r.t_enqueue:
+                r.t_enqueue = time.monotonic()
+            self.queue.append(r)
+
+    def occupied(self) -> bool:
+        return any(p != self.FREE for p in self.phase)
+
+    def decode_active(self) -> np.ndarray:
+        return np.array([p == self.DECODE for p in self.phase])
+
+    # -- chunk lane -------------------------------------------------------
+    def assign_free(self, step: int) -> List[Request]:
+        """Move queued requests into free slots (PREFILL phase); their
+        chunks run one per boundary from the admission FIFO."""
+        admitted = []
+        now = time.monotonic()
+        for i in range(self.n):
+            if self.phase[i] == self.FREE and self.queue:
+                r = self.queue.pop(0)
+                r.t_admitted = now
+                r.admit_step = step
+                self.req[i] = r
+                self.phase[i] = self.PREFILL
+                self.filled[i] = 0
+                self.prefill_fifo.append(i)
+                admitted.append(r)
+        return admitted
+
+    def next_chunk(self, chunk: int, kv_extent: Optional[int]
+                   ) -> Optional[Tuple[int, Request, int, int]]:
+        """Head of the prefill FIFO → (slot, request, start, n_valid) for
+        the next fixed-shape chunk, or None when no slot is prefilling.
+
+        The fixed (1,C) window must FIT the cache: ``dynamic_update_slice``
+        clamps an out-of-bounds start instead of erroring, which would land
+        the final chunk's K/V at the wrong positions. When
+        ``start + C > kv_extent`` the window shifts LEFT over
+        already-written positions — recomputing a prefix position's K/V is
+        bit-identical (same tokens, same attended prefix), so the overlap
+        is a no-op and the window still ends at the prompt's true length."""
+        if not self.prefill_fifo:
+            return None
+        i = self.prefill_fifo[0]
+        r = self.req[i]
+        start = self.filled[i]
+        if kv_extent is not None and start + chunk > kv_extent:
+            start = kv_extent - chunk
+        return i, r, start, min(chunk, len(r.prompt) - start)
+
+    def chunk_done(self, slot: int, start: int, n_valid: int) -> bool:
+        """Advance the slot's prompt cursor; True when the prompt is fully
+        written (the chunk that just ran was the final one)."""
+        self.filled[slot] = start + n_valid
+        if self.filled[slot] >= len(self.req[slot].prompt):
+            self.prefill_fifo.pop(0)
+            return True
+        return False
+
+    # -- phase transitions ------------------------------------------------
+    def start_decode(self, slot: int, cursor: int, first_tok: int):
+        r = self.req[slot]
+        self.phase[slot] = self.DECODE
+        self.positions[slot] = cursor
+        self.last_tok[slot] = first_tok
+        self.remaining[slot] = r.max_new_tokens - 1
+        self.eos[slot] = r.eos_id
+
+    def retire(self, slot: int):
+        self.req[slot] = None
+        self.phase[slot] = self.FREE
+        if slot in self.prefill_fifo:
+            self.prefill_fifo.remove(slot)
+
+
+# ---------------------------------------------------------------------------
+# StepExecutor — the DEVICE half of the scheduler/executor split
+# ---------------------------------------------------------------------------
+
+class StepExecutor:
+    """Owns the slot caches and every AOT-compiled step program (compiled
+    once through ``StaticRuntime`` — the §4.3 zero-retracing invariant).
+    Each mode compiles exactly the programs it dispatches:
+
+      continuous, chunked admission   serve_prefill_chunk
+      continuous, monolithic admission serve_prefill1 + serve_admit
+      continuous, T == 1               serve_decode (or the eager raw_decode)
+      continuous, T > 1                serve_decode_block[_s{N}] per bucket
+      debug_reset_slots                serve_reset
+      drain                            serve_prefill_batch + serve_decode_drain
+
+    The scheduler never sees a jax array; the executor never makes a
+    scheduling decision."""
+
+    def __init__(self, api: ModelAPI, ctx: ShardingCtx, rt: StaticRuntime,
+                 params, caches_aval, *, mode: str, slots: int,
+                 prompt_len: int, max_new_cap: int, block_size: int,
+                 kv_bucket_chunk: int, prefill_chunk: int,
+                 debug_reset_slots: bool, raw_decode: Optional[Callable]):
+        self.api, self.ctx, self.rt = api, ctx, rt
+        self.slots, self.prompt_len = slots, prompt_len
+        self.max_new_cap = max_new_cap
+        self.block_size = block_size
+        self.caches = None
+        self.buckets: Tuple[int, ...] = ()
+        self._reset = None
+        if mode == "continuous":
+            self._build_continuous(params, caches_aval, kv_bucket_chunk,
+                                   prefill_chunk, debug_reset_slots,
+                                   raw_decode)
+        else:
+            self._build_drain(params)
+
+    # -- program construction --------------------------------------------
+    def _build_continuous(self, params, caches_aval, kv_bucket_chunk,
+                          prefill_chunk, debug_reset_slots, raw_decode):
+        api, ctx = self.api, self.ctx
+        B, P, T = self.slots, self.prompt_len, self.block_size
+        scalar = jnp.zeros((), jnp.int32)
+        pos0 = jnp.zeros((B,), jnp.int32)
+        act0 = jnp.zeros((B,), bool)
+        tok0 = jnp.zeros((B,), jnp.int32)
+
+        if prefill_chunk:
+            def chunk_fn(p, caches, toks, slot, start, valid):
+                caches, logits = api.prefill_chunk(p, caches, toks, slot,
+                                                   start, valid, ctx)
+                return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+            toks_c = jnp.zeros((1, prefill_chunk), jnp.int32)
+            self._chunk = self.rt.compile_step(
+                "serve_prefill_chunk", chunk_fn,
+                (params, caches_aval, toks_c, scalar, scalar, scalar),
+                donate_argnums=(1,))
+        else:
+            def prefill1_fn(p, toks):
+                caches, logits = api.prefill(p, {"tokens": toks}, ctx)
+                return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+            def admit_fn(caches, single, slot):
+                return api.write_slot(caches, single, slot)
+
+            toks1 = jnp.zeros((1, P), jnp.int32)
+            single_aval, _ = jax.eval_shape(prefill1_fn, params, toks1)
+            self._prefill1 = self.rt.compile_step(
+                "serve_prefill1", prefill1_fn, (params, toks1))
+            self._admit = self.rt.compile_step(
+                "serve_admit", admit_fn, (caches_aval, single_aval, scalar),
+                donate_argnums=(0,))
+
+        if debug_reset_slots and api.reset_slot is not None:
+            self._reset = self.rt.compile_step(
+                "serve_reset", lambda c, slot: api.reset_slot(c, slot),
+                (caches_aval, scalar), donate_argnums=(0,))
+
+        if T > 1:
+            # -- macro-step block programs, one per KV bucket --------------
+            # Bucketing applies only to prefix-ordered KV caches; recurrent
+            # states (and ring buffers) get the single full program.
+            bucketable = isinstance(caches_aval, KVCache) \
+                and not caches_aval.window
+            s_max = caches_aval.k.shape[3] if bucketable else 0
+            self.buckets = kv_buckets(s_max, kv_bucket_chunk) \
+                if bucketable and kv_bucket_chunk > 0 else (0,)
+            rem0 = jnp.zeros((B,), jnp.int32)
+            eos0 = jnp.full((B,), -1, jnp.int32)
+            self._decode_blocks: Dict[int, Callable] = {}
+            for sb in self.buckets:
+                name = "serve_decode_block" if len(self.buckets) == 1 \
+                    else f"serve_decode_block_s{sb}"
+
+                def block_fn(p, caches, tok, pos, act, rem, eos, _sb=sb):
+                    return api.decode_block(p, caches, tok, pos, act, rem,
+                                            eos, ctx, block_size=T,
+                                            kv_bucket=_sb)
+
+                self._decode_blocks[sb] = self.rt.compile_step(
+                    name, block_fn,
+                    (params, caches_aval, tok0, pos0, act0, rem0, eos0),
+                    donate_argnums=(1,))
+            return
+
+        def postprocess(logits, positions, active):
+            # active-slot mask: retired slots emit a fixed token id 0 and
+            # never advance — finished requests cannot pollute the stream
+            nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            return jnp.where(active, nxt, 0), \
+                positions + active.astype(jnp.int32)
+
+        def decode_fn(p, caches, tokens, positions, active):
+            caches, logits = api.decode_slotted(p, caches, tokens, positions,
+                                                active, ctx)
+            return (caches,) + postprocess(logits, positions, active)
+
+        if raw_decode is None:
+            self._decode = self.rt.compile_step(
+                "serve_decode", decode_fn,
+                (params, caches_aval, tok0, pos0, act0),
+                donate_argnums=(1,))
+        else:
+            def decode_eager(p, caches, tokens, positions, active):
+                caches, logits = raw_decode(p, caches, tokens, positions,
+                                            active)
+                return (caches,) + postprocess(logits, positions, active)
+            self._decode = decode_eager
+
+    def _build_drain(self, params):
+        api, ctx = self.api, self.ctx
+
+        def prefill_fn(p, toks):
+            caches, logits = api.prefill(p, {"tokens": toks}, ctx)
+            return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+        def decode_fn(p, caches, tokens):
+            caches, logits = api.decode(p, caches, tokens, ctx)
+            return caches, jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+
+        toks0 = jnp.zeros((self.slots, self.prompt_len), jnp.int32)
+        caches_aval, tok_aval = jax.eval_shape(prefill_fn, params, toks0)
+        self._prefill_b = self.rt.compile_step(
+            "serve_prefill_batch", prefill_fn, (params, toks0))
+        self._decode_b = self.rt.compile_step(
+            "serve_decode_drain", decode_fn, (params, caches_aval, tok_aval),
+            donate_argnums=(1,))
+
+    # -- execution --------------------------------------------------------
+    @property
+    def has_reset(self) -> bool:
+        return self._reset is not None
+
+    def fresh(self):
+        """Fresh slot caches for a new run (AOT programs persist)."""
+        self.caches = self.api.init_caches(self.slots,
+                                           self.prompt_len + self.max_new_cap)
+
+    def admit_full(self, params, row: np.ndarray, slot: int):
+        """Monolithic admission: batch-1 full-width prefill + slot write.
+        Returns the device array holding the first token."""
+        single, first = self._prefill1(params, jnp.asarray(row[None]))
+        self.caches = self._admit(self.caches, single,
+                                  jnp.asarray(slot, jnp.int32))
+        return first
+
+    def run_chunk(self, params, row: np.ndarray, slot: int, start: int,
+                  valid: int):
+        """One fixed-(1,C) prefill chunk at the slot's offset. Returns the
+        device array holding the chunk's last-valid-position argmax (the
+        first token when this was the prompt's final chunk)."""
+        self.caches, tok = self._chunk(
+            params, self.caches, jnp.asarray(row[None]),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(start, jnp.int32),
+            jnp.asarray(valid, jnp.int32))
+        return tok
+
+    def decode_step(self, params, last_tok, positions, active):
+        self.caches, nxt, new_pos = self._decode(
+            params, self.caches, jnp.asarray(last_tok),
+            jnp.asarray(positions), jnp.asarray(active))
+        return nxt, new_pos
+
+    def decode_block(self, params, bucket, last_tok, positions, active,
+                     remaining, eos):
+        self.caches, toks, emitted, last_d, pos_d, act_d, rem_d = \
+            self._decode_blocks[bucket](
+                params, self.caches, jnp.asarray(last_tok),
+                jnp.asarray(positions), jnp.asarray(active),
+                jnp.asarray(remaining), jnp.asarray(eos))
+        return toks, emitted, last_d, pos_d, act_d, rem_d
+
+    def reset(self, slot: int):
+        self.caches = self._reset(self.caches, jnp.asarray(slot, jnp.int32))
+
+    def drain_prefill(self, params, toks: np.ndarray):
+        caches, first = self._prefill_b(params, jnp.asarray(toks))
+        return caches, first
+
+    def drain_decode(self, params, caches, last):
+        return self._decode_b(params, caches, last)
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine — the boundary loop connecting scheduler and executor
+# ---------------------------------------------------------------------------
 
 class ServingEngine:
     """Greedy decoding over fixed batch slots with per-slot admission.
@@ -102,6 +452,16 @@ class ServingEngine:
     per-step engine (one ``serve_decode`` program, one host sync per token);
     T > 1 runs ``ModelAPI.decode_block`` with on-device halt masks — one host
     sync per T tokens, admission at block boundaries only.
+
+    ``prefill_chunk`` (C, continuous mode, families with
+    ``ModelAPI.prefill_chunk``): admission runs as fixed-(1,C) prompt chunks,
+    AT MOST ONE per block boundary, interleaved with the decode block — the
+    chunked-prefill lane. Prompts carry TRUE lengths end to end: the decode
+    cursor starts at the real prompt length and any length that fits the KV
+    extent (prompt + max_new_tokens ≤ prompt_len + max_new_cap) is admitted
+    chunk by chunk. 0 → monolithic admission (one full-width prefill program;
+    prompts longer than ``prompt_len`` raise ``ValueError`` at submit —
+    nothing is ever silently truncated).
 
     ``kv_bucket_chunk`` (block mode, KV-cache families): > 0 compiles one
     decode-block program per KV bucket (chunk multiples up to the cache
@@ -131,24 +491,38 @@ class ServingEngine:
                  max_new_cap: int = DECODE_SLACK,
                  raw_decode: Optional[Callable] = None,
                  block_size: int = 1, kv_bucket_chunk: int = 0,
+                 prefill_chunk: int = 0,
                  debug_reset_slots: bool = False):
         if mode not in ("auto", "continuous", "drain"):
             raise ValueError(mode)
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got {prefill_chunk}")
         if block_size > 1 and raw_decode is not None:
             raise ValueError("raw_decode is a per-step hook; macro-step "
                              "decode (block_size > 1) requires the AOT "
                              "decode_block path")
-        # continuous mode always needs write_slot (admission); the decode
-        # half comes from api.decode_block (T > 1), api.decode_slotted or a
-        # raw_decode override (T == 1)
+        # continuous mode needs a decode half (api.decode_block for T > 1,
+        # api.decode_slotted or a raw_decode override for T == 1) AND an
+        # admission half (api.prefill_chunk for the chunked lane,
+        # api.write_slot for monolithic admission)
         decode_ok = (api.decode_block is not None if block_size > 1 else
                      api.decode_slotted is not None or raw_decode is not None)
-        slotted_ok = api.write_slot is not None and decode_ok
+        if mode == "auto" and prefill_chunk > 0 \
+                and api.prefill_chunk is None:
+            prefill_chunk = 0        # auto: fall back to monolithic admission
+        admit_ok = (api.prefill_chunk is not None if prefill_chunk > 0 else
+                    api.write_slot is not None)
+        slotted_ok = admit_ok and decode_ok
         if mode == "continuous" and not slotted_ok:
             raise ValueError(
-                f"{api.config.family} family has no slotted decode support")
+                f"{api.config.family} family has no "
+                f"{'chunked-prefill' if prefill_chunk > 0 else 'slotted'} "
+                f"serving support")
+        if mode == "drain" and prefill_chunk > 0:
+            raise ValueError("chunked prefill requires the continuous "
+                             "scheduler (drain prefills the whole batch)")
         self.api = api
         self.ctx = ctx
         self.slots = batch_slots
@@ -156,28 +530,52 @@ class ServingEngine:
         self.max_new_cap = min(max_new_cap, DECODE_SLACK)
         self.mode = ("continuous" if slotted_ok else "drain") \
             if mode == "auto" else mode
+        if self.mode == "drain":
+            prefill_chunk = 0                    # auto fallback: no lane
         self.block_size = block_size
         self.kv_bucket_chunk = kv_bucket_chunk
+        self.prefill_chunk = prefill_chunk
         self.debug_reset_slots = debug_reset_slots
         self.rt = runtime or StaticRuntime()
         self.queue: List[Request] = []
         self._params = None
         self._raw_decode = raw_decode
-        self._prepared = False
-        self._buckets: Tuple[int, ...] = ()
-        self._reset = None
+        self._ex: Optional[StepExecutor] = None
+        # the ONE derivation of the slot-cache aval: the executor compiles
+        # against it and the KV-extent admission bound reads off it
+        # (None extent → no length axis to bound, e.g. recurrent state)
+        self._caches_aval = jax.eval_shape(
+            lambda: api.init_caches(batch_slots,
+                                    prompt_len + self.max_new_cap))
+        self._kv_extent = self._caches_aval.k.shape[3] \
+            if isinstance(self._caches_aval, KVCache) \
+            and not self._caches_aval.window else None
+        if self.prefill_chunk and isinstance(self._caches_aval, KVCache) \
+                and self._caches_aval.window:
+            raise ValueError("chunked prefill requires a non-windowed KV "
+                             "cache (ring order has no per-position write "
+                             "offset)")
+        if self.prefill_chunk and self._kv_extent is not None \
+                and self.prefill_chunk > self._kv_extent:
+            raise ValueError(
+                f"prefill_chunk={self.prefill_chunk} exceeds the KV extent "
+                f"{self._kv_extent}; the fixed (1,C) window must fit the "
+                f"cache")
         self._reset_per_run()
 
     # ------------------------------------------------------------------
     def _reset_per_run(self):
         """Per-run accumulators. An engine reused across ``run()`` calls
         must not leak timing samples or sync counts from a previous run
-        (stats would blend workloads), and ``self._caches`` from a finished
-        run must never seed the next one (stale KV in freed slots)."""
+        (stats would blend workloads), and the executor's caches from a
+        finished run must never seed the next one (stale KV in freed
+        slots)."""
         self.tpot_samples: List[float] = []
         self.host_syncs = 0
         self._decode_tokens = 0
         self._decode_time = 0.0
+        self._prefill_time = 0.0
+        self._prefill_chunks = 0
         self._block_tokens: List[int] = []
         self._macro_steps = 0
         self.queue = []
@@ -193,344 +591,275 @@ class ServingEngine:
     def load(self, params):
         self._params = params
 
+    def _validate_request(self, r: Request):
+        """Admission-time length contract — the silent-truncation fix: a
+        prompt the engine cannot represent is REJECTED here, never cut."""
+        L = len(r.prompt)
+        if L == 0:
+            raise ValueError(f"request {r.rid}: empty prompt")
+        if r.max_new_tokens < 1:
+            raise ValueError(
+                f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
+                f"must be >= 1 (every admission produces a first token)")
+        if r.max_new_tokens > self.max_new_cap:
+            raise ValueError(
+                f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
+                f"exceeds cache slack {self.max_new_cap}")
+        if self.mode == "drain" or not self.prefill_chunk:
+            if L > self.prompt_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {L} exceeds the static "
+                    f"prompt width {self.prompt_len} and would be silently "
+                    f"truncated; raise prompt_len or enable the "
+                    f"chunked-prefill lane (prefill_chunk > 0)")
+        elif self._kv_extent is not None \
+                and L + r.max_new_tokens > self._kv_extent:
+            raise ValueError(
+                f"request {r.rid}: prompt length {L} + "
+                f"max_new_tokens={r.max_new_tokens} exceeds the KV extent "
+                f"{self._kv_extent}")
+
     def submit(self, req: Request):
+        self._validate_request(req)
         req.t_enqueue = time.monotonic()
         self.queue.append(req)
 
     # ------------------------------------------------------------------
-    # AOT step programs — compiled ONCE at first run; admission/decode are
-    # cached-executable calls from then on (zero retracing, §4.3 analogue).
-    # ------------------------------------------------------------------
-    def _fresh_caches(self):
-        return self.api.init_caches(self.slots,
-                                    self.prompt_len + self.max_new_cap)
-
-    def _prepare_continuous(self, params):
-        api, ctx = self.api, self.ctx
-        B, P, T = self.slots, self.prompt_len, self.block_size
-
-        def prefill1_fn(p, toks):
-            caches, logits = api.prefill(p, {"tokens": toks}, ctx)
-            return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-
-        def admit_fn(caches, single, slot):
-            return api.write_slot(caches, single, slot)
-
-        def postprocess(logits, positions, active):
-            # active-slot mask: retired slots emit a fixed token id 0 and
-            # never advance — finished requests cannot pollute the stream
-            nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
-            return jnp.where(active, nxt, 0), \
-                positions + active.astype(jnp.int32)
-
-        caches_aval = jax.eval_shape(self._fresh_caches)
-        toks1 = jnp.zeros((1, P), jnp.int32)
-        single_aval, _ = jax.eval_shape(prefill1_fn, params, toks1)
-        pos0 = jnp.zeros((B,), jnp.int32)
-        act0 = jnp.zeros((B,), bool)
-        tok0 = jnp.zeros((B,), jnp.int32)
-        self._prefill1 = self.rt.compile_step(
-            "serve_prefill1", prefill1_fn, (params, toks1))
-        self._admit = self.rt.compile_step(
-            "serve_admit", admit_fn,
-            (caches_aval, single_aval, jnp.zeros((), jnp.int32)),
-            donate_argnums=(0,))
-        if self.debug_reset_slots and api.reset_slot is not None:
-            self._reset = self.rt.compile_step(
-                "serve_reset", lambda c, slot: api.reset_slot(c, slot),
-                (caches_aval, jnp.zeros((), jnp.int32)), donate_argnums=(0,))
-        if T > 1:
-            # -- macro-step block programs, one per KV bucket --------------
-            # Bucketing applies only to prefix-ordered KV caches; recurrent
-            # states (and ring buffers) get the single full program.
-            bucketable = isinstance(caches_aval, KVCache) \
-                and not caches_aval.window
-            s_max = caches_aval.k.shape[3] if bucketable else 0
-            self._buckets = kv_buckets(s_max, self.kv_bucket_chunk) \
-                if bucketable and self.kv_bucket_chunk > 0 else (0,)
-            rem0 = jnp.zeros((B,), jnp.int32)
-            eos0 = jnp.full((B,), -1, jnp.int32)
-            self._decode_blocks: Dict[int, Callable] = {}
-            for sb in self._buckets:
-                name = "serve_decode_block" if len(self._buckets) == 1 \
-                    else f"serve_decode_block_s{sb}"
-
-                def block_fn(p, caches, tok, pos, act, rem, eos, _sb=sb):
-                    return api.decode_block(p, caches, tok, pos, act, rem,
-                                            eos, ctx, block_size=T,
-                                            kv_bucket=_sb)
-
-                self._decode_blocks[sb] = self.rt.compile_step(
-                    name, block_fn,
-                    (params, caches_aval, tok0, pos0, act0, rem0, eos0),
-                    donate_argnums=(1,))
-            return
-
-        def decode_fn(p, caches, tokens, positions, active):
-            caches, logits = api.decode_slotted(p, caches, tokens, positions,
-                                                active, ctx)
-            return (caches,) + postprocess(logits, positions, active)
-
-        if self._raw_decode is None:
-            self._decode = self.rt.compile_step(
-                "serve_decode", decode_fn,
-                (params, caches_aval, tok0, pos0, act0),
-                donate_argnums=(1,))
-        else:
-            raw = self._raw_decode
-
-            def decode_eager(p, caches, tokens, positions, active):
-                caches, logits = raw(p, caches, tokens, positions, active)
-                return (caches,) + postprocess(logits, positions, active)
-            self._decode = decode_eager
-
-    def _prepare_drain(self, params):
-        api, ctx = self.api, self.ctx
-
-        def prefill_fn(p, toks):
-            caches, logits = api.prefill(p, {"tokens": toks}, ctx)
-            return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-
-        def decode_fn(p, caches, tokens):
-            caches, logits = api.decode(p, caches, tokens, ctx)
-            return caches, jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
-
-        toks0 = jnp.zeros((self.slots, self.prompt_len), jnp.int32)
-        caches_aval, tok_aval = jax.eval_shape(prefill_fn, params, toks0)
-        self._prefill_b = self.rt.compile_step(
-            "serve_prefill_batch", prefill_fn, (params, toks0))
-        self._decode_b = self.rt.compile_step(
-            "serve_decode_drain", decode_fn, (params, caches_aval, tok_aval),
-            donate_argnums=(1,))
-
     def _prepare(self, params):
-        if self._prepared:
-            return
-        if self.mode == "continuous":
-            self._prepare_continuous(params)
-        else:
-            self._prepare_drain(params)
-        self._prepared = True
+        if self._ex is None:
+            self._ex = StepExecutor(
+                self.api, self.ctx, self.rt, params, self._caches_aval,
+                mode=self.mode,
+                slots=self.slots, prompt_len=self.prompt_len,
+                max_new_cap=self.max_new_cap, block_size=self.block_size,
+                kv_bucket_chunk=self.kv_bucket_chunk,
+                prefill_chunk=self.prefill_chunk,
+                debug_reset_slots=self.debug_reset_slots,
+                raw_decode=self._raw_decode)
 
-    # ------------------------------------------------------------------
     def run(self, params, requests: List[Request],
             max_steps: int = 10_000) -> Dict[str, Any]:
         """Serve all requests to completion; returns latency stats.
-        Reusable: each call starts from fresh caches and fresh accumulators
-        (AOT programs persist — zero recompilation across runs)."""
+        Requests enqueued via ``submit()`` before this call are served too
+        (never silently dropped). Reusable: each call starts from fresh
+        caches and fresh accumulators (AOT programs persist — zero
+        recompilation across runs)."""
         self.load(params)
+        pre = list(self.queue)
+        seen = {id(r) for r in pre}
+        requests = pre + [r for r in requests if id(r) not in seen]
         for r in requests:
-            if r.max_new_tokens > self.max_new_cap:
-                raise ValueError(
-                    f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
-                    f"exceeds cache slack {self.max_new_cap}")
+            self._validate_request(r)
         self._prepare(params)
         self._reset_per_run()
         if self.mode == "continuous":
             return self._run_continuous(params, requests, max_steps)
         return self._run_drain(params, requests, max_steps)
 
-    def _pad_prompt(self, r: Request) -> np.ndarray:
-        """(prompt_len,) — prompt truncated/zero-padded to the static width."""
-        row = np.zeros((self.prompt_len,), np.int32)
-        row[:len(r.prompt)] = r.prompt[:self.prompt_len]
-        return row
-
     # ------------------------------------------------------------------
-    def _admit_requests(self, params, caches, active_req, steps, batch_live):
-        """Fill EVERY free slot from the queue (no drain). Returns
-        (caches, admissions, overlapped, finished, admitted) —
-        ``finished`` are requests done at their first (prefill) token,
-        ``admitted`` the (slot, request) pairs now occupying a slot (the
-        caller initializes its cursor/halt arrays from these)."""
+    # continuous scheduler: ONE boundary loop for T == 1 and T > 1,
+    # monolithic and chunked admission
+    # ------------------------------------------------------------------
+
+    def _run_continuous(self, params, requests, max_steps):
+        T = self.block_size
+        ex = self._ex
+        ex.fresh()
+        sched = SlotScheduler(self.slots, requests, self.queue)
+        done: List[Request] = []
+        steps = admissions = overlapped = 0
+        s_max = self.prompt_len + self.max_new_cap
+        while sched.work_remaining():
+            if steps >= max_steps:
+                break
+            sched.pump(steps)
+            # "overlapped" = admitted while the batch was already live at
+            # the start of this boundary (cold-start fills don't count)
+            batch_live = sched.occupied()
+            if self.prefill_chunk:
+                while True:
+                    new = sched.assign_free(steps)
+                    admissions += len(new)
+                    overlapped += len(new) if batch_live else 0
+                    done.extend(self._advance_chunk_lane(params, sched))
+                    # the one-chunk-per-boundary throttle exists to bound
+                    # the stall inflicted on LIVE decoders; with none live
+                    # there is nothing to protect — keep chunking so a
+                    # cold start does not serialize admission
+                    if sched.decode_active().any() or not sched.prefill_fifo:
+                        break
+            else:
+                n_adm, n_ovl, fin = self._admit_monolithic(
+                    params, sched, steps, batch_live)
+                admissions += n_adm
+                overlapped += n_ovl
+                done.extend(fin)
+            active = sched.decode_active()
+            if not active.any():
+                steps += 1                       # idle/prefill-only boundary
+                continue
+            done.extend(self._decode_round(params, sched, active, s_max))
+            steps += T
+        self._caches = ex.caches
+        return self._stats(done, steps, admissions, overlapped)
+
+    # -- admission: monolithic lane ------------------------------------
+    def _admit_monolithic(self, params, sched: SlotScheduler, steps: int,
+                          batch_live: bool):
+        """Fill EVERY free slot from the queue with a full-width batch-1
+        prefill + slot write (the pre-chunking admission path, kept as the
+        measured baseline). Prompts are zero-padded up to ``prompt_len`` —
+        never truncated (submit rejects longer) — and the cursor starts at
+        the padded width (the padding IS attended; the chunked lane is the
+        length-true path)."""
+        ex = self._ex
         admissions = overlapped = 0
         finished: List[Request] = []
-        admitted: List[Tuple[int, Request]] = []
         for i in range(self.slots):
             # retry the SAME slot while admissions complete at their first
             # token (max_new_tokens == 1 / instant EOS) — a one-token
             # request must not idle the slot until the next boundary
-            while active_req[i] is None and self.queue:
+            while sched.phase[i] == sched.FREE and self.queue:
                 r = self.queue.pop(0)
                 if batch_live:
                     overlapped += 1
                 r.t_admitted = time.monotonic()
                 r.admit_step = steps
-                single, first = self._prefill1(
-                    params, jnp.asarray(self._pad_prompt(r)[None]))
-                caches = self._admit(caches, single,
-                                     jnp.asarray(i, jnp.int32))
+                sched.req[i] = r
+                t0 = time.monotonic()
+                first = ex.admit_full(params, pad_row(r.prompt,
+                                                      self.prompt_len), i)
                 first.block_until_ready()
-                r.t_first_token = time.monotonic()
+                now = time.monotonic()
+                self._prefill_time += now - t0
+                r.t_first_token = now
+                r.note_emit(now)
                 r.generated.append(int(np.asarray(first)[0]))
                 admissions += 1
                 if r.done:
-                    r.t_done = r.t_first_token
+                    r.t_done = now
                     finished.append(r)
+                    sched.req[i] = None
                     # the admit DID write its prompt KV — zero it like any
                     # other retirement so dumps stay clean
-                    if self._reset is not None:
-                        caches = self._reset(caches,
-                                             jnp.asarray(i, jnp.int32))
+                    if ex.has_reset:
+                        ex.reset(i)
                     continue
-                active_req[i] = r
-                admitted.append((i, r))
-        return caches, admissions, overlapped, finished, admitted
+                sched.start_decode(i, self.prompt_len, r.generated[-1])
+        return admissions, overlapped, finished
 
-    def _run_continuous(self, params, requests, max_steps):
-        if self.block_size > 1:
-            return self._run_continuous_block(params, requests, max_steps)
-        pending = sorted(requests, key=lambda r: r.arrival_step)
-        active_req: List[Optional[Request]] = [None] * self.slots
-        positions = np.zeros((self.slots,), np.int32)
-        last_tok = np.zeros((self.slots,), np.int32)
-        caches = self._fresh_caches()
-        done: List[Request] = []
-        steps = admissions = overlapped = 0
-        while pending or self.queue or any(r is not None for r in active_req):
-            if steps >= max_steps:
-                break
-            while pending and pending[0].arrival_step <= steps:
-                self.submit(pending.pop(0))
-            # -- admission: fill EVERY free slot from the queue, no drain --
-            # "overlapped" = admitted while the batch was already live at the
-            # start of this round (cold-start fills at step 0 don't count)
-            batch_live = any(a is not None for a in active_req)
-            caches, n_adm, n_ovl, finished, new_slots = self._admit_requests(
-                params, caches, active_req, steps, batch_live)
-            admissions += n_adm
-            overlapped += n_ovl
-            done.extend(finished)
-            for i, r in new_slots:
-                positions[i] = self.prompt_len
-                last_tok[i] = r.generated[-1]
-            active = np.array([a is not None for a in active_req])
-            if not active.any():
-                steps += 1                       # idle tick: await arrivals
-                continue
-            # -- one fused decode step over all slots ----------------------
+    # -- admission: chunked-prefill lane -------------------------------
+    def _advance_chunk_lane(self, params, sched: SlotScheduler):
+        """Run AT MOST ONE fixed-shape prefill chunk this boundary (the
+        admitting slot at the head of the FIFO). In-flight decoders stall
+        for one chunk, not one prompt; the final chunk's logits are the
+        request's first token and flip the slot to the decode phase with
+        its cursor at the TRUE prompt length."""
+        job = sched.next_chunk(self.prefill_chunk, self._kv_extent)
+        if job is None:
+            return []
+        slot, r, start, n_valid = job
+        row = pad_row(r.prompt[start:start + n_valid], self.prefill_chunk)
+        t0 = time.monotonic()
+        tok = self._ex.run_chunk(params, row, slot, start, n_valid)
+        first = np.asarray(tok)                   # blocks: chunk wall-time
+        now = time.monotonic()
+        self._prefill_time += now - t0
+        self._prefill_chunks += 1
+        finished: List[Request] = []
+        if sched.chunk_done(slot, start, n_valid):
+            r.t_first_token = now
+            r.note_emit(now)
+            r.generated.append(int(first[0]))
+            if r.done:
+                r.t_done = now
+                finished.append(r)
+                sched.retire(slot)
+                if self._ex.has_reset:
+                    self._ex.reset(slot)
+            else:
+                sched.start_decode(slot, len(r.prompt), r.generated[-1])
+        return finished
+
+    # -- decode round ---------------------------------------------------
+    def _decode_round(self, params, sched: SlotScheduler, active, s_max):
+        """One decode dispatch + ONE counted host sync: a single slotted
+        step (T == 1) or a T-micro-step block with on-device halting."""
+        T = self.block_size
+        ex = self._ex
+        finished: List[Request] = []
+        if T == 1:
             t0 = time.monotonic()
-            caches, nxt, new_pos = self._decode(
-                params, caches, jnp.asarray(last_tok),
-                jnp.asarray(positions), jnp.asarray(active))
+            nxt, new_pos = ex.decode_step(params, sched.last_tok,
+                                          sched.positions, active)
             nxt, new_pos = self._host_sync(nxt, new_pos)
             dt = time.monotonic() - t0
             self.tpot_samples.append(dt)
             self._decode_time += dt
             n_tok = int(active.sum())
-            self._decode_tokens += n_tok
-            self._block_tokens.append(n_tok)
-            self._macro_steps += 1
-            positions = new_pos.copy()
-            last_tok = nxt.copy()
-            steps += 1
+            sched.positions = new_pos.copy()
+            sched.last_tok = nxt.copy()
             now = time.monotonic()
-            for i, r in enumerate(active_req):
-                if r is None:
+            for i, r in enumerate(sched.req):
+                if r is None or sched.phase[i] != sched.DECODE:
                     continue
                 r.generated.append(int(nxt[i]))
+                r.note_emit(now)
                 if r.done:
                     r.t_done = now
-                    done.append(r)
-                    active_req[i] = None         # freed → admitted next step
-                    if self._reset is not None:
-                        caches = self._reset(caches,
-                                             jnp.asarray(i, jnp.int32))
-        self._caches = caches
-        return self._stats(done, steps, admissions, overlapped)
-
-    # ------------------------------------------------------------------
-    def _run_continuous_block(self, params, requests, max_steps):
-        """Macro-step scheduler: T decode micro-steps per device call, one
-        host sync + one admission round per block boundary. Per-slot halt
-        state (budget ``remaining``, ``eos`` ids) rides along as (B,)
-        operands so the device loop never needs the host to retire a slot.
-
-        Deliberately a twin of the T == 1 loop in ``_run_continuous``
-        (shared admission via ``_admit_requests``; the scheduler shell —
-        arrival pump, idle tick, retirement+reset — is kept in both).
-        A fix to the shell logic must land in BOTH loops; the token-equality
-        tests in test_macro_step.py catch divergence."""
-        T = self.block_size
-        pending = sorted(requests, key=lambda r: r.arrival_step)
-        active_req: List[Optional[Request]] = [None] * self.slots
-        positions = np.zeros((self.slots,), np.int32)
-        last_tok = np.zeros((self.slots,), np.int32)
-        remaining = np.zeros((self.slots,), np.int32)
-        eos = np.full((self.slots,), -1, np.int32)
-        caches = self._fresh_caches()
-        s_max = self.prompt_len + self.max_new_cap
-        done: List[Request] = []
-        steps = admissions = overlapped = 0
-        while pending or self.queue or any(r is not None for r in active_req):
-            if steps >= max_steps:
-                break
-            while pending and pending[0].arrival_step <= steps:
-                self.submit(pending.pop(0))
-            # -- admission at the block boundary ---------------------------
-            batch_live = any(a is not None for a in active_req)
-            caches, n_adm, n_ovl, finished, new_slots = self._admit_requests(
-                params, caches, active_req, steps, batch_live)
-            admissions += n_adm
-            overlapped += n_ovl
-            done.extend(finished)
-            for i, r in new_slots:
-                positions[i] = self.prompt_len
-                last_tok[i] = r.generated[-1]
-                remaining[i] = r.max_new_tokens - 1
-                eos[i] = r.eos_id
-            active = np.array([a is not None for a in active_req])
-            if not active.any():
-                steps += 1                       # idle tick: await arrivals
-                continue
-            # -- length-aware bucket: smallest compiled extent covering
-            #    every live cursor for the whole block -----------------------
-            if len(self._buckets) > 1:
-                needed = int(positions[active].max()) + T
-                sb = bucket_for(min(needed, s_max), self._buckets)
+                    finished.append(r)
+                    sched.retire(i)              # freed → next boundary
+                    if ex.has_reset:
+                        ex.reset(i)
+        else:
+            # length-aware bucket: smallest compiled extent covering every
+            # live cursor for the whole block (short prompts start low)
+            if len(ex.buckets) > 1:
+                needed = int(sched.positions[active].max()) + T
+                sb = bucket_for(min(needed, s_max), ex.buckets)
             else:
-                sb = self._buckets[0]
-            # -- ONE device call = T micro-steps; ONE host sync ------------
+                sb = ex.buckets[0]
             t0 = time.monotonic()
-            caches, toks, emitted, last_d, pos_d, act_d, rem_d = \
-                self._decode_blocks[sb](
-                    params, caches, jnp.asarray(last_tok),
-                    jnp.asarray(positions), jnp.asarray(active),
-                    jnp.asarray(remaining), jnp.asarray(eos))
+            out = ex.decode_block(params, sb, sched.last_tok,
+                                  sched.positions, active,
+                                  sched.remaining, sched.eos)
             toks, emitted, last_d, pos_d, act_np, rem_d = \
-                self._host_sync(toks, emitted, last_d, pos_d, act_d, rem_d)
-            last_tok, positions, remaining = \
-                last_d.copy(), pos_d.copy(), rem_d.copy()
+                self._host_sync(*out)
             dt = time.monotonic() - t0
             self.tpot_samples.append(dt / T)
             self._decode_time += dt
+            sched.last_tok = last_d.copy()
+            sched.positions = pos_d.copy()
+            sched.remaining = rem_d.copy()
             n_tok = int(emitted.sum())
-            self._decode_tokens += n_tok
-            self._block_tokens.append(n_tok)
-            self._macro_steps += 1
-            steps += T
             now = time.monotonic()
-            for i, r in enumerate(active_req):
-                if r is None:
+            for i, r in enumerate(sched.req):
+                if r is None or sched.phase[i] != sched.DECODE:
                     continue
+                emitted_any = False
                 for t in range(T):
                     if emitted[t, i]:
                         r.generated.append(int(toks[t, i]))
+                        emitted_any = True
+                if emitted_any:
+                    r.note_emit(now)
                 if not act_np[i]:                # budget/EOS halt on device
                     r.t_done = now
-                    done.append(r)
-                    active_req[i] = None         # freed → next boundary
-                    if self._reset is not None:
-                        caches = self._reset(caches,
-                                             jnp.asarray(i, jnp.int32))
-        self._caches = caches
-        return self._stats(done, steps, admissions, overlapped)
+                    finished.append(r)
+                    sched.retire(i)              # freed → next boundary
+                    if ex.has_reset:
+                        ex.reset(i)
+        self._decode_tokens += n_tok
+        self._block_tokens.append(n_tok)
+        self._macro_steps += 1
+        return finished
 
     # ------------------------------------------------------------------
     def _run_drain(self, params, requests, max_steps):
         """Legacy baseline: prefill only when the WHOLE batch has drained —
         one long request starves every queued request (kept for comparison
         and for families without slotted support)."""
+        ex = self._ex
         pending = sorted(requests, key=lambda r: r.arrival_step)
         active_req: List[Optional[Request]] = [None] * self.slots
         caches = None
@@ -541,7 +870,10 @@ class ServingEngine:
             if steps >= max_steps:
                 break
             while pending and pending[0].arrival_step <= steps:
-                self.submit(pending.pop(0))
+                r = pending.pop(0)            # validated by run()
+                if not r.t_enqueue:           # keep a pre-run submit() stamp
+                    r.t_enqueue = time.monotonic()
+                self.queue.append(r)
             if caches is None:
                 toks = np.zeros((self.slots, self.prompt_len), np.int32)
                 for i in range(self.slots):
@@ -552,23 +884,27 @@ class ServingEngine:
                         active_req[i] = r
                         admissions += 1
                     if active_req[i] is not None:
-                        toks[i] = self._pad_prompt(active_req[i])
+                        toks[i] = pad_row(active_req[i].prompt,
+                                          self.prompt_len)
                 if not any(r is not None for r in active_req):
                     steps += 1                   # idle tick: await arrivals
                     continue
-                caches, first = self._prefill_b(params, jnp.asarray(toks))
+                t0 = time.monotonic()
+                caches, first = ex.drain_prefill(params, toks)
                 first.block_until_ready()
                 now = time.monotonic()
+                self._prefill_time += now - t0
                 first = np.asarray(first)
                 for i, r in enumerate(active_req):
                     if r is not None and not r.generated:
                         r.t_first_token = now
+                        r.note_emit(now)
                         r.generated.append(int(first[i]))
                         if r.done:
                             r.t_done = now
                 last = jnp.asarray(first.astype(np.int32))
             t0 = time.monotonic()
-            caches, nxt = self._decode_b(params, caches, last)
+            caches, nxt = ex.drain_decode(params, caches, last)
             nxt_np = self._host_sync(nxt)
             dt = time.monotonic() - t0
             self.tpot_samples.append(dt)
@@ -582,6 +918,7 @@ class ServingEngine:
                 if r is None or r.done:
                     continue
                 r.generated.append(int(nxt_np[i]))
+                r.note_emit(now)
                 n_tok += 1
                 if r.done:
                     r.t_done = now
@@ -601,14 +938,19 @@ class ServingEngine:
         per_req = [r.metrics() for r in sorted(done, key=lambda r: r.rid)]
         ttfts = np.array([m["ttft_ms"] for m in per_req] or [0.0])
         qd = np.array([m["queue_delay_ms"] for m in per_req] or [0.0])
+        gaps = np.array([m["max_gap_ms"] for m in per_req] or [0.0])
         blk = np.array(self._block_tokens or [0.0])
         # decode-token throughput: decode-PRODUCED tokens over decode
-        # wall-time — the prefill-produced first token is excluded from the
-        # numerator because its cost is not in the denominator
+        # wall-time — prefill AND chunk-prefill wall-time are excluded from
+        # both sides (their first tokens are not in the numerator, their
+        # stalls not in the denominator)
         n_dec = self._decode_tokens
         return {
             "mode": self.mode,
             "block_size": self.block_size,
+            "prefill_mode": ("chunked" if self.prefill_chunk
+                             else "monolithic"),
+            "prefill_chunk": self.prefill_chunk,
             "completed": len(done),
             "decode_steps": steps,
             "macro_steps": self._macro_steps,
@@ -620,8 +962,11 @@ class ServingEngine:
             "ttft_mean_ms": float(ttfts.mean()),
             "ttft_p99_ms": float(np.percentile(ttfts, 99)),
             "queue_delay_mean_ms": float(qd.mean()),
+            "max_inter_token_gap_ms": float(gaps.max()),
             "decode_tokens": n_dec,
             "throughput_tok_s": float(n_dec / max(self._decode_time, 1e-9)),
+            "prefill_time_ms": float(self._prefill_time * 1e3),
+            "prefill_chunks": self._prefill_chunks,
             "host_syncs": self.host_syncs,
             "syncs_per_token": float(self.host_syncs / max(n_dec, 1)),
             "tokens_per_macro_step_mean": float(blk.mean()),

@@ -1,0 +1,430 @@
+"""Chunked-prefill lane tests (DESIGN.md §7 "chunked-prefill lane").
+
+Covers the invariants the chunked-prefill ISSUE demands:
+- chunked prefill is token-exact against monolithic prefill (transformer +
+  ssm families, fp and int8-KV) through the full serving engine,
+- ragged TRUE prompt lengths — shorter AND longer than the static prompt
+  width — admit correctly, each matching its standalone greedy reference,
+- ``StaticRuntime.stats()`` shows ONE compile for ``serve_prefill_chunk``
+  (and every other program) across many admissions of many lengths,
+- the silent-truncation regression: non-chunked/drain paths REJECT a
+  too-long prompt with ``ValueError`` at enqueue, never cut it,
+- slot reuse under chunked admission starts from clean per-slot state
+  (stale KV is masked by cursors; stale recurrent state is overwritten),
+- TTFT spans chunk boundaries and chunk-prefill wall-time is excluded from
+  decode throughput (the stats-fix satellite).
+
+Fixtures run in float32: chunk attention (plain masked softmax over the
+cache, traced offsets) and monolithic flash attention (static-banded online
+softmax) are the same math but different reduction orders, so under bf16
+their ~3e-2 rounding skew can flip argmax near-ties on random tiny-config
+weights. In f32 the skew is ~1e-6 and token equality tests the lane's
+scheduling semantics, not accumulation-order luck.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED
+from repro.models import NULL_CTX, build_model
+from repro.runtime.serving import Request, ServingEngine
+from repro.runtime.static_runtime import StaticRuntime
+
+PROMPT_LEN = 8
+CHUNK = 3                      # deliberately not a divisor of PROMPT_LEN
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def dense_int8():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32",
+                                                   kv_dtype="int8")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def ssm():
+    cfg = ASSIGNED["mamba2-1.3b"].reduced().replace(dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+def _requests(cfg, plan, seed=0):
+    """plan: list of (max_new, arrival_step) with full-width prompts, or
+    (max_new, arrival_step, prompt_len) for ragged lengths."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, entry in enumerate(plan):
+        new, arr, plen = entry if len(entry) == 3 else entry + (PROMPT_LEN,)
+        out.append(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, plen,
+                                               dtype=np.int32),
+                           max_new_tokens=new, arrival_step=arr))
+    return out
+
+
+def _standalone(api, params, prompt, n):
+    """Greedy reference on the TRUE-length prompt: batch-1 prefill + n-1
+    decode steps."""
+    caches, logits = jax.jit(lambda p, b: api.prefill(p, b, NULL_CTX))(
+        params, {"tokens": jnp.asarray(prompt[None])})
+    cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    out = [int(cur[0])]
+    step = jax.jit(lambda p, c, t: api.decode(p, c, t, NULL_CTX))
+    for _ in range(n - 1):
+        caches, logits = step(params, caches, cur)
+        cur = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        out.append(int(cur[0]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# token-exactness: chunked == monolithic through the engine
+# ---------------------------------------------------------------------------
+
+PLAN = [(9, 0), (13, 0), (5, 2), (9, 6)]
+
+
+@pytest.mark.parametrize("fixture", ["dense", "dense_int8", "ssm"])
+def test_chunked_equals_monolithic_prefill(fixture, request):
+    """Full-width prompts (padding never enters): the chunked engine's
+    token streams equal the monolithic engine's, fp and int8-KV, dense and
+    ssm — the lane changes WHEN prefill compute runs, not what it computes."""
+    cfg, api, params = request.getfixturevalue(fixture)
+    r_mono = _requests(cfg, PLAN)
+    ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                  max_new_cap=32, block_size=4).run(
+        params, r_mono, max_steps=400)
+    r_chk = _requests(cfg, PLAN)
+    stats = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                          max_new_cap=32, block_size=4, kv_bucket_chunk=16,
+                          prefill_chunk=CHUNK).run(
+        params, r_chk, max_steps=400)
+    assert stats["completed"] == len(PLAN)
+    assert stats["prefill_mode"] == "chunked"
+    # ceil(8/3) == 3 chunks per admission
+    assert stats["prefill_chunks"] == 3 * len(PLAN)
+    for a, b in zip(r_mono, r_chk):
+        assert a.generated == b.generated, a.rid
+
+
+@pytest.mark.parametrize("fixture", ["dense", "dense_int8"])
+def test_prefill_chunk_cache_matches_monolithic(fixture, request):
+    """Direct program-level check: walking a prompt through prefill_chunk
+    writes the same prompt KV (dequantized) into the slot as a monolithic
+    batch-1 prefill, and yields the same first token."""
+    cfg, api, params = request.getfixturevalue(fixture)
+    rng = np.random.default_rng(3)
+    L = PROMPT_LEN
+    prompt = rng.integers(0, cfg.vocab_size, L, dtype=np.int32)
+    c_ref, lg_ref = api.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                                NULL_CTX)
+    caches = api.init_caches(2, 40)
+    fn = jax.jit(lambda *xs: api.prefill_chunk(*xs, NULL_CTX))
+    start = 0
+    while start < L:
+        n = min(CHUNK, L - start)
+        row = np.zeros((CHUNK,), np.int32)
+        row[:n] = prompt[start:start + n]
+        caches, logits = fn(params, caches, jnp.asarray(row[None]),
+                            jnp.asarray(1, jnp.int32),
+                            jnp.asarray(start, jnp.int32),
+                            jnp.asarray(n, jnp.int32))
+        start += n
+    assert int(np.argmax(np.asarray(logits[0, -1]))) == \
+        int(np.argmax(np.asarray(lg_ref[0, -1])))
+    from repro.kv.cache import layer_read
+    for layer in range(cfg.n_layers):
+        want_k, _ = layer_read(c_ref.k[layer], c_ref.v[layer],
+                               None if c_ref.k_scale is None
+                               else c_ref.k_scale[layer],
+                               None if c_ref.v_scale is None
+                               else c_ref.v_scale[layer], jnp.float32)
+        got_k, _ = layer_read(caches.k[layer], caches.v[layer],
+                              None if caches.k_scale is None
+                              else caches.k_scale[layer],
+                              None if caches.v_scale is None
+                              else caches.v_scale[layer], jnp.float32)
+        np.testing.assert_allclose(np.asarray(got_k[1, :, :L]),
+                                   np.asarray(want_k[0, :, :L]),
+                                   rtol=2e-2, atol=2e-2)
+        # untouched rows/positions stay zero: the masked chunk write never
+        # spills past valid_len or into other slots
+        assert not np.asarray(caches.k[layer, 0]).any()
+        assert not np.asarray(got_k[1, :, L:]).any()
+
+
+# ---------------------------------------------------------------------------
+# ragged TRUE lengths (incl. prompts LONGER than the static prompt width)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture", ["dense", "ssm"])
+def test_ragged_prompt_lengths_admit_correctly(fixture, request):
+    """Length-true cursors: prompts of 3/5/8/11 tokens (11 > static width
+    8 — impossible to admit monolithically) each match their standalone
+    greedy reference through staggered chunked admission."""
+    cfg, api, params = request.getfixturevalue(fixture)
+    plan = [(6, 0, 5), (6, 0, 8), (6, 2, 11), (6, 4, 3)]
+    reqs = _requests(cfg, plan)
+    refs = [_standalone(api, params, r.prompt, r.max_new_tokens)
+            for r in reqs]
+    stats = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                          max_new_cap=32, block_size=4, kv_bucket_chunk=16,
+                          prefill_chunk=4).run(params, reqs, max_steps=400)
+    assert stats["completed"] == len(plan)
+    assert stats["prefill_chunks"] == sum(-(-p // 4) for _, _, p in plan)
+    for r, want in zip(reqs, refs):
+        assert r.generated == want, r.rid
+
+
+def test_final_chunk_window_never_clamps_out_of_bounds(dense):
+    """Regression: a prompt whose last chunk's fixed (1,C) window would
+    overrun the KV extent (dynamic_update_slice CLAMPS out-of-bounds starts
+    instead of erroring — silent cache corruption) must shift the window
+    left over already-written positions instead. L=33, C=16, extent=40:
+    the naive final window [32,48) clamps to [24,40) and lands token 32's
+    KV at position 24; the shifted window recomputes [24,40) correctly."""
+    cfg, api, params = dense
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 33, dtype=np.int32)
+    reqs = [Request(rid=0, prompt=prompt, max_new_tokens=7)]
+    want = _standalone(api, params, prompt, 7)
+    stats = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                          max_new_cap=32, block_size=4,
+                          prefill_chunk=16).run(params, reqs, max_steps=200)
+    assert stats["completed"] == 1
+    assert reqs[0].generated == want
+    # chunk width larger than the cache extent can never fit: reject early
+    with pytest.raises(ValueError, match="fixed \\(1,C\\) window"):
+        ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                      max_new_cap=32, prefill_chunk=64)
+
+
+def test_short_prompt_starts_in_small_bucket(dense):
+    """Cursor starts at the TRUE length: a 4-token prompt under a 16-chunk
+    bucket set must run its first decode blocks in the SMALLEST bucket, not
+    the one covering the padded width."""
+    cfg, api, params = dense
+    rt = StaticRuntime()
+    reqs = _requests(cfg, [(8, 0, 4)])
+    stats = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, runtime=rt,
+                          mode="continuous", max_new_cap=32, block_size=4,
+                          kv_bucket_chunk=16, prefill_chunk=4).run(
+        params, reqs, max_steps=100)
+    assert stats["completed"] == 1
+    rs = stats["runtime"]
+    # positions 4..11 + T=4 ≤ 16 → every block runs in the s16 bucket
+    assert rs["serve_decode_block_s16"]["calls"] == stats["macro_steps"]
+    assert rs["serve_decode_block_s32"]["calls"] == 0
+
+
+# ---------------------------------------------------------------------------
+# silent-truncation regression (satellite): reject, never cut
+# ---------------------------------------------------------------------------
+
+def test_monolithic_rejects_overlong_prompt_at_enqueue(dense):
+    cfg, api, params = dense
+    long = _requests(cfg, [(4, 0, PROMPT_LEN + 1)])
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                        max_new_cap=32)
+    with pytest.raises(ValueError, match="truncat"):
+        eng.submit(long[0])
+    with pytest.raises(ValueError, match="truncat"):
+        eng.run(params, long, max_steps=10)
+
+
+def test_drain_rejects_overlong_prompt_at_enqueue(dense):
+    cfg, api, params = dense
+    long = _requests(cfg, [(4, 0, PROMPT_LEN + 1)])
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="drain",
+                        max_new_cap=32)
+    with pytest.raises(ValueError, match="truncat"):
+        eng.run(params, long, max_steps=10)
+
+
+def test_chunked_rejects_prompt_beyond_kv_extent(dense):
+    cfg, api, params = dense
+    # extent = 8 + 32 = 40; L=38 + max_new=4 > 40 → reject, never truncate
+    reqs = _requests(cfg, [(4, 0, 38)])
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                        max_new_cap=32, prefill_chunk=4)
+    with pytest.raises(ValueError, match="KV extent"):
+        eng.run(params, reqs, max_steps=10)
+
+
+def test_zero_token_budget_rejected_at_enqueue(dense):
+    """Every admission produces a first token: a 0- (or negative-) budget
+    request would silently receive one anyway — reject it instead."""
+    cfg, api, params = dense
+    r = _requests(cfg, [(4, 0)])[0]
+    r.max_new_tokens = 0
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                        max_new_cap=32, prefill_chunk=4)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        eng.submit(r)
+
+
+def test_drain_mode_refuses_chunked_prefill(dense):
+    cfg, api, params = dense
+    with pytest.raises(ValueError):
+        ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="drain",
+                      prefill_chunk=4)
+
+
+# ---------------------------------------------------------------------------
+# zero retracing across chunked admissions (§4.3 pinned-pool invariant)
+# ---------------------------------------------------------------------------
+
+def test_chunk_program_compiles_once_across_admissions(dense):
+    """ONE serve_prefill_chunk program serves every chunk of every prompt of
+    every length in every slot; monolithic admission programs are not even
+    compiled in chunk mode."""
+    cfg, api, params = dense
+    rt = StaticRuntime()
+    plan = [(4, 0, 5), (4, 0, 8), (4, 1, 11), (4, 3, 2), (4, 5, 7)]
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, runtime=rt,
+                        mode="continuous", max_new_cap=32, block_size=4,
+                        kv_bucket_chunk=16, prefill_chunk=4)
+    stats = eng.run(params, _requests(cfg, plan), max_steps=400)
+    assert stats["completed"] == len(plan)
+    rs = stats["runtime"]
+    assert "serve_prefill1" not in rs and "serve_admit" not in rs
+    for name, rec in rs.items():
+        assert rec["compiles"] == 1, (name, rec)   # zero retracing
+    n_chunks = sum(-(-p // 4) for _, _, p in plan)
+    assert rs["serve_prefill_chunk"]["calls"] == n_chunks
+    assert stats["prefill_chunks"] == n_chunks
+    # reuse: a second run recompiles nothing
+    stats2 = eng.run(params, _requests(cfg, plan), max_steps=400)
+    assert all(rec["compiles"] == 1
+               for rec in stats2["runtime"].values())
+
+
+def test_chunk_lane_with_per_step_engine(dense):
+    """The lane is block-size independent: T == 1 interleaves one chunk per
+    decode step through the same serve_decode program."""
+    cfg, api, params = dense
+    rt = StaticRuntime()
+    reqs = _requests(cfg, [(5, 0), (5, 0), (5, 2)])
+    refs = [_standalone(api, params, r.prompt, 5) for r in reqs]
+    stats = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, runtime=rt,
+                          mode="continuous", max_new_cap=32,
+                          prefill_chunk=CHUNK).run(params, reqs,
+                                                   max_steps=200)
+    assert stats["completed"] == 3
+    assert set(stats["runtime"]) == {"serve_prefill_chunk", "serve_decode"}
+    for r, want in zip(reqs, refs):
+        assert r.generated == want, r.rid
+
+
+# ---------------------------------------------------------------------------
+# slot reuse, halting, stats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture", ["dense", "ssm"])
+def test_slot_reuse_is_clean_under_chunked_admission(fixture, request):
+    """One slot serving requests back to back: the second admission must not
+    see the first's KV (masked by cursors) or recurrent state (zeroed at
+    chunk 0)."""
+    cfg, api, params = request.getfixturevalue(fixture)
+    plan = [(5, 0, 7), (5, 0, 5), (5, 0, 6)]
+    reqs = _requests(cfg, plan, seed=7)
+    refs = [_standalone(api, params, r.prompt, 5) for r in reqs]
+    stats = ServingEngine(api, NULL_CTX, 1, PROMPT_LEN, mode="continuous",
+                          max_new_cap=32, block_size=4,
+                          prefill_chunk=4).run(params, reqs, max_steps=400)
+    assert stats["completed"] == 3
+    for r, want in zip(reqs, refs):
+        assert r.generated == want, r.rid
+
+
+def test_one_token_request_completes_on_final_chunk(dense):
+    """A max_new_tokens == 1 request is done at its first (chunk-produced)
+    token; the slot frees for the next boundary's admission."""
+    cfg, api, params = dense
+    reqs = _requests(cfg, [(1, 0), (1, 0), (5, 0)])
+    stats = ServingEngine(api, NULL_CTX, 1, PROMPT_LEN, mode="continuous",
+                          max_new_cap=32, block_size=4,
+                          prefill_chunk=4).run(params, reqs, max_steps=200)
+    assert stats["completed"] == 3
+    assert len(reqs[0].generated) == 1
+    assert len(reqs[2].generated) == 5
+
+
+def test_eos_on_first_chunk_token_retires_slot(dense):
+    cfg, api, params = dense
+    probe = _requests(cfg, [(6, 0)])
+    ServingEngine(api, NULL_CTX, 1, PROMPT_LEN, mode="continuous",
+                  max_new_cap=32, prefill_chunk=4).run(params, probe,
+                                                       max_steps=100)
+    stop = probe[0].generated[0]                 # the prefill-produced token
+    reqs = _requests(cfg, [(6, 0)])
+    reqs[0].eos_id = stop
+    stats = ServingEngine(api, NULL_CTX, 1, PROMPT_LEN, mode="continuous",
+                          max_new_cap=32, prefill_chunk=4).run(
+        params, reqs, max_steps=100)
+    assert stats["completed"] == 1
+    assert reqs[0].generated == [stop]
+
+
+def test_ttft_spans_chunk_boundaries_and_stats_fields(dense):
+    """Stats-fix satellite: TTFT covers enqueue → final chunk (not just the
+    last program call), chunk wall-time is excluded from decode throughput,
+    and the gap metric is populated."""
+    cfg, api, params = dense
+    reqs = _requests(cfg, [(9, 0), (9, 0), (9, 2)])
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                        max_new_cap=32, block_size=4, prefill_chunk=3)
+    stats = eng.run(params, reqs, max_steps=400)
+    assert stats["completed"] == 3
+    assert stats["prefill_chunks"] == 9          # 3 chunks each
+    assert stats["prefill_time_ms"] > 0
+    # decode throughput counts decode-produced tokens over decode time only
+    n_dec = sum(len(r.generated) - 1 for r in reqs)
+    assert stats["decode_tokens"] == n_dec
+    assert stats["throughput_tok_s"] > 0
+    assert stats["max_inter_token_gap_ms"] > 0
+    for r, m in zip(reqs, stats["per_request"]):
+        # first token only exists once ALL chunks ran: TTFT ≥ queue delay,
+        # and for the engine it is enqueue → first token
+        assert m["ttft_ms"] >= m["queue_delay_ms"]
+        assert r.t_first_token >= r.t_admitted
+        assert m["max_gap_ms"] > 0
+        assert m["prompt_tokens"] == len(r.prompt)
+
+
+def test_presubmitted_requests_are_served_not_dropped(dense):
+    """submit() before run() must serve the request, not reset it away —
+    the no-silent-loss contract covers the queue, not just prompt widths."""
+    cfg, api, params = dense
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                        max_new_cap=32, prefill_chunk=4)
+    pre = _requests(cfg, [(4, 0)])[0]
+    eng.submit(pre)
+    stats = eng.run(params, [], max_steps=100)
+    assert stats["completed"] == 1
+    assert len(pre.generated) == 4
+    # passing the same object to run() too must not serve it twice
+    eng.submit(pre2 := _requests(cfg, [(4, 0)])[0])
+    stats = eng.run(params, [pre2], max_steps=100)
+    assert stats["completed"] == 1
+
+
+def test_debug_reset_slots_with_chunked_admission(dense):
+    cfg, api, params = dense
+    plan = [(4, 0, 5), (4, 0, 8), (1, 2, 6)]
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                        max_new_cap=32, block_size=4, prefill_chunk=4,
+                        debug_reset_slots=True)
+    stats = eng.run(params, _requests(cfg, plan), max_steps=400)
+    assert stats["completed"] == len(plan)
+    assert stats["runtime"]["serve_reset"]["calls"] == len(plan)
+    assert not np.asarray(eng._caches.k).any()
