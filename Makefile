@@ -10,7 +10,7 @@ test:            ## tier-1 verify (full suite, fail fast)
 test-fast:       ## skip the slow multi-device subprocess tests
 	python -m pytest -x -q --ignore=tests/test_distributed.py
 
-bench-smoke:     ## fast benchmark subset (CSV contract sanity)
+bench-smoke:     ## fast benchmark subset (CSV sanity; serve_tpot exercises the colocated-vs-WA backend scenario on every PR)
 	python -m benchmarks.run table2_end_to_end fig10_runtime serve_tpot
 
 bench-serve:     ## serving TPOT/TTFT per-step vs macro-step (BENCH_serving.json)

@@ -1,7 +1,7 @@
-"""Serving TPOT/TTFT: per-step vs macro-step decode, and chunked vs
-monolithic prefill (BENCH_serving.json).
+"""Serving TPOT/TTFT: per-step vs macro-step decode, chunked vs monolithic
+prefill, and colocated vs WA-disaggregated backends (BENCH_serving.json).
 
-Two claims are measured on the CPU dry-run config:
+Three claims are measured on the CPU dry-run config:
 
 1. Macro-step decode (ISSUE 3 / DESIGN.md §7): moving the host sync from
    every token to every ``block_size`` tokens removes per-token dispatch +
@@ -19,6 +19,18 @@ Two claims are measured on the CPU dry-run config:
    in-flight request observes) and the long request's TTFT, chunked vs
    monolithic admission — the acceptance claim is max gap strictly lower
    with TPOT no worse.
+
+3. WA backend (ISSUE 5 / DESIGN.md §3): the SAME staggered-arrival
+   workload served by ``backend="colocated"`` and ``backend="wa"`` — the
+   weight–attention disaggregated layer loop with the W→A→W routing
+   compiled into every step program. Measured: TPOT, TTFT, host syncs,
+   compile counts, and the ``routing_bytes``-derived W↔A traffic per token
+   (the paper's "only embeddings move" as a number). On the single-host
+   dry-run the routing constraints are no-ops, so the delta is the routed
+   layer-loop program structure (python-unrolled layers vs the colocated
+   ``lax.scan``), not transfer cost — the committed numbers are the
+   regression baseline for the routed program path, exercised by
+   ``make bench-smoke`` on every PR.
 
 Per mode: TPOT (mean/p50/p99 per micro-step), TTFT, decode-token
 throughput, host syncs per generated token, compile counts (every program
@@ -133,6 +145,66 @@ def _long_prompt_scenario(api, params, ctx):
     return out
 
 
+WA_PREFILL_CHUNK = 8         # WA scenario: chunked admission, 2 chunks/prompt
+
+
+def _wa_backend_scenario(api, params, ctx):
+    """Colocated vs WA-disaggregated backend on the staggered workload:
+    same scheduler, same admissions, every program swapped for its routed
+    twin — TPOT/TTFT/sync parity plus the measured W↔A traffic."""
+    from repro.runtime.serving import ServingEngine
+    cfg = api.config
+    out = {"config": {"prompt_len": PROMPT_LEN, "batch_slots": SLOTS,
+                      "max_new_cap": MAX_NEW_CAP, "block_size": BLOCK_SIZE,
+                      "kv_bucket_chunk": KV_BUCKET_CHUNK,
+                      "prefill_chunk": WA_PREFILL_CHUNK}}
+    for backend in ("colocated", "wa"):
+        eng = ServingEngine(api, ctx, SLOTS, PROMPT_LEN, mode="continuous",
+                            max_new_cap=MAX_NEW_CAP, block_size=BLOCK_SIZE,
+                            kv_bucket_chunk=KV_BUCKET_CHUNK,
+                            prefill_chunk=WA_PREFILL_CHUNK, backend=backend)
+        eng.run(params, _workload(cfg), max_steps=1000)   # warm (compiles)
+        st = eng.run(params, _workload(cfg), max_steps=1000)
+        compiles = {k: v["compiles"] for k, v in st["runtime"].items()}
+        rec = {
+            "completed": st["completed"],
+            "tpot_mean_ms": st["tpot_mean_ms"],
+            "tpot_p99_ms": st["tpot_p99_ms"],
+            "ttft_mean_ms": st["ttft_mean_ms"],
+            "throughput_tok_s": st["throughput_tok_s"],
+            "decode_tokens": st["decode_tokens"],
+            "host_syncs": st["host_syncs"],
+            "syncs_per_token": st["syncs_per_token"],
+            "max_compiles_per_step": max(compiles.values()),
+            "compiles": compiles,
+        }
+        if backend == "wa":
+            rec["routing_bytes_per_token"] = st["wa"]["routing_bytes_per_token"]
+            rec["routing_total_bytes"] = st["wa"]["routing_total_bytes"]
+            rec["routing_bytes_per_decode_token"] = \
+                st["wa"]["routing_bytes_per_decode_token"]
+        out[backend] = rec
+        derived = (f"ttft_mean_ms={st['ttft_mean_ms']:.1f};"
+                   f"host_syncs={st['host_syncs']};"
+                   f"max_compiles_per_step={max(compiles.values())}")
+        if backend == "wa":
+            derived += (f";routing_bytes_per_token="
+                        f"{st['wa']['routing_bytes_per_token']}")
+        emit(f"serving/wa_backend/{backend}/tpot",
+             st["tpot_mean_ms"] * 1e3, derived)
+    out["wa_over_colocated"] = {
+        "tpot_ratio": (out["wa"]["tpot_mean_ms"]
+                       / max(out["colocated"]["tpot_mean_ms"], 1e-9)),
+        "host_sync_parity": (out["wa"]["host_syncs"]
+                             == out["colocated"]["host_syncs"]),
+    }
+    emit("serving/wa_backend/routing_bytes_per_token",
+         float(out["wa"]["routing_bytes_per_token"]),
+         f"total_bytes={out['wa']['routing_total_bytes']};"
+         f"tpot_ratio={out['wa_over_colocated']['tpot_ratio']:.3f}")
+    return out
+
+
 def run():
     import jax
     from repro.configs.registry import get_config
@@ -197,6 +269,7 @@ def run():
     emit("serving/macro_over_per_step", speedup,
          f"tpot_speedup={speedup:.2f};host_sync_reduction={sync_drop:.1f}")
     report["long_prompt"] = _long_prompt_scenario(api, params, ctx)
+    report["wa_backend"] = _wa_backend_scenario(api, params, ctx)
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -4,7 +4,7 @@ queue-delay stats — the paper's measurement loop at laptop scale, extended
 with the staggered-arrival workload the drain baseline cannot serve well.
 
     PYTHONPATH=src python examples/serve_decode.py [--arch internlm2-1.8b] \
-        [--arrival-every 4] [--mode drain] [--block-size 8]
+        [--arrival-every 4] [--mode drain] [--block-size 8] [--backend wa]
 """
 import argparse
 
@@ -29,19 +29,23 @@ ap.add_argument("--prefill-chunk", type=int, default=16,
                 help="chunked-prefill lane: admit prompts as fixed (1,C) "
                      "chunks interleaved with decode blocks, length-true "
                      "cursors (0 = monolithic admission)")
+ap.add_argument("--backend", default="colocated", choices=("colocated", "wa"),
+                help="executor backend: colocated, or weight-attention "
+                     "disaggregated (W→A→W routing compiled into every "
+                     "step program; reports routed bytes)")
 args = ap.parse_args()
 
 print(f"serving {args.requests} requests on {args.arch} "
       f"(batch={args.batch_slots}, prompt={args.prompt_len}, "
       f"max_new={args.max_new}, mode={args.mode}, "
       f"arrival_every={args.arrival_every}, block_size={args.block_size}, "
-      f"prefill_chunk={args.prefill_chunk})")
+      f"prefill_chunk={args.prefill_chunk}, backend={args.backend})")
 stats = serve(args.arch, args.requests, args.batch_slots, args.prompt_len,
               args.max_new, mode=args.mode, arrival_every=args.arrival_every,
               block_size=args.block_size,
               kv_bucket_chunk=args.kv_bucket_chunk,
-              prefill_chunk=args.prefill_chunk)
-print(f"\nmode:        {stats['mode']}")
+              prefill_chunk=args.prefill_chunk, backend=args.backend)
+print(f"\nmode:        {stats['mode']} (backend={stats['backend']})")
 print(f"completed:   {stats['completed']} "
       f"({stats['admissions']} admissions, "
       f"{stats['overlapped_admissions']} into a live batch)")
@@ -57,3 +61,8 @@ print(f"host syncs:  {stats['host_syncs']} "
       f"{stats['tokens_per_macro_step_mean']:.1f} tok/macro-step)")
 compiles = {k: v["compiles"] for k, v in stats["runtime"].items()}
 print(f"compiles:    {compiles} (must stay 1 per step — zero retracing)")
+if "wa" in stats:
+    wa = stats["wa"]
+    print(f"W<->A route: {wa['routing_bytes_per_token'] / 1024:.1f} KiB/token "
+          f"({wa['routing_total_bytes'] / 1e6:.2f} MB total — "
+          f"'only embeddings move', DESIGN.md §3)")

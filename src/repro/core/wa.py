@@ -3,9 +3,30 @@
 The paper splits each transformer layer across two sockets: a *weight node*
 (QKV proj + FFN, weights resident, no KV) and an *attention node* (owns KV
 state, runs attention). Activations — "only embeddings" — hop W→A→W per
-layer. TPU instantiation: two SUBMESHES of the pod with two AOT-compiled
-programs and device_put routing between them (the honest JAX analogue of two
-pinned per-socket thread pools; on hardware the transfer lowers to ICI).
+layer.
+
+TPU instantiation, in two routing modes:
+
+- ``routing="device_put"`` (eager, two SUBMESHES): carve the pod into a
+  weight submesh and an attention submesh and move the per-layer activations
+  between them with explicit ``jax.device_put`` — the honest JAX analogue of
+  two pinned per-socket thread pools (on hardware the transfer lowers to
+  ICI). Python-orchestrated per layer; used for the Fig 11 breakdown and the
+  equivalence demos. A ``device_put`` across disjoint device sets cannot be
+  staged into ONE compiled program, so this mode stays per-step/eager.
+
+- ``routing="sharding"`` (AOT, one mesh): the serving path. The W and A
+  domains become two *sharding regimes* over the single serving mesh — the W
+  domain keeps the sub-operator rules (weights + per-head activations on the
+  model axis), the A domain keeps the KV-sequence-sharded rules
+  (``seq_sharded_kv``: the cache's positions live distributed, attention
+  reductions are the LSE-merge collectives — the paper's "add attention
+  nodes" axis). The W→A / A→W hops are ``with_sharding_constraint``
+  boundaries inside the compiled program (``jax.device_put``-free inner
+  loop), so ``StaticRuntime`` can AOT-compile whole macro-step blocks and
+  prefill chunks around the routed layer loop — compiles == 1 across a
+  staggered serve. With ``mesh=None`` (single-device dry-run) the
+  constraints are no-ops and the math is the colocated math exactly.
 
 The split is decided by ``core.residency.plan`` — WA separation is *optional*
 and only pays under cache pressure (paper Fig 9: 1.00× at 3B, 1.16× at 70B);
@@ -14,13 +35,18 @@ and only pays under cache pressure (paper Fig 9: 1.00× at 3B, 1.16× at 70B);
 This module provides:
   - ``split_mesh``        : carve (data) rows into weight/attention groups,
   - ``wa_plan``           : profitability policy from the residency report,
-  - ``WADisaggregated``   : a decode engine running weight-ops on the W
-                            submesh and attention on the A submesh with
-                            explicit activation routing (runnable on CPU
-                            devices; unit-tested for equivalence with the
-                            colocated executor),
+  - ``WADisaggregated``   : the W/A decode engine — eager per-step routing
+                            (device_put mode) plus the AOT serving programs
+                            ``decode_step_slotted`` / ``decode_block`` /
+                            ``prefill_chunk`` (sharding mode) consumed by
+                            ``runtime.serving.WABackend``,
   - ``routing_bytes``     : per-token W↔A traffic for the roofline
                             collective term (2 hops × B × d_model / layer).
+
+Per-slot cursors, KV buckets and halt masks are all A-SIDE state: admission
+(`prefill_chunk` KV writes), the length-aware bucket walk
+(``layer_read_bucket``) and retirement masks live with the KV; the W side
+only ever sees routed activations and per-row RoPE phases (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -36,10 +62,14 @@ from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig
 from repro.core.residency import plan as residency_plan
 from repro.models import common
-from repro.models.attention import decode_attention, qkv_project
-from repro.models.sharding import ShardingCtx, sub_operator
+from repro.models.attention import chunk_attention, decode_attention, \
+    qkv_project
+from repro.models.registry import make_decode_block
+from repro.models.sharding import ShardingCtx, seq_sharded_kv, sub_operator
 from repro.kv.cache import (KVCache, batch_valid_mask, layer_append,
-                            layer_append_slotted, layer_read, slot_valid_mask)
+                            layer_append_slotted, layer_read,
+                            layer_read_bucket, layer_read_slot,
+                            layer_write_chunk, slot_valid_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -91,37 +121,71 @@ def routing_bytes(cfg: ModelConfig, batch: int, bytes_per_el: int = 2) -> int:
 # ---------------------------------------------------------------------------
 
 class WADisaggregated:
-    """Two-program decode: weight program (QKV+FFN halves) on the W submesh,
-    attention program on the A submesh, activations routed per layer.
+    """Weight-ops on the W domain, attention on the A domain, activations
+    routed per layer.
 
     Layer split (paper Fig 5b):
         W: x → ln1 → QKV proj ───route q,k,v───→ A: append KV, attention
         W: o·Wo + residual + ln2 + FFN ←──route o──┘
+
+    ``routing="device_put"``: W/A are disjoint submeshes (``plan`` required)
+    and the hops are eager ``jax.device_put`` transfers — per-step only.
+    ``routing="sharding"``: W/A are two sharding regimes over ONE mesh
+    (``mesh`` may be None for the single-device dry-run) and the hops are
+    ``with_sharding_constraint`` boundaries — jit-safe, so
+    ``decode_block``/``prefill_chunk`` AOT-compile (the serving backend).
     """
 
-    def __init__(self, cfg: ModelConfig, mesh: Mesh, plan: WAPlan):
+    def __init__(self, cfg: ModelConfig, mesh: Optional[Mesh],
+                 plan: Optional[WAPlan] = None, *,
+                 routing: str = "device_put"):
+        if routing not in ("device_put", "sharding"):
+            raise ValueError(routing)
         self.cfg = cfg
         self.plan = plan
-        self.w_mesh, self.a_mesh = split_mesh(mesh, plan.weight_rows)
-        self.w_ctx = ShardingCtx(self.w_mesh, sub_operator(False))
-        self.a_ctx = ShardingCtx(self.a_mesh, sub_operator(False))
+        self.routing = routing
+        if routing == "device_put":
+            if plan is None:
+                raise ValueError("device_put routing needs a WAPlan (submesh "
+                                 "row split)")
+            self.w_mesh, self.a_mesh = split_mesh(mesh, plan.weight_rows)
+            self.w_ctx = ShardingCtx(self.w_mesh, sub_operator(False))
+            self.a_ctx = ShardingCtx(self.a_mesh, sub_operator(False))
+        else:
+            # ONE mesh, two rule tables: W = sub-operator (weights/heads on
+            # the model axis), A = KV-sequence-sharded (the cache's length
+            # axis owns the model axis — "add attention nodes"). mesh=None →
+            # every constraint is a no-op (single-device dry-run).
+            self.w_ctx = ShardingCtx(mesh, sub_operator(False))
+            self.a_ctx = ShardingCtx(mesh, seq_sharded_kv(sub_operator(False)))
+        # macro-step block: the registry lift of the slotted WA step — the
+        # same on-device halt masks / cursors every colocated family gets
+        self.decode_block = make_decode_block(self._decode_slotted_api)
+
+    def _require_aot(self, what: str):
+        if self.routing != "sharding":
+            raise ValueError(
+                f"{what} must compile into ONE program; eager device_put "
+                f"routing cannot cross submeshes inside a jit trace — build "
+                f"WADisaggregated(routing='sharding') for the AOT path")
 
     # -- single layer pieces (weight side) ------------------------------
     def _w_qkv(self, lp, x, positions):
-        """positions: (B,1) int32 — per-row RoPE phase (continuous batching
+        """positions: (B,S) int32 — per-row RoPE phase (continuous batching
         admits rows at different depths, so the W side must rotate per-row)."""
         cfg, ctx = self.cfg, self.w_ctx
         h = common.apply_norm(cfg.norm, lp["ln1"], x, cfg.norm_eps)
         return qkv_project(lp["attn"], h, cfg, ctx, positions)
 
     def _w_post(self, lp, x, o):
-        from repro.models.transformer import ffn_apply
+        from repro.models.transformer import _mix_ffn
         cfg, ctx = self.cfg, self.w_ctx
-        B = x.shape[0]
-        o = common.linear(lp["attn"]["wo"], o.reshape(B, 1, -1))
+        B, S = x.shape[0], x.shape[1]
+        o = common.linear(lp["attn"]["wo"], o.reshape(B, S, -1))
         x = x + o
         h = common.apply_norm(cfg.norm, lp["ln2"], x, cfg.norm_eps)
-        return x + ffn_apply(lp["ffn"], h, cfg, ctx)
+        f, _ = _mix_ffn(lp, h, cfg, ctx, train=False)
+        return x + f
 
     # -- attention side ---------------------------------------------------
     def _a_attend(self, kv_slices, q, k, v, pos, window=0):
@@ -134,26 +198,43 @@ class WADisaggregated:
         return (k_l, v_l, ks_l, vs_l), o
 
     def _a_attend_slotted(self, kv_slices, q, k, v, positions, active,
-                          window=0):
+                          window=0, kv_bucket=0):
         """Per-slot cursors live WITH the KV on the attention node — the
         weight node never tracks who occupies which slot (admission is an
-        A-side state change, matching the paper's ownership split)."""
+        A-side state change, matching the paper's ownership split).
+        ``kv_bucket`` > 0: the length-aware walk — read and attend only the
+        first ``kv_bucket`` STORED positions (int8 caches dequantize just
+        the bucket), exactly ``transformer.block_decode_slotted``'s slice."""
         k_l, v_l, ks_l, vs_l = kv_slices
         k_l, v_l, ks_l, vs_l = layer_append_slotted(
             k_l, v_l, ks_l, vs_l, k[:, 0], v[:, 0], positions, window, active)
-        kc, vc = layer_read(k_l, v_l, ks_l, vs_l, dtype=q.dtype)
-        mask = batch_valid_mask(k_l.shape[2], window, positions)
+        if window:
+            kv_bucket = 0                   # ring order has no prefix to cut
+        kc, vc = layer_read_bucket(k_l, v_l, ks_l, vs_l, kv_bucket,
+                                   dtype=q.dtype)
+        mask = batch_valid_mask(kc.shape[2], window, positions)
         o = decode_attention(q[:, 0], kc, vc, mask, self.a_ctx)
         return (k_l, v_l, ks_l, vs_l), o
 
     # -- route helpers ------------------------------------------------------
     def _to_a(self, x):
-        return jax.device_put(x, NamedSharding(self.a_mesh,
-                                               P("data", None, None)))
+        """W → A hop. Eager: a cross-submesh device_put (lowers to ICI).
+        AOT: a sharding-constraint boundary — heads leave the W domain's
+        model-axis shards and replicate onto the A domain, whose owned axis
+        is the KV sequence ("only embeddings move", now inside the
+        program)."""
+        if self.routing == "device_put":
+            return jax.device_put(x, NamedSharding(self.a_mesh,
+                                                   P("data", None, None)))
+        return self.a_ctx.ann(x, "batch", "seq", "act_heads", "head_dim")
 
     def _to_w(self, x):
-        return jax.device_put(x, NamedSharding(self.w_mesh,
-                                               P("data", None, None)))
+        """A → W hop: the attention output re-shards onto the W domain's
+        head axis before the output projection / FFN."""
+        if self.routing == "device_put":
+            return jax.device_put(x, NamedSharding(self.w_mesh,
+                                                   P("data", None, None)))
+        return self.w_ctx.ann(x, "batch", "seq", "act_heads", "head_dim")
 
     # -- decode step --------------------------------------------------------
     def _layer_loop(self, params, cache: KVCache, tokens, positions, attend):
@@ -162,6 +243,9 @@ class WADisaggregated:
         returns (updated slices, o). Returns (new k/v/scale stacks, logits)."""
         cfg = self.cfg
         x = common.embed(params["embed"], tokens[:, None], self.w_ctx)
+        if cfg.pos == "learned":
+            x = x + jnp.take(params["pos_embed"], positions[:, 0],
+                             axis=0)[:, None].astype(x.dtype)
         k_st, v_st = cache.k, cache.v
         ks_st, vs_st = cache.k_scale, cache.v_scale
         for i in range(cfg.n_layers):
@@ -200,16 +284,95 @@ class WADisaggregated:
                               length=pos + 1), logits
 
     def decode_step_slotted(self, params, cache: KVCache, tokens,
-                            positions, active):
+                            positions, active, kv_bucket: int = 0):
         """Continuous-batching decode in the WA-decoupled path: per-slot
         cursors + active mask (DESIGN.md §7). Slot admission itself is the
         same ``write_slot_kv`` the colocated engine uses — the A node owns
-        the KV, so admission touches only A-side state."""
+        the KV, so admission touches only A-side state. ``kv_bucket``
+        (static) caps the attended extent — the serving engine's
+        length-aware walk, applied at the A-side read."""
         (k, v, ks, vs), logits = self._layer_loop(
             params, cache, tokens, positions[:, None],
             lambda kv_i, q, kk, vv: self._a_attend_slotted(
-                kv_i, q, kk, vv, positions, active, window=cache.window))
+                kv_i, q, kk, vv, positions, active, window=cache.window,
+                kv_bucket=kv_bucket))
         new_len = jnp.maximum(
             cache.length, jnp.max(jnp.where(active, positions, 0)) + 1)
         return cache._replace(k=k, v=v, k_scale=ks, v_scale=vs,
+                              length=new_len), logits
+
+    def _decode_slotted_api(self, params, caches, tokens, positions, active,
+                            ctx, kv_bucket: int = 0):
+        """ModelAPI.decode_slotted-shaped adapter for ``make_decode_block``:
+        the WA engine carries its own W/A contexts, so the engine-supplied
+        ctx is unused. Traced inside the block scan → AOT routing only."""
+        del ctx
+        self._require_aot("decode_block")
+        return self.decode_step_slotted(params, caches, tokens, positions,
+                                        active, kv_bucket=kv_bucket)
+
+    # -- chunked prefill ----------------------------------------------------
+    def prefill_chunk(self, params, cache: KVCache, tokens, slot, start,
+                      valid_len):
+        """WA-split chunked prefill: ONE fixed-(1,C) program per chunk width
+        (DESIGN.md §7 chunked-prefill lane), the admission path of the WA
+        serving backend. The W side runs embed/ln1/QKV and (after the route
+        back) Wo/residual/ln2/FFN — unchanged weight-node work; the A side
+        owns every piece of slot state: the chunk's K/V land at the slot's
+        offset (``layer_write_chunk``; positions ≥ valid_len never touch the
+        cache), the slot's stored prefix is read back (``layer_read_slot``;
+        int8 dequantizes the same values decode will attend) and
+        ``chunk_attention`` runs under the A-domain rules.
+        slot/start/valid_len are traced scalars: zero retracing across
+        chunks, prompts and slots. Returns (cache', logits (1,1,V)) at the
+        chunk's last valid position."""
+        self._require_aot("prefill_chunk")
+        if cache.window:
+            raise ValueError("chunked prefill requires a non-windowed cache "
+                             "(ring order has no per-position write offset)")
+        cfg = self.cfg
+        x = common.embed(params["embed"], tokens, self.w_ctx)
+        C = tokens.shape[1]
+        positions = start + jnp.arange(C, dtype=jnp.int32)
+        if cfg.pos == "learned":
+            x = x + jnp.take(params["pos_embed"], positions,
+                             axis=0)[None].astype(x.dtype)
+        elif cfg.pos == "sinusoidal":
+            table = common.sinusoidal_pos(cache.k.shape[3], cfg.d_model)
+            x = x + jnp.take(table, positions, axis=0)[None].astype(x.dtype)
+        k_st, v_st = cache.k, cache.v
+        ks_st, vs_st = cache.k_scale, cache.v_scale
+        S = cache.k.shape[3]
+        # causal over absolute positions: query i attends cache slots
+        # <= start+i (padding queries i >= valid_len attend zeros/stale
+        # slots — their outputs are discarded)
+        mask = jnp.arange(S, dtype=jnp.int32)[None, :] \
+            <= positions[:, None]                                      # (C,S)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["blocks"])
+            q, k, v = self._w_qkv(lp, x, positions[None])
+            q, k, v = self._to_a(q), self._to_a(k), self._to_a(v)
+            kv_i = tuple(None if c is None else c[i]
+                         for c in (k_st, v_st, ks_st, vs_st))
+            k_l, v_l, ks_l, vs_l = layer_write_chunk(
+                kv_i[0], kv_i[1], kv_i[2], kv_i[3],
+                jnp.swapaxes(k[0], 0, 1), jnp.swapaxes(v[0], 0, 1),
+                slot, start, valid_len)
+            kc, vc = layer_read_slot(k_l, v_l, ks_l, vs_l, slot,
+                                     dtype=x.dtype)
+            o = chunk_attention(q, kc, vc, mask, self.a_ctx)
+            k_st = k_st.at[i].set(k_l)
+            v_st = v_st.at[i].set(v_l)
+            if ks_l is not None:
+                ks_st = ks_st.at[i].set(ks_l)
+                vs_st = vs_st.at[i].set(vs_l)
+            o = self._to_w(o)
+            x = self._w_post(lp, x, o)
+        x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
+        from repro.models.transformer import unembed_table
+        last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+        logits = common.unembed_logits(unembed_table(params, cfg), last,
+                                       self.w_ctx)
+        new_len = jnp.maximum(cache.length, start + valid_len)
+        return cache._replace(k=k_st, v=v_st, k_scale=ks_st, v_scale=vs_st,
                               length=new_len), logits

@@ -42,7 +42,8 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
           max_new: int, *, reduced: bool = True, seed: int = 0,
           executor: str = "sub_operator", mode: str = "auto",
           arrival_every: int = 0, block_size: int = 1,
-          kv_bucket_chunk: int = 0, prefill_chunk: int = 0):
+          kv_bucket_chunk: int = 0, prefill_chunk: int = 0,
+          backend: str = "colocated"):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -59,7 +60,7 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
     eng = ServingEngine(api, ctx, batch_slots, prompt_len, mode=mode,
                         block_size=block_size,
                         kv_bucket_chunk=kv_bucket_chunk,
-                        prefill_chunk=prefill_chunk)
+                        prefill_chunk=prefill_chunk, backend=backend)
     stats = eng.run(params, reqs)
     return stats
 
@@ -87,13 +88,19 @@ def main(argv=None):
                     help="chunked-prefill lane: admit prompts as fixed "
                          "(1,C) chunks, one per block boundary, with "
                          "length-true cursors (0 = monolithic admission)")
+    ap.add_argument("--backend", default="colocated",
+                    choices=("colocated", "wa"),
+                    help="executor backend: colocated, or the weight-"
+                         "attention disaggregated path (routing compiled "
+                         "into every step program; DESIGN.md §3)")
     args = ap.parse_args(argv)
     stats = serve(args.arch, args.requests, args.batch, args.prompt_len,
                   args.max_new, mode=args.mode,
                   arrival_every=args.arrival_every,
                   block_size=args.block_size,
                   kv_bucket_chunk=args.kv_bucket_chunk,
-                  prefill_chunk=args.prefill_chunk)
+                  prefill_chunk=args.prefill_chunk,
+                  backend=args.backend)
     per_req = stats.pop("per_request")
     rt = stats.pop("runtime")
     print("serve stats:", stats)

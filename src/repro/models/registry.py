@@ -55,6 +55,13 @@ class ModelAPI(NamedTuple):
     #   lane (DESIGN.md §7). slot/start/valid_len traced: zero retracing
     #   across chunks, prompts and slots. None → monolithic admission only.
     prefill_chunk: Optional[Callable] = None
+    # wa_servable: the family can serve through the WA-disaggregated backend
+    #   (ServingEngine(backend="wa") → core/wa.py). True only for prefix-
+    #   ordered KV-cache transformers: attention-free families have no KV to
+    #   decouple (DESIGN.md §6), windowed ring buffers have no stable
+    #   per-position offsets, and VLM prompts interleave vision embeds the
+    #   token-only WA chunk walk cannot cover.
+    wa_servable: bool = False
 
 
 def make_decode_block(decode_slotted: Callable) -> Callable:
@@ -142,7 +149,8 @@ def _build_transformer(cfg: ModelConfig) -> ModelAPI:
                     decode_block=make_decode_block(decode_slotted),
                     # VLM prompts interleave vision embeds — the token-only
                     # chunk walk cannot cover them; monolithic admission only
-                    prefill_chunk=None if is_vlm else prefill_chunk)
+                    prefill_chunk=None if is_vlm else prefill_chunk,
+                    wa_servable=not is_vlm)
 
 
 def _build_ssm(cfg: ModelConfig) -> ModelAPI:

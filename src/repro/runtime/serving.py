@@ -33,11 +33,18 @@ the cache-resident/static-shape regime the paper's runtime depends on:
 
 The engine is split into a host-side **SlotScheduler** (slot occupancy,
 arrival pump, cursors/halt operands, chunk-lane bookkeeping — decisions
-only) and a device-side **StepExecutor** (the compiled step programs and the
-slot caches — execution only); ``ServingEngine`` is the boundary loop that
-connects them. The previous drain-then-refill loop is kept as
-``mode="drain"`` — the baseline the continuous scheduler is measured
-against, and the fallback for model families without slotted support.
+only) and a device-side **ExecutorBackend** (the compiled step programs and
+the slot caches — execution only); ``ServingEngine`` is the boundary loop
+that connects them. The backend is PLUGGABLE (``backend=``): the colocated
+backend runs the single-domain programs, the WA backend
+(``backend="wa"``) runs the same feature set — macro-step blocks, KV
+buckets, chunked prefill, slot admission — through the weight–attention
+disaggregated layer loop of ``core/wa.py`` with the W→A→W routing inside
+the compiled programs (sharding-constrained, ``device_put``-free). The
+scheduler is backend-agnostic: no scheduling decision moves. The previous
+drain-then-refill loop is kept as ``mode="drain"`` — the baseline the
+continuous scheduler is measured against, and the fallback for model
+families without slotted support.
 
 Per-request accounting: queue delay (enqueue→admit), TTFT (enqueue→first
 token, spanning chunk boundaries under chunked admission), TPOT, and max
@@ -49,6 +56,7 @@ decode token, and per-macro-step token counts.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -56,8 +64,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.wa import WADisaggregated, routing_bytes
 from repro.kv.cache import KVCache
 from repro.models.attention import bucket_for, kv_buckets
+from repro.models.common import dtype_of
 from repro.models.registry import DECODE_SLACK, ModelAPI
 from repro.models.sharding import ShardingCtx
 from repro.runtime.static_runtime import StaticRuntime
@@ -128,7 +138,9 @@ class SlotScheduler:
     """Slot occupancy, arrival pump, per-slot cursors/halt operands and the
     chunked-prefill lane bookkeeping. Pure host state: it decides WHAT runs
     at each block boundary and never touches a device array — the
-    StepExecutor owns every compiled call (DESIGN.md §7)."""
+    ExecutorBackend owns every compiled call, and because no decision
+    lives there, every backend serves through this ONE scheduler
+    (DESIGN.md §7)."""
 
     FREE, PREFILL, DECODE = "free", "prefill", "decode"
 
@@ -233,154 +245,143 @@ class SlotScheduler:
 
 
 # ---------------------------------------------------------------------------
-# StepExecutor — the DEVICE half of the scheduler/executor split
+# ExecutorBackend — the DEVICE half of the scheduler/executor split
 # ---------------------------------------------------------------------------
 
-class StepExecutor:
+class ExecutorBackend:
     """Owns the slot caches and every AOT-compiled step program (compiled
     once through ``StaticRuntime`` — the §4.3 zero-retracing invariant).
-    Each mode compiles exactly the programs it dispatches:
+    ``ServingEngine(backend=...)`` picks the implementation; the
+    ``SlotScheduler`` is backend-agnostic and the boundary loop only ever
+    calls this contract:
 
-      continuous, chunked admission   serve_prefill_chunk
-      continuous, monolithic admission serve_prefill1 + serve_admit
-      continuous, T == 1               serve_decode (or the eager raw_decode)
-      continuous, T > 1                serve_decode_block[_s{N}] per bucket
-      debug_reset_slots                serve_reset
-      drain                            serve_prefill_batch + serve_decode_drain
+      fresh()                       fresh slot caches for a run (programs
+                                    persist — compiles == 1 across runs)
+      admit_full(params,row,slot)   monolithic admission → first-token array
+      run_chunk(params,row,slot,start,valid)   one fixed-(1,C) prefill chunk
+      decode_step(params,tok,pos,act)          one slotted step (T == 1)
+      decode_block(params,bucket,…)  one T-micro-step block (per-bucket
+                                     program; ``buckets`` fixed at build)
+      reset(slot) / has_reset        debug slot zeroing
+      drain_prefill / drain_decode   drain-mode batch programs (colocated
+                                     backend only)
+
+    Each backend × mode compiles exactly the programs it dispatches:
+
+      colocated  chunked admission     serve_prefill_chunk
+      colocated  monolithic admission  serve_prefill1 + serve_admit
+      colocated  T == 1                serve_decode
+      colocated  T > 1                 serve_decode_block[_s{N}] per bucket
+      colocated  drain                 serve_prefill_batch + serve_decode_drain
+      wa         chunked admission     serve_wa_prefill_chunk
+      wa         monolithic admission  serve_wa_admit (full-width chunk)
+      wa         T == 1                serve_wa_decode
+      wa         T > 1                 serve_wa_decode_block[_s{N}] per bucket
+      either     debug_reset_slots     serve_reset
 
     The scheduler never sees a jax array; the executor never makes a
     scheduling decision."""
+
+    name = "colocated"
 
     def __init__(self, api: ModelAPI, ctx: ShardingCtx, rt: StaticRuntime,
                  params, caches_aval, *, mode: str, slots: int,
                  prompt_len: int, max_new_cap: int, block_size: int,
                  kv_bucket_chunk: int, prefill_chunk: int,
-                 debug_reset_slots: bool, raw_decode: Optional[Callable]):
+                 debug_reset_slots: bool):
         self.api, self.ctx, self.rt = api, ctx, rt
         self.slots, self.prompt_len = slots, prompt_len
         self.max_new_cap = max_new_cap
         self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
         self.caches = None
         self.buckets: Tuple[int, ...] = ()
+        self._decode_blocks: Dict[int, Callable] = {}
         self._reset = None
         if mode == "continuous":
             self._build_continuous(params, caches_aval, kv_bucket_chunk,
-                                   prefill_chunk, debug_reset_slots,
-                                   raw_decode)
+                                   prefill_chunk, debug_reset_slots)
         else:
             self._build_drain(params)
 
-    # -- program construction --------------------------------------------
-    def _build_continuous(self, params, caches_aval, kv_bucket_chunk,
-                          prefill_chunk, debug_reset_slots, raw_decode):
-        api, ctx = self.api, self.ctx
-        B, P, T = self.slots, self.prompt_len, self.block_size
-        scalar = jnp.zeros((), jnp.int32)
+    # -- shared build pieces ----------------------------------------------
+    def _bucket_set(self, caches_aval, kv_bucket_chunk) -> Tuple[int, ...]:
+        """Static KV bucket set for the block programs. Bucketing applies
+        only to prefix-ordered KV caches; recurrent states (and ring
+        buffers) get the single full program."""
+        bucketable = isinstance(caches_aval, KVCache) \
+            and not caches_aval.window
+        s_max = caches_aval.k.shape[3] if bucketable else 0
+        return kv_buckets(s_max, kv_bucket_chunk) \
+            if bucketable and kv_bucket_chunk > 0 else (0,)
+
+    def _build_reset(self, caches_aval, debug_reset_slots):
+        if debug_reset_slots and self.api.reset_slot is not None:
+            scalar = jnp.zeros((), jnp.int32)
+            self._reset = self.rt.compile_step(
+                "serve_reset",
+                lambda c, slot: self.api.reset_slot(c, slot),
+                (caches_aval, scalar), donate_argnums=(0,))
+
+    @staticmethod
+    def _postprocess(logits, positions, active):
+        # active-slot mask: retired slots emit a fixed token id 0 and
+        # never advance — finished requests cannot pollute the stream
+        nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        return jnp.where(active, nxt, 0), \
+            positions + active.astype(jnp.int32)
+
+    def _build_decode_programs(self, params, caches_aval, kv_bucket_chunk,
+                               prefix, slotted_fn, block_fn):
+        """Compile the decode half shared by every backend: one
+        ``{prefix}decode_block[_s{N}]`` per KV bucket for T > 1, else the
+        single ``{prefix}decode`` step program. Backends differ only in the
+        step callables and the program-name prefix — the halting operands,
+        donation and postprocess wiring cannot diverge between them.
+
+        slotted_fn(params, caches, tokens, positions, active)
+            → (caches, logits)
+        block_fn(params, caches, tok, pos, act, rem, eos, kv_bucket)
+            → the ``make_decode_block`` 7-tuple
+        """
+        B, T = self.slots, self.block_size
         pos0 = jnp.zeros((B,), jnp.int32)
         act0 = jnp.zeros((B,), bool)
         tok0 = jnp.zeros((B,), jnp.int32)
-
-        if prefill_chunk:
-            def chunk_fn(p, caches, toks, slot, start, valid):
-                caches, logits = api.prefill_chunk(p, caches, toks, slot,
-                                                   start, valid, ctx)
-                return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-
-            toks_c = jnp.zeros((1, prefill_chunk), jnp.int32)
-            self._chunk = self.rt.compile_step(
-                "serve_prefill_chunk", chunk_fn,
-                (params, caches_aval, toks_c, scalar, scalar, scalar),
-                donate_argnums=(1,))
-        else:
-            def prefill1_fn(p, toks):
-                caches, logits = api.prefill(p, {"tokens": toks}, ctx)
-                return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-
-            def admit_fn(caches, single, slot):
-                return api.write_slot(caches, single, slot)
-
-            toks1 = jnp.zeros((1, P), jnp.int32)
-            single_aval, _ = jax.eval_shape(prefill1_fn, params, toks1)
-            self._prefill1 = self.rt.compile_step(
-                "serve_prefill1", prefill1_fn, (params, toks1))
-            self._admit = self.rt.compile_step(
-                "serve_admit", admit_fn, (caches_aval, single_aval, scalar),
-                donate_argnums=(0,))
-
-        if debug_reset_slots and api.reset_slot is not None:
-            self._reset = self.rt.compile_step(
-                "serve_reset", lambda c, slot: api.reset_slot(c, slot),
-                (caches_aval, scalar), donate_argnums=(0,))
-
         if T > 1:
             # -- macro-step block programs, one per KV bucket --------------
-            # Bucketing applies only to prefix-ordered KV caches; recurrent
-            # states (and ring buffers) get the single full program.
-            bucketable = isinstance(caches_aval, KVCache) \
-                and not caches_aval.window
-            s_max = caches_aval.k.shape[3] if bucketable else 0
-            self.buckets = kv_buckets(s_max, kv_bucket_chunk) \
-                if bucketable and kv_bucket_chunk > 0 else (0,)
+            self.buckets = self._bucket_set(caches_aval, kv_bucket_chunk)
             rem0 = jnp.zeros((B,), jnp.int32)
             eos0 = jnp.full((B,), -1, jnp.int32)
-            self._decode_blocks: Dict[int, Callable] = {}
             for sb in self.buckets:
-                name = "serve_decode_block" if len(self.buckets) == 1 \
-                    else f"serve_decode_block_s{sb}"
+                name = f"{prefix}decode_block" if len(self.buckets) == 1 \
+                    else f"{prefix}decode_block_s{sb}"
 
-                def block_fn(p, caches, tok, pos, act, rem, eos, _sb=sb):
-                    return api.decode_block(p, caches, tok, pos, act, rem,
-                                            eos, ctx, block_size=T,
-                                            kv_bucket=_sb)
+                def block_step(p, caches, tok, pos, act, rem, eos, _sb=sb):
+                    return block_fn(p, caches, tok, pos, act, rem, eos, _sb)
 
                 self._decode_blocks[sb] = self.rt.compile_step(
-                    name, block_fn,
+                    name, block_step,
                     (params, caches_aval, tok0, pos0, act0, rem0, eos0),
                     donate_argnums=(1,))
             return
 
-        def postprocess(logits, positions, active):
-            # active-slot mask: retired slots emit a fixed token id 0 and
-            # never advance — finished requests cannot pollute the stream
-            nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
-            return jnp.where(active, nxt, 0), \
-                positions + active.astype(jnp.int32)
-
         def decode_fn(p, caches, tokens, positions, active):
-            caches, logits = api.decode_slotted(p, caches, tokens, positions,
-                                                active, ctx)
-            return (caches,) + postprocess(logits, positions, active)
+            caches, logits = slotted_fn(p, caches, tokens, positions, active)
+            return (caches,) + self._postprocess(logits, positions, active)
 
-        if raw_decode is None:
-            self._decode = self.rt.compile_step(
-                "serve_decode", decode_fn,
-                (params, caches_aval, tok0, pos0, act0),
-                donate_argnums=(1,))
-        else:
-            def decode_eager(p, caches, tokens, positions, active):
-                caches, logits = raw_decode(p, caches, tokens, positions,
-                                            active)
-                return (caches,) + postprocess(logits, positions, active)
-            self._decode = decode_eager
+        self._decode = self.rt.compile_step(
+            f"{prefix}decode", decode_fn,
+            (params, caches_aval, tok0, pos0, act0),
+            donate_argnums=(1,))
+
+    def _build_continuous(self, params, caches_aval, kv_bucket_chunk,
+                          prefill_chunk, debug_reset_slots):
+        raise NotImplementedError
 
     def _build_drain(self, params):
-        api, ctx = self.api, self.ctx
-
-        def prefill_fn(p, toks):
-            caches, logits = api.prefill(p, {"tokens": toks}, ctx)
-            return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-
-        def decode_fn(p, caches, tokens):
-            caches, logits = api.decode(p, caches, tokens, ctx)
-            return caches, jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
-
-        toks0 = jnp.zeros((self.slots, self.prompt_len), jnp.int32)
-        caches_aval, tok_aval = jax.eval_shape(prefill_fn, params, toks0)
-        self._prefill_b = self.rt.compile_step(
-            "serve_prefill_batch", prefill_fn, (params, toks0))
-        self._decode_b = self.rt.compile_step(
-            "serve_decode_drain", decode_fn, (params, caches_aval, tok_aval),
-            donate_argnums=(1,))
+        raise NotImplementedError(
+            f"the {self.name} backend has no drain mode")
 
     # -- execution --------------------------------------------------------
     @property
@@ -393,12 +394,9 @@ class StepExecutor:
                                            self.prompt_len + self.max_new_cap)
 
     def admit_full(self, params, row: np.ndarray, slot: int):
-        """Monolithic admission: batch-1 full-width prefill + slot write.
-        Returns the device array holding the first token."""
-        single, first = self._prefill1(params, jnp.asarray(row[None]))
-        self.caches = self._admit(self.caches, single,
-                                  jnp.asarray(slot, jnp.int32))
-        return first
+        """Monolithic admission of a full-width padded prompt row. Returns
+        the device array holding the first token."""
+        raise NotImplementedError
 
     def run_chunk(self, params, row: np.ndarray, slot: int, start: int,
                   valid: int):
@@ -430,11 +428,196 @@ class StepExecutor:
         self.caches = self._reset(self.caches, jnp.asarray(slot, jnp.int32))
 
     def drain_prefill(self, params, toks: np.ndarray):
+        raise NotImplementedError
+
+    def drain_decode(self, params, caches, last):
+        raise NotImplementedError
+
+
+class ColocatedBackend(ExecutorBackend):
+    """Single-domain executor: weights and KV share every device; the step
+    programs are the family's own ``ModelAPI`` slotted extensions."""
+
+    name = "colocated"
+
+    # -- program construction --------------------------------------------
+    def _build_continuous(self, params, caches_aval, kv_bucket_chunk,
+                          prefill_chunk, debug_reset_slots):
+        api, ctx = self.api, self.ctx
+        B, P, T = self.slots, self.prompt_len, self.block_size
+        scalar = jnp.zeros((), jnp.int32)
+
+        if prefill_chunk:
+            def chunk_fn(p, caches, toks, slot, start, valid):
+                caches, logits = api.prefill_chunk(p, caches, toks, slot,
+                                                   start, valid, ctx)
+                return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+            toks_c = jnp.zeros((1, prefill_chunk), jnp.int32)
+            self._chunk = self.rt.compile_step(
+                "serve_prefill_chunk", chunk_fn,
+                (params, caches_aval, toks_c, scalar, scalar, scalar),
+                donate_argnums=(1,))
+        else:
+            def prefill1_fn(p, toks):
+                caches, logits = api.prefill(p, {"tokens": toks}, ctx)
+                return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+            def admit_fn(caches, single, slot):
+                return api.write_slot(caches, single, slot)
+
+            toks1 = jnp.zeros((1, P), jnp.int32)
+            single_aval, _ = jax.eval_shape(prefill1_fn, params, toks1)
+            self._prefill1 = self.rt.compile_step(
+                "serve_prefill1", prefill1_fn, (params, toks1))
+            self._admit = self.rt.compile_step(
+                "serve_admit", admit_fn, (caches_aval, single_aval, scalar),
+                donate_argnums=(0,))
+
+        self._build_reset(caches_aval, debug_reset_slots)
+        self._build_decode_programs(
+            params, caches_aval, kv_bucket_chunk, "serve_",
+            lambda p, c, t, pos, act: api.decode_slotted(p, c, t, pos, act,
+                                                         ctx),
+            lambda p, c, t, pos, act, rem, eos, sb: api.decode_block(
+                p, c, t, pos, act, rem, eos, ctx, block_size=T,
+                kv_bucket=sb))
+
+    def _build_drain(self, params):
+        api, ctx = self.api, self.ctx
+
+        def prefill_fn(p, toks):
+            caches, logits = api.prefill(p, {"tokens": toks}, ctx)
+            return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+        def decode_fn(p, caches, tokens):
+            caches, logits = api.decode(p, caches, tokens, ctx)
+            return caches, jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+
+        toks0 = jnp.zeros((self.slots, self.prompt_len), jnp.int32)
+        caches_aval, tok_aval = jax.eval_shape(prefill_fn, params, toks0)
+        self._prefill_b = self.rt.compile_step(
+            "serve_prefill_batch", prefill_fn, (params, toks0))
+        self._decode_b = self.rt.compile_step(
+            "serve_decode_drain", decode_fn, (params, caches_aval, tok_aval),
+            donate_argnums=(1,))
+
+    # -- execution --------------------------------------------------------
+    def admit_full(self, params, row: np.ndarray, slot: int):
+        """Monolithic admission: batch-1 full-width prefill + slot write."""
+        single, first = self._prefill1(params, jnp.asarray(row[None]))
+        self.caches = self._admit(self.caches, single,
+                                  jnp.asarray(slot, jnp.int32))
+        return first
+
+    def drain_prefill(self, params, toks: np.ndarray):
         caches, first = self._prefill_b(params, jnp.asarray(toks))
         return caches, first
 
     def drain_decode(self, params, caches, last):
         return self._decode_b(params, caches, last)
+
+
+class WABackend(ExecutorBackend):
+    """Weight–attention disaggregated executor (DESIGN.md §3): every step
+    program runs ``core/wa.py``'s routed layer loop — QKV/FFN under the
+    W-domain rules, KV writes / prefix reads / bucket slices / halt-mask
+    advances under the A-domain rules, with the W→A→W hops as sharding
+    constraints INSIDE the compiled program (``jax.device_put``-free).
+    Per-slot cursors and KV buckets are A-side state; the scheduler's
+    decisions arrive only as traced operands, so every program compiles
+    exactly once across a staggered serve.
+
+    Admission is ALWAYS the WA chunk program: the chunked lane runs the
+    fixed (1,C) window; monolithic admission is the degenerate single
+    full-width chunk (C = prompt_len, valid = prompt_len — padding
+    attended, cursor at the padded width, exactly the colocated monolithic
+    semantics).
+
+    ``routed_bytes`` meters the W↔A hops (``core/wa.py::routing_bytes``):
+    every dispatched micro-step routes the whole (B, d_model) batch twice
+    per layer, every prefill chunk its (C, d_model) window — the measured
+    form of the paper's "only embeddings move"."""
+
+    name = "wa"
+
+    def _build_continuous(self, params, caches_aval, kv_bucket_chunk,
+                          prefill_chunk, debug_reset_slots):
+        api, ctx = self.api, self.ctx
+        B, P, T = self.slots, self.prompt_len, self.block_size
+        self.wa = WADisaggregated(api.config, ctx.mesh, routing="sharding")
+        self._el = jnp.dtype(dtype_of(api.config)).itemsize
+        self.routed_bytes = 0
+        scalar = jnp.zeros((), jnp.int32)
+
+        def chunk_fn(p, caches, toks, slot, start, valid):
+            caches, logits = self.wa.prefill_chunk(p, caches, toks, slot,
+                                                   start, valid)
+            return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+        toks_c = jnp.zeros((1, prefill_chunk or P), jnp.int32)
+        self._chunk = self.rt.compile_step(
+            "serve_wa_prefill_chunk" if prefill_chunk else "serve_wa_admit",
+            chunk_fn, (params, caches_aval, toks_c, scalar, scalar, scalar),
+            donate_argnums=(1,))
+
+        self._build_reset(caches_aval, debug_reset_slots)
+        self._build_decode_programs(
+            params, caches_aval, kv_bucket_chunk, "serve_wa_",
+            lambda p, c, t, pos, act: self.wa.decode_step_slotted(
+                p, c, t, pos, act),
+            lambda p, c, t, pos, act, rem, eos, sb: self.wa.decode_block(
+                p, c, t, pos, act, rem, eos, None, block_size=T,
+                kv_bucket=sb))
+
+    # -- execution (adds the W↔A traffic meter) ---------------------------
+    def fresh(self):
+        super().fresh()
+        self.routed_bytes = 0
+
+    def admit_full(self, params, row: np.ndarray, slot: int):
+        """Monolithic WA admission: ONE full-width chunk (start 0, the
+        padded width valid) — KV lands directly in the slot, no separate
+        write-slot copy (the cache never leaves the A domain)."""
+        self.routed_bytes += routing_bytes(self.api.config, self.prompt_len,
+                                           self._el)
+        self.caches, tok = self._chunk(
+            params, self.caches, jnp.asarray(row[None]),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(0, jnp.int32),
+            jnp.asarray(self.prompt_len, jnp.int32))
+        return tok
+
+    def run_chunk(self, params, row, slot, start, valid):
+        self.routed_bytes += routing_bytes(self.api.config,
+                                           self.prefill_chunk, self._el)
+        return super().run_chunk(params, row, slot, start, valid)
+
+    def decode_step(self, params, last_tok, positions, active):
+        self.routed_bytes += routing_bytes(self.api.config, self.slots,
+                                           self._el)
+        return super().decode_step(params, last_tok, positions, active)
+
+    def decode_block(self, params, bucket, last_tok, positions, active,
+                     remaining, eos):
+        self.routed_bytes += self.block_size * routing_bytes(
+            self.api.config, self.slots, self._el)
+        return super().decode_block(params, bucket, last_tok, positions,
+                                    active, remaining, eos)
+
+    def routing_stats(self, decode_tokens: int) -> Dict[str, Any]:
+        """The measured 'only embeddings move' numbers for ``run()`` stats:
+        the per-token claim (2 hops × L × d_model for one row) plus the
+        metered total across every dispatched program this run."""
+        return {
+            "routing_bytes_per_token": routing_bytes(self.api.config, 1,
+                                                     self._el),
+            "routing_total_bytes": int(self.routed_bytes),
+            "routing_bytes_per_decode_token":
+                float(self.routed_bytes / max(decode_tokens, 1)),
+        }
+
+
+BACKENDS: Dict[str, type] = {"colocated": ColocatedBackend, "wa": WABackend}
 
 
 # ---------------------------------------------------------------------------
@@ -473,11 +656,16 @@ class ServingEngine:
     for correctness — masked attention cannot read past a cursor — but keeps
     cache dumps clean and slot-state invariants checkable.
 
-    ``raw_decode`` (optional, T == 1 only): an eager decode-step callable
-    ``(params, caches, tokens, positions, active) -> (caches, logits)`` used
-    INSTEAD of the AOT-compiled slotted decode — the hook through which the
-    WA-disaggregated backend (two submeshes, python-orchestrated routing)
-    plugs into the same admission scheduler.
+    ``backend``: the executor implementation. ``"colocated"`` (default)
+    runs the family's own slotted programs; ``"wa"`` runs the SAME feature
+    set — macro-step blocks, KV buckets, chunked prefill, slot admission —
+    through the weight–attention disaggregated layer loop (``core/wa.py``,
+    DESIGN.md §3): QKV/FFN under the W-domain rules, all slot state (KV
+    writes, prefix reads, bucket slices) under the A-domain rules, with the
+    per-layer W→A→W routing compiled INTO each step program. The scheduler
+    is backend-agnostic; ``stats()["wa"]`` reports the measured W↔A routing
+    bytes. Requires ``ModelAPI.wa_servable`` (prefix-ordered KV-cache
+    transformers) and the continuous scheduler.
 
     An engine instance may be ``run()`` repeatedly: per-run accumulators
     (timings, sync counts, queues) reset and the slot caches are allocated
@@ -489,47 +677,71 @@ class ServingEngine:
                  prompt_len: int, runtime: Optional[StaticRuntime] = None,
                  greedy: bool = True, mode: str = "auto",
                  max_new_cap: int = DECODE_SLACK,
-                 raw_decode: Optional[Callable] = None,
                  block_size: int = 1, kv_bucket_chunk: int = 0,
                  prefill_chunk: int = 0,
-                 debug_reset_slots: bool = False):
+                 debug_reset_slots: bool = False,
+                 backend: str = "colocated"):
         if mode not in ("auto", "continuous", "drain"):
             raise ValueError(mode)
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; choose from "
+                             f"{sorted(BACKENDS)}")
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         if prefill_chunk < 0:
             raise ValueError(f"prefill_chunk must be >= 0, got {prefill_chunk}")
-        if block_size > 1 and raw_decode is not None:
-            raise ValueError("raw_decode is a per-step hook; macro-step "
-                             "decode (block_size > 1) requires the AOT "
-                             "decode_block path")
-        # continuous mode needs a decode half (api.decode_block for T > 1,
-        # api.decode_slotted or a raw_decode override for T == 1) AND an
-        # admission half (api.prefill_chunk for the chunked lane,
-        # api.write_slot for monolithic admission)
-        decode_ok = (api.decode_block is not None if block_size > 1 else
-                     api.decode_slotted is not None or raw_decode is not None)
-        if mode == "auto" and prefill_chunk > 0 \
-                and api.prefill_chunk is None:
-            prefill_chunk = 0        # auto: fall back to monolithic admission
-        admit_ok = (api.prefill_chunk is not None if prefill_chunk > 0 else
-                    api.write_slot is not None)
-        slotted_ok = admit_ok and decode_ok
-        if mode == "continuous" and not slotted_ok:
-            raise ValueError(
-                f"{api.config.family} family has no "
-                f"{'chunked-prefill' if prefill_chunk > 0 else 'slotted'} "
-                f"serving support")
-        if mode == "drain" and prefill_chunk > 0:
-            raise ValueError("chunked prefill requires the continuous "
-                             "scheduler (drain prefills the whole batch)")
+        if backend == "wa":
+            # the WA backend carries its own decode/admission programs
+            # (core/wa.py) — it needs the continuous scheduler and a family
+            # whose KV the W/A split can decouple (DESIGN.md §6)
+            if mode == "drain":
+                raise ValueError("the WA backend serves through the "
+                                 "continuous scheduler; drain mode is "
+                                 "colocated-only")
+            if not api.wa_servable:
+                raise ValueError(
+                    f"{api.config.family} family has no WA-disaggregated "
+                    f"serving support (DESIGN.md §6)")
+            resolved_mode = "continuous"
+        else:
+            # continuous mode needs a decode half (api.decode_block for
+            # T > 1, api.decode_slotted for T == 1) AND an admission half
+            # (api.prefill_chunk for the chunked lane, api.write_slot for
+            # monolithic admission)
+            decode_ok = (api.decode_block is not None if block_size > 1 else
+                         api.decode_slotted is not None)
+            if mode == "auto" and prefill_chunk > 0 \
+                    and api.prefill_chunk is None:
+                # fall back to monolithic admission — LOUDLY: a benchmark
+                # config that asked for the chunk lane must not quietly
+                # measure the monolithic one
+                warnings.warn(
+                    f"prefill_chunk={prefill_chunk} requested but the "
+                    f"{api.config.family} family has no prefill_chunk "
+                    f"support; falling back to monolithic admission (the "
+                    f"chunked-prefill lane is OFF for this engine)",
+                    UserWarning, stacklevel=2)
+                prefill_chunk = 0
+            admit_ok = (api.prefill_chunk is not None if prefill_chunk > 0
+                        else api.write_slot is not None)
+            slotted_ok = admit_ok and decode_ok
+            if mode == "continuous" and not slotted_ok:
+                raise ValueError(
+                    f"{api.config.family} family has no "
+                    f"{'chunked-prefill' if prefill_chunk > 0 else 'slotted'} "
+                    f"serving support")
+            if mode == "drain" and prefill_chunk > 0:
+                raise ValueError("chunked prefill requires the continuous "
+                                 "scheduler (drain prefills the whole batch)")
+            resolved_mode = ("continuous" if slotted_ok else "drain") \
+                if mode == "auto" else mode
         self.api = api
         self.ctx = ctx
         self.slots = batch_slots
         self.prompt_len = prompt_len
         self.max_new_cap = min(max_new_cap, DECODE_SLACK)
-        self.mode = ("continuous" if slotted_ok else "drain") \
-            if mode == "auto" else mode
+        self.mode = resolved_mode
+        self.backend = backend
         if self.mode == "drain":
             prefill_chunk = 0                    # auto fallback: no lane
         self.block_size = block_size
@@ -539,8 +751,7 @@ class ServingEngine:
         self.rt = runtime or StaticRuntime()
         self.queue: List[Request] = []
         self._params = None
-        self._raw_decode = raw_decode
-        self._ex: Optional[StepExecutor] = None
+        self._ex: Optional[ExecutorBackend] = None
         # the ONE derivation of the slot-cache aval: the executor compiles
         # against it and the KV-extent admission bound reads off it
         # (None extent → no length axis to bound, e.g. recurrent state)
@@ -627,15 +838,14 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def _prepare(self, params):
         if self._ex is None:
-            self._ex = StepExecutor(
+            self._ex = BACKENDS[self.backend](
                 self.api, self.ctx, self.rt, params, self._caches_aval,
                 mode=self.mode,
                 slots=self.slots, prompt_len=self.prompt_len,
                 max_new_cap=self.max_new_cap, block_size=self.block_size,
                 kv_bucket_chunk=self.kv_bucket_chunk,
                 prefill_chunk=self.prefill_chunk,
-                debug_reset_slots=self.debug_reset_slots,
-                raw_decode=self._raw_decode)
+                debug_reset_slots=self.debug_reset_slots)
 
     def run(self, params, requests: List[Request],
             max_steps: int = 10_000) -> Dict[str, Any]:
@@ -945,8 +1155,9 @@ class ServingEngine:
         # both sides (their first tokens are not in the numerator, their
         # stalls not in the denominator)
         n_dec = self._decode_tokens
-        return {
+        out = {
             "mode": self.mode,
+            "backend": self.backend,
             "block_size": self.block_size,
             "prefill_mode": ("chunked" if self.prefill_chunk
                              else "monolithic"),
@@ -973,3 +1184,8 @@ class ServingEngine:
             "per_request": per_req,
             "runtime": self.rt.stats(),
         }
+        if self.backend == "wa" and self._ex is not None:
+            # measured W↔A traffic — the paper's "only embeddings move"
+            # claim as a number in every run's output
+            out["wa"] = self._ex.routing_stats(n_dec)
+        return out

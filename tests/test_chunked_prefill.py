@@ -279,6 +279,21 @@ def test_drain_mode_refuses_chunked_prefill(dense):
                       prefill_chunk=4)
 
 
+def test_auto_mode_warns_when_dropping_chunk_lane():
+    """mode="auto" falls back to monolithic admission when the family has
+    no prefill_chunk — but LOUDLY: a benchmark config that asked for the
+    chunk lane must never quietly measure the monolithic one."""
+    api = build_model(ASSIGNED["recurrentgemma-9b"].reduced())
+    with pytest.warns(UserWarning, match="monolithic admission"):
+        eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="auto",
+                            prefill_chunk=4)
+    assert eng.prefill_chunk == 0
+    # an explicit mode="continuous" request still hard-errors instead
+    with pytest.raises(ValueError):
+        ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                      prefill_chunk=4)
+
+
 # ---------------------------------------------------------------------------
 # zero retracing across chunked admissions (§4.3 pinned-pool invariant)
 # ---------------------------------------------------------------------------

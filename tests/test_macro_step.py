@@ -370,10 +370,9 @@ def test_one_token_requests_do_not_idle_the_slot(dense):
     assert len(reqs[2].generated) == 5
 
 
-def test_block_mode_rejects_raw_decode(dense):
+def test_invalid_block_size_rejected(dense):
     cfg, api, params = dense
     with pytest.raises(ValueError):
-        ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, block_size=4,
-                      raw_decode=lambda *a: None)
-    with pytest.raises(ValueError):
         ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, block_size=0)
+    with pytest.raises(ValueError):
+        ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, prefill_chunk=-1)

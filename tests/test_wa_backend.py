@@ -1,0 +1,223 @@
+"""WA-disaggregated serving-backend tests (DESIGN.md §3/§7).
+
+Covers the invariants the pluggable-backend ISSUE demands:
+- the WA backend serves a full staggered-arrival workload with token
+  streams BYTE-IDENTICAL to the colocated backend — dense and int8-KV,
+  per-step (T=1) and macro-step (T=8), chunked and monolithic admission,
+- ragged TRUE prompt lengths (incl. longer than the static width) admit
+  through the WA chunk program and match the colocated chunk lane,
+- ``compiles == 1`` for EVERY WA step program (decode block per bucket,
+  prefill chunk, admission) across a staggered serve AND across engine
+  reuse — the §4.3 pinned-pool invariant extends to the routed programs,
+- the scheduler is backend-agnostic: only ``serve_wa_*`` programs compile
+  under the WA backend (no colocated program sneaks in),
+- ``stats()["wa"]`` reports the measured W↔A routing bytes
+  (``core/wa.py::routing_bytes`` — the "only embeddings move" number),
+- backend validation: drain mode, attention-free families and unknown
+  backend names are rejected; the retired ``raw_decode`` hook is gone.
+
+Fixtures run in float32 for the same reason as test_chunked_prefill.py:
+token equality must test scheduling/routing semantics, not bf16
+accumulation-order luck between the routed python layer loop and the
+colocated ``lax.scan``.
+"""
+import inspect
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED
+from repro.core.wa import WADisaggregated, routing_bytes
+from repro.models import NULL_CTX, build_model
+from repro.runtime.serving import Request, ServingEngine
+from repro.runtime.static_runtime import StaticRuntime
+
+PROMPT_LEN = 8
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def dense_int8():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32",
+                                                   kv_dtype="int8")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+def _requests(cfg, plan, seed=0):
+    """plan: (max_new, arrival_step[, prompt_len]) — seeded per call so
+    identical plans produce identical prompts across engines."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, entry in enumerate(plan):
+        new, arr, plen = entry if len(entry) == 3 else entry + (PROMPT_LEN,)
+        out.append(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, plen,
+                                               dtype=np.int32),
+                           max_new_tokens=new, arrival_step=arr))
+    return out
+
+
+STAGGERED = [(9, 0), (13, 0), (5, 2), (9, 6)]
+
+
+def _serve(api, params, plan, backend, T, chunk, rt=None, slots=2):
+    reqs = _requests(api.config, plan)
+    eng = ServingEngine(api, NULL_CTX, slots, PROMPT_LEN,
+                        runtime=rt or StaticRuntime(), mode="continuous",
+                        max_new_cap=32, block_size=T,
+                        kv_bucket_chunk=16 if T > 1 else 0,
+                        prefill_chunk=chunk, backend=backend)
+    stats = eng.run(params, reqs, max_steps=400)
+    return reqs, stats, eng
+
+
+# ---------------------------------------------------------------------------
+# token-exactness: WA backend == colocated backend through a staggered serve
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,chunk", [(1, 0), (1, 3), (8, 0), (8, 3)])
+def test_wa_matches_colocated_staggered_dense(dense, T, chunk):
+    cfg, api, params = dense
+    r_co, s_co, _ = _serve(api, params, STAGGERED, "colocated", T, chunk)
+    r_wa, s_wa, _ = _serve(api, params, STAGGERED, "wa", T, chunk)
+    assert s_co["completed"] == s_wa["completed"] == len(STAGGERED)
+    assert s_wa["backend"] == "wa" and s_co["backend"] == "colocated"
+    for a, b in zip(r_co, r_wa):
+        assert a.generated == b.generated, (a.rid, T, chunk)
+
+
+@pytest.mark.parametrize("T,chunk", [(1, 0), (8, 3)])
+def test_wa_matches_colocated_staggered_int8(dense_int8, T, chunk):
+    """int8-KV: the WA chunk program stores pre-dequant int8 + scales and
+    the decode blocks dequantize only the bucket — same bytes, same tokens
+    as the colocated engine."""
+    cfg, api, params = dense_int8
+    r_co, s_co, _ = _serve(api, params, STAGGERED, "colocated", T, chunk)
+    r_wa, s_wa, _ = _serve(api, params, STAGGERED, "wa", T, chunk)
+    assert s_co["completed"] == s_wa["completed"] == len(STAGGERED)
+    for a, b in zip(r_co, r_wa):
+        assert a.generated == b.generated, (a.rid, T, chunk)
+
+
+def test_wa_ragged_true_lengths_match_colocated(dense):
+    """Length-true cursors are A-side state: ragged prompts (3/5/8/11, the
+    11 > static width admissible only through the chunk walk) produce the
+    colocated chunk lane's exact streams through the WA chunk program."""
+    cfg, api, params = dense
+    plan = [(6, 0, 5), (6, 0, 8), (6, 2, 11), (6, 4, 3)]
+    r_co, s_co, _ = _serve(api, params, plan, "colocated", 4, 4)
+    r_wa, s_wa, _ = _serve(api, params, plan, "wa", 4, 4)
+    assert s_co["completed"] == s_wa["completed"] == len(plan)
+    assert s_wa["prefill_chunks"] == s_co["prefill_chunks"] \
+        == sum(-(-p // 4) for _, _, p in plan)
+    for a, b in zip(r_co, r_wa):
+        assert a.generated == b.generated, a.rid
+
+
+# ---------------------------------------------------------------------------
+# zero retracing: compiles == 1 for every WA step program (§4.3)
+# ---------------------------------------------------------------------------
+
+def test_wa_programs_compile_once_across_staggered_serve(dense):
+    cfg, api, params = dense
+    rt = StaticRuntime()
+    plan = [(4, 0, 5), (4, 0, 8), (4, 1, 11), (4, 3, 2), (4, 5, 7)]
+    reqs, stats, eng = _serve(api, params, plan, "wa", 4, 4, rt=rt)
+    assert stats["completed"] == len(plan)
+    rs = stats["runtime"]
+    # only routed programs — the scheduler/executor split means switching
+    # backend swaps EVERY program without touching the boundary loop
+    assert set(rs) == {"serve_wa_prefill_chunk", "serve_wa_decode_block_s16",
+                       "serve_wa_decode_block_s32",
+                       "serve_wa_decode_block_s40"}
+    for name, rec in rs.items():
+        assert rec["compiles"] == 1, (name, rec)   # zero retracing
+    assert rs["serve_wa_prefill_chunk"]["calls"] == \
+        sum(-(-p // 4) for _, _, p in plan)
+    # engine reuse: a second run recompiles nothing
+    stats2 = eng.run(params, _requests(cfg, plan), max_steps=400)
+    assert all(rec["compiles"] == 1 for rec in stats2["runtime"].values())
+
+
+def test_wa_monolithic_admission_is_one_program(dense):
+    """Monolithic WA admission is the degenerate full-width chunk: ONE
+    serve_wa_admit program (KV lands directly in the slot on the A side —
+    no separate write-slot copy) reused across every admission."""
+    cfg, api, params = dense
+    rt = StaticRuntime()
+    reqs, stats, _ = _serve(api, params, [(4, 0), (4, 0), (4, 1), (4, 3)],
+                            "wa", 1, 0, rt=rt)
+    assert stats["completed"] == 4
+    rs = stats["runtime"]
+    assert set(rs) == {"serve_wa_admit", "serve_wa_decode"}
+    assert rs["serve_wa_admit"]["compiles"] == 1
+    assert rs["serve_wa_admit"]["calls"] == 4
+
+
+# ---------------------------------------------------------------------------
+# routing-bytes stats: "only embeddings move" as a measured number
+# ---------------------------------------------------------------------------
+
+def test_wa_stats_report_routing_bytes(dense):
+    cfg, api, params = dense
+    reqs, stats, _ = _serve(api, params, [(6, 0), (6, 1)], "wa", 4, 3)
+    wa = stats["wa"]
+    # f32 activations: 4 bytes/el, 2 hops × L × d_model per routed token row
+    assert wa["routing_bytes_per_token"] == routing_bytes(cfg, 1, 4) \
+        == 2 * cfg.n_layers * cfg.d_model * 4
+    assert wa["routing_total_bytes"] > 0
+    assert wa["routing_bytes_per_decode_token"] >= wa["routing_bytes_per_token"]
+    # colocated runs carry no wa section
+    _, s_co, _ = _serve(api, params, [(4, 0)], "colocated", 1, 0)
+    assert "wa" not in s_co
+
+
+# ---------------------------------------------------------------------------
+# validation + the retired raw_decode hook
+# ---------------------------------------------------------------------------
+
+def test_wa_backend_rejects_drain_and_attention_free():
+    ssm = build_model(ASSIGNED["mamba2-1.3b"].reduced())
+    with pytest.raises(ValueError, match="WA-disaggregated"):
+        ServingEngine(ssm, NULL_CTX, 2, PROMPT_LEN, backend="wa")
+    dense_api = build_model(ASSIGNED["qwen2-0.5b"].reduced())
+    with pytest.raises(ValueError, match="drain"):
+        ServingEngine(dense_api, NULL_CTX, 2, PROMPT_LEN, mode="drain",
+                      backend="wa")
+    with pytest.raises(ValueError, match="unknown backend"):
+        ServingEngine(dense_api, NULL_CTX, 2, PROMPT_LEN, backend="nope")
+
+
+def test_wa_auto_mode_resolves_to_continuous():
+    api = build_model(ASSIGNED["qwen2-0.5b"].reduced())
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="auto",
+                        backend="wa")
+    assert eng.mode == "continuous"
+
+
+def test_raw_decode_hook_is_retired():
+    """The WA path is a first-class backend now; the per-step eager escape
+    hatch must be gone from the engine's surface."""
+    assert "raw_decode" not in inspect.signature(
+        ServingEngine.__init__).parameters
+
+
+def test_wa_aot_entry_points_require_sharding_routing():
+    """decode_block / prefill_chunk trace the routing into ONE program —
+    the eager device_put submesh hops cannot be staged and must be refused
+    up front, not die inside XLA."""
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32")
+    # a device_put-mode instance without materializing submeshes: the guard
+    # is pure python and must fire before any tracing happens
+    wa = WADisaggregated.__new__(WADisaggregated)
+    wa.cfg, wa.routing = cfg, "device_put"
+    with pytest.raises(ValueError, match="sharding"):
+        wa._require_aot("decode_block")
