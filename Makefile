@@ -2,13 +2,16 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke bench-serve lint check
+.PHONY: test test-fast test-long bench-smoke bench-serve lint check
 
 test:            ## tier-1 verify (full suite, fail fast)
 	python -m pytest -x -q
 
 test-fast:       ## skip the slow multi-device subprocess tests
 	python -m pytest -x -q --ignore=tests/test_distributed.py
+
+test-long:       ## 8-device split-KV serve (long-context A-domain matrix)
+	python -m pytest -x -q tests/test_distributed.py -k split_kv
 
 bench-smoke:     ## fast benchmark subset (CSV sanity; serve_tpot exercises the colocated-vs-WA backend scenario on every PR)
 	python -m benchmarks.run table2_end_to_end fig10_runtime serve_tpot

@@ -32,6 +32,14 @@ Three claims are measured on the CPU dry-run config:
    regression baseline for the routed program path, exercised by
    ``make bench-smoke`` on every PR.
 
+4. Split-KV flash decode (ISSUE 6 / DESIGN.md §3): at 8k–32k context the
+   per-token attention walk dominates decode, and sharding one slot's KV
+   along the sequence axis over the A submesh divides it by the A-width.
+   Measured as the per-device critical path (one C/w shard-local partial
+   flash pass + the w-way LSE merge) for contexts {8k, 16k, 32k} ×
+   A-widths {1, 2, 4}, equivalence-checked against the sequential walk at
+   every point — attention latency must fall as the width grows.
+
 Per mode: TPOT (mean/p50/p99 per micro-step), TTFT, decode-token
 throughput, host syncs per generated token, compile counts (every program
 must compile exactly once). Results go to the CSV contract AND to
@@ -142,6 +150,104 @@ def _long_prompt_scenario(api, params, ctx):
     emit("serving/long_prompt/chunked_gap_reduction",
          out["chunked_over_monolithic"]["inflight_gap_reduction"],
          f"tpot_ratio={out['chunked_over_monolithic']['tpot_ratio']:.3f}")
+    return out
+
+
+# -- split-KV long-context scenario ----------------------------------------
+SK_CONTEXTS = (8192, 16384, 32768)   # KV positions attended per decode token
+SK_WIDTHS = (1, 2, 4)                # A-domain shard counts
+SK_HEADS, SK_KV_HEADS, SK_HEAD_DIM = 16, 4, 64
+SK_REPS = 30                         # min-of-N timing per point
+
+
+def _split_kv_long_context_scenario():
+    """Split-KV flash decode (ISSUE 6 / DESIGN.md §3): at long context the
+    per-token attention walk is the decode critical path, and sharding one
+    slot's KV along the sequence axis over the A submesh divides that walk
+    by the A-width. On this single-host CPU run the w shards cannot
+    actually execute concurrently, so the measured quantity is the
+    PER-DEVICE critical path a w-wide A domain executes: ONE shard-local
+    partial flash pass over C/w positions plus the w-way LSE merge of the
+    (o, m, l) stat triples — the only cross-device traffic. Equivalence is
+    checked against the sequential full-context walk at every point before
+    timing it."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_decode.ops import (combine_partial_stats,
+                                                flash_decode,
+                                                flash_decode_partial)
+
+    B, Hq, n_kv, hd = 1, SK_HEADS, SK_KV_HEADS, SK_HEAD_DIM
+    rng = np.random.default_rng(0)
+    out = {"config": {
+        "batch": B, "q_heads": Hq, "kv_heads": n_kv, "head_dim": hd,
+        "contexts": list(SK_CONTEXTS), "a_widths": list(SK_WIDTHS),
+        "reps": SK_REPS, "dtype": "float32",
+        "method": "per-device critical path: one shard-local partial flash "
+                  "pass over C/w KV positions + the w-way LSE merge of "
+                  "(o, m, l) stat triples; shards execute concurrently "
+                  "across the A submesh, so this is the wall-clock a "
+                  "w-wide A domain pays per decode token",
+    }}
+    max_err = 0.0
+    for C in SK_CONTEXTS:
+        q = jnp.asarray(rng.standard_normal((B, Hq, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, n_kv, C, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, n_kv, C, hd)), jnp.float32)
+        mask = jnp.ones((B, C), bool)
+        full = np.asarray(flash_decode(q, k, v, mask))
+        rec = {}
+        for w in SK_WIDTHS:
+            Sb = C // w
+            # equivalence: the REAL w distinct shards, partial + merge,
+            # must match the sequential full-context walk
+            ks = k.reshape(B, n_kv, w, Sb, hd)
+            vs = v.reshape(B, n_kv, w, Sb, hd)
+            parts = [flash_decode_partial(q, ks[:, :, s], vs[:, :, s],
+                                          jnp.ones((B, Sb), bool))
+                     for s in range(w)]
+            merged = combine_partial_stats(
+                jnp.stack([p[0] for p in parts]),
+                jnp.stack([p[1] for p in parts]),
+                jnp.stack([p[2] for p in parts]), axis=0)
+            err = float(np.abs(np.asarray(merged) - full).max())
+            max_err = max(max_err, err)
+            assert err < 1e-4, (C, w, err)
+
+            # timing: ONE shard's pass + the w-way merge (stat triples
+            # replicated w-wide — on the mesh each device contributes one)
+            def step(q, k1, v1, m1, _w=w):
+                o, mm, ll = flash_decode_partial(q, k1, v1, m1)
+                os = jnp.broadcast_to(o[None], (_w,) + o.shape)
+                ms = jnp.broadcast_to(mm[None], (_w,) + mm.shape)
+                ls = jnp.broadcast_to(ll[None], (_w,) + ll.shape)
+                return combine_partial_stats(os, ms, ls, axis=0)
+
+            fn = jax.jit(step)
+            k1, v1 = ks[:, :, 0], vs[:, :, 0]
+            m1 = jnp.ones((B, Sb), bool)
+            fn(q, k1, v1, m1).block_until_ready()      # compile + warm
+            best = float("inf")
+            for _ in range(SK_REPS):
+                t0 = time.perf_counter()
+                fn(q, k1, v1, m1).block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            rec[f"w{w}_attn_ms"] = best * 1e3
+            emit(f"serving/split_kv/c{C}/w{w}", best * 1e3,
+                 f"shard_len={Sb};equiv_max_abs_err={err:.2e}")
+        for w in SK_WIDTHS[1:]:
+            rec[f"speedup_w{w}"] = rec["w1_attn_ms"] / max(
+                rec[f"w{w}_attn_ms"], 1e-9)
+        out[f"c{C}"] = rec
+    out["equivalence_max_abs_err"] = max_err
+    emit("serving/split_kv/speedup_w4_at_32k",
+         out["c32768"]["speedup_w4"],
+         f"w1_ms={out['c32768']['w1_attn_ms']:.3f};"
+         f"w4_ms={out['c32768']['w4_attn_ms']:.3f};"
+         f"equiv_max_abs_err={max_err:.2e}")
     return out
 
 
@@ -270,6 +376,7 @@ def run():
          f"tpot_speedup={speedup:.2f};host_sync_reduction={sync_drop:.1f}")
     report["long_prompt"] = _long_prompt_scenario(api, params, ctx)
     report["wa_backend"] = _wa_backend_scenario(api, params, ctx)
+    report["split_kv_long_context"] = _split_kv_long_context_scenario()
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -33,18 +33,26 @@ ap.add_argument("--backend", default="colocated", choices=("colocated", "wa"),
                 help="executor backend: colocated, or weight-attention "
                      "disaggregated (W→A→W routing compiled into every "
                      "step program; reports routed bytes)")
+ap.add_argument("--a-shards", type=int, default=1,
+                help="split-KV flash decode width: each slot's KV walk is "
+                     "split into N equal sequence shards recombined by the "
+                     "LSE merge — token-exact, and the long-context "
+                     "attention walk scales with the A-domain width "
+                     "(prompt_len + decode slack must divide by N)")
 args = ap.parse_args()
 
 print(f"serving {args.requests} requests on {args.arch} "
       f"(batch={args.batch_slots}, prompt={args.prompt_len}, "
       f"max_new={args.max_new}, mode={args.mode}, "
       f"arrival_every={args.arrival_every}, block_size={args.block_size}, "
-      f"prefill_chunk={args.prefill_chunk}, backend={args.backend})")
+      f"prefill_chunk={args.prefill_chunk}, backend={args.backend}, "
+      f"a_shards={args.a_shards})")
 stats = serve(args.arch, args.requests, args.batch_slots, args.prompt_len,
               args.max_new, mode=args.mode, arrival_every=args.arrival_every,
               block_size=args.block_size,
               kv_bucket_chunk=args.kv_bucket_chunk,
-              prefill_chunk=args.prefill_chunk, backend=args.backend)
+              prefill_chunk=args.prefill_chunk, backend=args.backend,
+              a_shards=args.a_shards)
 print(f"\nmode:        {stats['mode']} (backend={stats['backend']})")
 print(f"completed:   {stats['completed']} "
       f"({stats['admissions']} admissions, "

@@ -63,13 +63,14 @@ from repro.configs.shapes import ShapeConfig
 from repro.core.residency import plan as residency_plan
 from repro.models import common
 from repro.models.attention import chunk_attention, decode_attention, \
-    qkv_project
+    decode_attention_split, qkv_project
 from repro.models.registry import make_decode_block
 from repro.models.sharding import ShardingCtx, seq_sharded_kv, sub_operator
 from repro.kv.cache import (KVCache, batch_valid_mask, layer_append,
                             layer_append_slotted, layer_read,
-                            layer_read_bucket, layer_read_slot,
-                            layer_write_chunk, slot_valid_mask)
+                            layer_read_bucket, layer_read_shards,
+                            layer_read_slot, layer_write_chunk,
+                            slot_valid_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -138,12 +139,23 @@ class WADisaggregated:
 
     def __init__(self, cfg: ModelConfig, mesh: Optional[Mesh],
                  plan: Optional[WAPlan] = None, *,
-                 routing: str = "device_put"):
+                 routing: str = "device_put", a_shards: int = 1):
         if routing not in ("device_put", "sharding"):
             raise ValueError(routing)
+        if a_shards < 1:
+            raise ValueError(f"a_shards must be >= 1, got {a_shards}")
+        if a_shards > 1 and routing != "sharding":
+            raise ValueError(
+                "split-KV decode (a_shards > 1) is an AOT sharded read — "
+                "build WADisaggregated(routing='sharding')")
         self.cfg = cfg
         self.plan = plan
         self.routing = routing
+        # a_shards > 1: split-KV flash decode — each slot's KV walk splits
+        # into a_shards contiguous blocks along the sequence axis (the
+        # "kv_shard" logical axis, mapped onto the A submesh), with the
+        # LSE merge combining the per-shard partial softmax statistics
+        self.a_shards = a_shards
         if routing == "device_put":
             if plan is None:
                 raise ValueError("device_put routing needs a WAPlan (submesh "
@@ -210,6 +222,27 @@ class WADisaggregated:
             k_l, v_l, ks_l, vs_l, k[:, 0], v[:, 0], positions, window, active)
         if window:
             kv_bucket = 0                   # ring order has no prefix to cut
+        if self.a_shards > 1 and not window:
+            # split-KV flash decode: shard-major bucketed read (same stored
+            # prefix, reshaped to a_shards contiguous blocks); the per-shard
+            # partial softmax statistics reduce locally and ONE LSE merge
+            # routes the combined output back toward W.
+            # Pin the resident cache to the SAME kv_seq layout the chunk
+            # program emits: GSPMD cannot back-propagate the shard-major
+            # annotation through the reshape, and an unconstrained cache
+            # input would compile replicated — mismatching the live buffers.
+            ann = self.a_ctx.ann
+            k_l = ann(k_l, "batch", "kv_heads", "kv_seq", "head_dim")
+            v_l = ann(v_l, "batch", "kv_heads", "kv_seq", "head_dim")
+            if ks_l is not None:
+                ks_l = ann(ks_l, "batch", "kv_heads", "kv_seq", None)
+                vs_l = ann(vs_l, "batch", "kv_heads", "kv_seq", None)
+            kc, vc = layer_read_shards(k_l, v_l, ks_l, vs_l, kv_bucket,
+                                       self.a_shards, dtype=q.dtype)
+            mask = batch_valid_mask(kc.shape[2] * kc.shape[3], window,
+                                    positions)
+            o = decode_attention_split(q[:, 0], kc, vc, mask, self.a_ctx)
+            return (k_l, v_l, ks_l, vs_l), o
         kc, vc = layer_read_bucket(k_l, v_l, ks_l, vs_l, kv_bucket,
                                    dtype=q.dtype)
         mask = batch_valid_mask(kc.shape[2], window, positions)

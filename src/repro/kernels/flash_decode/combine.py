@@ -1,0 +1,67 @@
+"""Partial-softmax combine for split-KV flash decode (§4.2 + DESIGN.md §3).
+
+Flash decoding splits one slot's KV walk along the sequence axis: every
+shard runs the flash-decode kernel over its local KV slice and emits
+UN-normalized statistics
+
+    o_s  — weighted value accumulator  sum_j exp(score_j - m_s) * v_j
+    m_s  — running max of masked scores inside the shard
+    l_s  — normalizer                  sum_j exp(score_j - m_s)
+
+``merge_partial_stats`` folds shard statistics with the standard LSE merge
+
+    m* = max_s m_s;   a_s = exp(m_s - m*);   l* = sum_s l_s * a_s
+    o* = sum_s o_s * a_s
+
+and ``combine_partial_stats`` additionally normalizes ``o* / max(l*, eps)``
+— exactly the deferred ``_norm`` step of the sequential kernel walk.
+
+Conventions (shared with ``flash_decode.py``):
+- the "no scores yet" sentinel is the FINITE ``NEG_INF = -1e30`` (never
+  ``-inf`` — ``-inf - -inf`` would poison the merge with NaNs);
+- a shard skipped entirely (``kv_limit``-empty) reports the exact merge
+  identity ``(o=0, m=NEG_INF, l=0)``: its ``a_s`` underflows to 0 against
+  any live shard, so appending empty shards is bit-stable (the combined
+  output is bit-identical with or without them);
+- all-empty input normalizes to 0 via the ``max(l*, eps)`` guard — the
+  same answer the sequential kernel's ``_norm`` gives a dead row.
+
+The merge is associative, so shards may be combined pairwise in any tree
+shape (a cross-device ``psum``-style reduction on the A submesh, or one
+flat reduction as here); statistics are always merged in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+_EPS = 1e-30
+
+
+def merge_partial_stats(o: jax.Array, m: jax.Array, l: jax.Array,
+                        axis: int = 0):
+    """Merge per-shard flash statistics along the shard axis.
+
+    ``m``/``l`` have identical shapes; ``o`` carries one extra trailing
+    head_dim. ``axis`` indexes the shard dimension of ``m`` (non-negative).
+    Returns un-normalized ``(o*, m*, l*)`` with the shard axis reduced —
+    itself a valid shard statistic, so merges compose into trees."""
+    o = o.astype(jnp.float32)
+    m = m.astype(jnp.float32)
+    l = l.astype(jnp.float32)
+    m_star = jnp.max(m, axis=axis, keepdims=True)
+    alpha = jnp.exp(m - m_star)                      # <= 1, empty shards -> 0
+    l_star = jnp.sum(l * alpha, axis=axis)
+    o_star = jnp.sum(o * jnp.expand_dims(alpha, -1), axis=axis)
+    return o_star, jnp.squeeze(m_star, axis=axis), l_star
+
+
+def combine_partial_stats(o: jax.Array, m: jax.Array, l: jax.Array,
+                          axis: int = 0) -> jax.Array:
+    """Merge shard statistics and apply the deferred normalization.
+
+    Returns the attention output ``o* / max(l*, 1e-30)`` in float32 — equal
+    to running the sequential flash walk over the concatenated shards."""
+    o_star, _, l_star = merge_partial_stats(o, m, l, axis=axis)
+    return o_star / jnp.maximum(l_star, _EPS)[..., None]

@@ -35,7 +35,7 @@ NEG_INF = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref, lim_ref,
             o_ref, m_ref, l_ref, *, n_s: int, block_s: int, scale: float,
-            quantized: bool):
+            quantized: bool, partial_stats: bool = False):
     s_idx = pl.program_id(2)
 
     @pl.when(s_idx == 0)
@@ -70,18 +70,22 @@ def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref, lim_ref,
                                              preferred_element_type=jnp.float32))
         m_ref[0, 0] = m_new
 
-    @pl.when(s_idx == n_s - 1)
-    def _norm():
-        o_ref[0, 0] /= jnp.maximum(l_ref[0, 0], 1e-30)
+    # split-KV partial mode defers normalization to the cross-shard combine
+    # (combine.py): the raw (o, m, l) triple IS the kernel's output
+    if not partial_stats:
+        @pl.when(s_idx == n_s - 1)
+        def _norm():
+            o_ref[0, 0] /= jnp.maximum(l_ref[0, 0], 1e-30)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_s", "scale", "interpret"))
+                   static_argnames=("block_s", "scale", "interpret",
+                                    "partial_stats"))
 def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                         k_scale, v_scale, mask: jax.Array, *,
                         block_s: int = 512, scale: float = None,
                         interpret: bool = False,
-                        kv_limit=None) -> jax.Array:
+                        kv_limit=None, partial_stats: bool = False):
     """q: (B,Hq,hd); k/v: (B,n_kv,S,hd) (int8 ⇒ scales (B,n_kv,S,1) f32,
     else pass None); mask: (B,S) bool → (B,Hq,hd) f32.
 
@@ -90,7 +94,13 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     past it are skipped. TRACED, not static: callers pass a fresh value
     every step with zero recompilation. The caller must guarantee the mask
     is already False at positions >= kv_limit — the limit is a fast-path
-    hint, never a semantic mask."""
+    hint, never a semantic mask.
+
+    ``partial_stats`` (static): split-KV mode — skip the final
+    normalization and return the raw ``(o, m, l)`` flash statistics as
+    ``((B,Hq,hd), (B,Hq), (B,Hq))`` f32 for a cross-shard
+    ``combine_partial_stats`` merge. A call whose ``kv_limit`` skips every
+    tile returns the exact merge identity ``(0, NEG_INF, 0)``."""
     B, Hq, hd = q.shape
     _, n_kv, S, _ = k.shape
     G = Hq // n_kv
@@ -112,7 +122,7 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     grid = (B, n_kv, n_s)
     o, m, l = pl.pallas_call(
         functools.partial(_kernel, n_s=n_s, block_s=bs, scale=sc,
-                          quantized=quantized),
+                          quantized=quantized, partial_stats=partial_stats),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
@@ -139,4 +149,6 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         interpret=interpret,
     )(qg, k, v, k_scale, v_scale, mask, kv_limit)
+    if partial_stats:
+        return (o.reshape(B, Hq, hd), m.reshape(B, Hq), l.reshape(B, Hq))
     return o.reshape(B, Hq, hd)

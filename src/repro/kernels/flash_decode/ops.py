@@ -6,8 +6,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_decode.combine import (combine_partial_stats,
+                                                merge_partial_stats)
 from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
-from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.flash_decode.ref import (flash_decode_ref,
+                                            flash_decode_ref_partial)
+
+__all__ = ["flash_decode", "flash_decode_partial", "combine_partial_stats",
+           "merge_partial_stats"]
 
 
 def _on_tpu() -> bool:
@@ -35,3 +41,27 @@ def flash_decode(q, k, v, mask, k_scale=None, v_scale=None, *,
         k = k.astype(jnp.float32) * k_scale
         v = v.astype(jnp.float32) * v_scale
     return flash_decode_ref(q, k, v, mask, kv_limit=kv_limit)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "block_s"))
+def flash_decode_partial(q, k, v, mask, k_scale=None, v_scale=None, *,
+                         use_pallas: bool = None, interpret: bool = False,
+                         block_s: int = 512, kv_limit=None):
+    """Split-KV shard-local decode attention: same dispatch as
+    ``flash_decode`` but returns the UN-normalized flash statistics
+    ``(o (B,Hq,hd), m (B,Hq), l (B,Hq))`` f32 for a cross-shard
+    ``combine_partial_stats`` merge. ``kv_limit`` here is the SHARD-LOCAL
+    live extent; a shard with ``kv_limit <= 0`` yields the merge identity
+    ``(0, NEG_INF, 0)`` on both paths."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return flash_decode_pallas(q, k, v, k_scale, v_scale, mask,
+                                   block_s=block_s,
+                                   interpret=interpret or not _on_tpu(),
+                                   kv_limit=kv_limit, partial_stats=True)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale
+        v = v.astype(jnp.float32) * v_scale
+    return flash_decode_ref_partial(q, k, v, mask, kv_limit=kv_limit)

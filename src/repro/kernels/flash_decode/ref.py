@@ -28,3 +28,40 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
     return o.reshape(B, Hq, hd)
+
+
+def flash_decode_ref_partial(q: jax.Array, k: jax.Array, v: jax.Array,
+                             mask: jax.Array, scale: float = None,
+                             kv_limit=None):
+    """Un-normalized flash statistics over one KV shard — the oracle twin of
+    ``flash_decode_pallas(..., partial_stats=True)``.
+
+    Returns ``(o (B,Hq,hd), m (B,Hq), l (B,Hq))`` f32 for the cross-shard
+    ``combine_partial_stats`` merge. A shard whose ``kv_limit <= 0`` (no
+    live positions at all) is reported as the exact merge identity
+    ``(0, NEG_INF, 0)``, matching the kernel whose tiles all early-out.
+    Mask-empty rows inside a live shard follow the same uniform-weight
+    convention as ``flash_decode_ref`` (their weight underflows to zero in
+    the combine against any live shard)."""
+    B, Hq, hd = q.shape
+    n_kv = k.shape[1]
+    G = Hq // n_kv
+    S = k.shape[2]
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    lim = None
+    if kv_limit is not None:
+        lim = jnp.asarray(kv_limit, jnp.int32).reshape(())
+        mask = mask & (jnp.arange(S, dtype=jnp.int32)[None] < lim)
+    qg = q.reshape(B, n_kv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, k.astype(jnp.float32)) * sc
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                  # (B,n_kv,G)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
+    if lim is not None:                  # fully-skipped shard -> identity
+        empty = lim <= 0
+        o = jnp.where(empty, 0.0, o)
+        m = jnp.where(empty, NEG_INF, m)
+        l = jnp.where(empty, 0.0, l)
+    return (o.reshape(B, Hq, hd), m.reshape(B, Hq), l.reshape(B, Hq))

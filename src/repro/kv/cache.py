@@ -179,6 +179,51 @@ def layer_read_bucket(k_l, v_l, k_scale_l, v_scale_l, bucket: int,
 
 
 # ---------------------------------------------------------------------------
+# Split-KV shard-local layout (DESIGN.md §3) — one slot's contiguous
+# (B,n_kv,S,hd) extent cut into n_shards equal sequence blocks for the
+# A-domain split flash walk. Sharding is a READ-time view: the stored layout
+# stays contiguous (no paging, §7.1), writes and cursors remain absolute.
+# ---------------------------------------------------------------------------
+
+def shard_extent(extent: int, n_shards: int) -> int:
+    """Shard-local block length for a (bucketed) extent; validates that the
+    extent cuts into ``n_shards`` equal contiguous blocks."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if extent % n_shards:
+        raise ValueError(
+            f"KV extent {extent} not divisible by n_shards={n_shards}")
+    return extent // n_shards
+
+
+def shard_kv_limits(kv_limit: jax.Array, n_shards: int,
+                    block: int) -> jax.Array:
+    """Per-shard live extents for a GLOBAL limit over a contiguous split:
+    shard s owns absolute positions [s*block, (s+1)*block), so its local
+    live extent is clamp(kv_limit - s*block, 0, block). Returns (n_shards,)
+    int32 — traced, advancing cursors never recompile. A shard whose limit
+    clamps to 0 is fully skippable (the flash kernel then reports the exact
+    merge identity)."""
+    lim = jnp.asarray(kv_limit, jnp.int32).reshape(())
+    starts = jnp.arange(n_shards, dtype=jnp.int32) * block
+    return jnp.clip(lim - starts, 0, block)
+
+
+def layer_read_shards(k_l, v_l, k_scale_l, v_scale_l, bucket: int,
+                      n_shards: int, dtype=jnp.bfloat16):
+    """Shard-major bucketed read: ``layer_read_bucket``'s static prefix cut
+    of the STORED buffers (int8 dequantizes just the bucket), then a
+    contiguous reshape (B,n_kv,Se,hd) -> (B,n_kv,n_shards,Se/n_shards,hd).
+    Identical prefix semantics to the sequential read — the two only differ
+    in the shard axis the split flash walk reduces over."""
+    k, v = layer_read_bucket(k_l, v_l, k_scale_l, v_scale_l, bucket, dtype)
+    B, n_kv, Se, hd = k.shape
+    Sb = shard_extent(Se, n_shards)
+    return (k.reshape(B, n_kv, n_shards, Sb, hd),
+            v.reshape(B, n_kv, n_shards, Sb, hd))
+
+
+# ---------------------------------------------------------------------------
 # Per-slot (continuous-batching) API — the serving engine admits a request
 # into ONE batch slot while the other slots keep decoding (DESIGN.md §7).
 # Shapes stay static: the slot index and per-row cursors are traced scalars /

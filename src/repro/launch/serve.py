@@ -43,7 +43,7 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
           executor: str = "sub_operator", mode: str = "auto",
           arrival_every: int = 0, block_size: int = 1,
           kv_bucket_chunk: int = 0, prefill_chunk: int = 0,
-          backend: str = "colocated"):
+          backend: str = "colocated", a_shards: int = 1):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -60,7 +60,8 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
     eng = ServingEngine(api, ctx, batch_slots, prompt_len, mode=mode,
                         block_size=block_size,
                         kv_bucket_chunk=kv_bucket_chunk,
-                        prefill_chunk=prefill_chunk, backend=backend)
+                        prefill_chunk=prefill_chunk, backend=backend,
+                        a_shards=a_shards)
     stats = eng.run(params, reqs)
     return stats
 
@@ -93,6 +94,13 @@ def main(argv=None):
                     help="executor backend: colocated, or the weight-"
                          "attention disaggregated path (routing compiled "
                          "into every step program; DESIGN.md §3)")
+    ap.add_argument("--a-shards", type=int, default=1,
+                    help="split-KV flash decode width: shard each slot's "
+                         "KV walk into N equal sequence shards recombined "
+                         "by the partial-softmax LSE merge (token-exact; "
+                         "the KV extent must divide by N; under --backend "
+                         "wa on a mesh the shards ride the A-domain model "
+                         "axis)")
     args = ap.parse_args(argv)
     stats = serve(args.arch, args.requests, args.batch, args.prompt_len,
                   args.max_new, mode=args.mode,
@@ -100,7 +108,7 @@ def main(argv=None):
                   block_size=args.block_size,
                   kv_bucket_chunk=args.kv_bucket_chunk,
                   prefill_chunk=args.prefill_chunk,
-                  backend=args.backend)
+                  backend=args.backend, a_shards=args.a_shards)
     per_req = stats.pop("per_request")
     rt = stats.pop("runtime")
     print("serve stats:", stats)

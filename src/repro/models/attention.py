@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.flash_decode.combine import combine_partial_stats
 from repro.kv.cache import KVCache, valid_mask
 from repro.models import common
 from repro.models.common import scan_unroll
@@ -319,12 +320,24 @@ def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 # the bucket set at prepare time and picks per macro-step on the host).
 # ---------------------------------------------------------------------------
 
-def kv_buckets(s_max: int, chunk: int) -> Tuple[int, ...]:
+def kv_buckets(s_max: int, chunk: int, shards: int = 1) -> Tuple[int, ...]:
     """Static bucket set for a cache of extent ``s_max``: chunk multiples
     ``(chunk, 2*chunk, ...)`` with ``s_max`` always the last (full) bucket.
-    ``chunk <= 0`` disables bucketing (single full-extent program)."""
+    ``chunk <= 0`` disables bucketing (single full-extent program).
+
+    ``shards > 1`` (split-KV decode): every bucket must cut into ``shards``
+    equal shard-local blocks, so the chunk stride is rounded UP to a shard
+    multiple and ``s_max`` itself must divide — a coarser-but-divisible
+    bucket never loses tokens, it only reads a slightly longer prefix."""
+    if shards > 1 and s_max % shards:
+        raise ValueError(
+            f"KV extent {s_max} not divisible by shards={shards}")
     if chunk <= 0 or chunk >= s_max:
         return (s_max,)
+    if shards > 1:
+        chunk = -(-chunk // shards) * shards
+        if chunk >= s_max:
+            return (s_max,)
     return tuple(range(chunk, s_max, chunk)) + (s_max,)
 
 
@@ -358,6 +371,83 @@ def decode_attention_bucketed(q: jax.Array, k: jax.Array, v: jax.Array,
         v = jax.lax.slice_in_dim(v, 0, kv_bucket, axis=2)
         mask = jax.lax.slice_in_dim(mask, 0, kv_bucket, axis=mask.ndim - 1)
     return decode_attention(q, k, v, mask, ctx, scale)
+
+
+# ---------------------------------------------------------------------------
+# Split-KV flash decode (sequence-sharded bucketed read, DESIGN.md §3)
+#
+# Flash-decoding for the A domain: one slot's KV walk is cut into n_shards
+# contiguous shard-local blocks; every shard computes its partial flash
+# statistics (running max / normalizer / weighted accumulator) with purely
+# shard-local reductions, and one LSE merge (kernels/flash_decode/combine.py)
+# folds the shards. Under the ``seq_sharded_kv`` rules the "kv_shard" axis
+# maps onto the A submesh, so the per-shard einsums stay device-local and
+# only the tiny (o, m, l) triples cross devices in the combine — attention
+# latency then scales with A-domain width independently of pipeline depth
+# (the paper's §2.3 decoupling claim, now *within* a sequence).
+# ---------------------------------------------------------------------------
+
+def decode_attention_split(q: jax.Array, k: jax.Array, v: jax.Array,
+                           mask: jax.Array, ctx: ShardingCtx,
+                           scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Hq, hd); k/v SHARD-MAJOR (B, n_kv, n_shards, Sb, hd); mask:
+    (B, n_shards*Sb) or (B, n_shards, Sb) bool → (B, Hq, hd).
+
+    Shard s owns the contiguous absolute positions [s*Sb, (s+1)*Sb) of the
+    (bucketed) cache prefix. Token-exact vs the sequential walk: a shard
+    wholly past a slot's true length contributes exp(NEG_INF - m*) == 0
+    weight against any live shard, and shard 0 always holds position 0 of
+    a live slot, so the merge never sees an all-empty row that matters."""
+    B, Hq, hd = q.shape
+    n_kv, n, Sb = k.shape[1], k.shape[2], k.shape[3]
+    G = Hq // n_kv
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, n_kv, G, hd)
+    k = ctx.ann(k, "batch", "kv_heads", "kv_shard", "kv_seq", "head_dim")
+    v = ctx.ann(v, "batch", "kv_heads", "kv_shard", "kv_seq", "head_dim")
+    s = jnp.einsum("bkgh,bknsh->bkgns", qg, k,
+                   preferred_element_type=jnp.float32) * sc  # (B,n_kv,G,n,Sb)
+    s = ctx.ann(s, "batch", "kv_heads", None, "kv_shard", "kv_seq")
+    if mask.ndim == 2:
+        mask = mask.reshape(B, n, Sb)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    # per-shard partial flash statistics — reductions over Sb only (local)
+    m = jnp.max(s, axis=-1)                                  # (B,n_kv,G,n)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgns,bknsh->bkgnh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)       # (B,n_kv,G,n,hd)
+    o = ctx.ann(o, "batch", "kv_heads", None, "kv_shard", "head_dim")
+    # cross-shard reduction: the LSE merge over the shard axis — on a live
+    # A submesh this is the only place shards exchange data
+    out = combine_partial_stats(o, m, l, axis=3)
+    return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def decode_attention_split_bucketed(q: jax.Array, k: jax.Array, v: jax.Array,
+                                    mask: jax.Array, ctx: ShardingCtx,
+                                    n_shards: int, kv_bucket: int = 0,
+                                    scale: Optional[float] = None) -> jax.Array:
+    """Bucketed split-KV read for callers holding DEQUANTIZED 4-D KV: the
+    same static bucket-prefix slice as ``decode_attention_bucketed``, then a
+    contiguous reshape to shard-major and the split flash walk. The serving
+    path slices/reshapes one level lower (``kv/cache.py::layer_read_shards``,
+    pre-dequantization) with identical slice semantics."""
+    S = k.shape[2]
+    if kv_bucket and kv_bucket < S:
+        k = jax.lax.slice_in_dim(k, 0, kv_bucket, axis=2)
+        v = jax.lax.slice_in_dim(v, 0, kv_bucket, axis=2)
+        mask = jax.lax.slice_in_dim(mask, 0, kv_bucket, axis=mask.ndim - 1)
+    B, n_kv, Se, hd = k.shape
+    if Se % n_shards:
+        raise ValueError(
+            f"KV extent {Se} not divisible by n_shards={n_shards}")
+    Sb = Se // n_shards
+    k = k.reshape(B, n_kv, n_shards, Sb, hd)
+    v = v.reshape(B, n_kv, n_shards, Sb, hd)
+    if mask.ndim == 1:
+        mask = mask[None]
+    return decode_attention_split(q, k, v, mask, ctx, scale)
 
 
 # ---------------------------------------------------------------------------

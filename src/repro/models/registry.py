@@ -34,9 +34,12 @@ class ModelAPI(NamedTuple):
     # -- continuous-batching extensions (None → family only serves in the
     #    drain-then-refill mode; see runtime/serving.py + DESIGN.md §7) -----
     # decode_slotted(params, caches, tokens, positions, active, ctx,
-    #                kv_bucket=0)
+    #                kv_bucket=0[, kv_shards=1])
     #   → (caches, logits): per-slot cursors + active mask through decode;
-    #   kv_bucket (static) caps the attended KV extent (length-aware walk)
+    #   kv_bucket (static) caps the attended KV extent (length-aware walk);
+    #   kv_shards (static, KV-cache families only) splits the walk into
+    #   sequence shards combined by the partial-softmax LSE merge
+    #   (split-KV flash decode — models/attention.py)
     decode_slotted: Optional[Callable] = None
     # write_slot(caches, single, slot) → caches: admit a batch-1 prefill
     #   into one batch slot (slot is traced — one program for all slots)
@@ -82,11 +85,16 @@ def make_decode_block(decode_slotted: Callable) -> Callable:
     guessing which zeros are padding."""
 
     def decode_block(params, caches, tokens, positions, active, remaining,
-                     eos_ids, ctx, *, block_size: int, kv_bucket: int = 0):
+                     eos_ids, ctx, *, block_size: int, kv_bucket: int = 0,
+                     kv_shards: int = 1):
+        # kv_shards is forwarded only when split (> 1): attention-free
+        # families' decode_slotted has no such axis and no such kwarg
+        extra = {"kv_shards": kv_shards} if kv_shards != 1 else {}
+
         def micro(carry, _):
             caches, tok, pos, act, rem = carry
             caches, logits = decode_slotted(params, caches, tok, pos, act,
-                                            ctx, kv_bucket=kv_bucket)
+                                            ctx, kv_bucket=kv_bucket, **extra)
             nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
             nxt = jnp.where(act, nxt, 0)
             emitted = act
@@ -131,9 +139,10 @@ def _build_transformer(cfg: ModelConfig) -> ModelAPI:
         return T.make_cache(cfg, batch, max_len)
 
     def decode_slotted(params, caches, tokens, positions, active, ctx,
-                       kv_bucket: int = 0):
+                       kv_bucket: int = 0, kv_shards: int = 1):
         return T.decode_step_slotted(params, caches, tokens, positions,
-                                     active, cfg, ctx, kv_bucket=kv_bucket)
+                                     active, cfg, ctx, kv_bucket=kv_bucket,
+                                     kv_shards=kv_shards)
 
     from repro.kv.cache import reset_slot, write_slot_kv
 

@@ -81,6 +81,8 @@ def _common(pod_data: Tuple[str, ...]) -> Dict[str, Optional[Tuple[str, ...]]]:
         "batch": pod_data,
         "seq": None,
         "kv_seq": None,
+        "kv_shard": None,         # split-KV shard axis; → ("model",) only
+                                  # under seq_sharded_kv (A-domain split)
         "embed": None,
         "heads": ("model",),
         "kv_heads": ("model",),
@@ -141,9 +143,17 @@ def seq_sharded_kv(base: ExecutionRules) -> ExecutionRules:
     Removes the KV-head/attention replication that head-sharding forces on
     archs whose n_kv_heads (or n_heads) don't divide the TP width — e.g.
     qwen2's 2 KV heads or phi3-medium's 40 q heads on a 16-way axis. Batch
-    stays on data; KV context splits 16-way on model."""
+    stays on data; KV context splits 16-way on model.
+
+    Split-KV flash decode shards *within* a slot on the same axis: the
+    "kv_shard" dim (the n_shards blocks of one slot's walk) takes the model
+    axis, and a "kv_seq" annotation on the same tensor then drops to
+    replicated (the ``used``-set rule) — each device owns whole shard-local
+    blocks, computes their partial flash statistics locally, and only the
+    (o, m, l) triples cross devices in the LSE merge."""
     rules = dict(base.rules)
     rules["kv_seq"] = ("model",)
+    rules["kv_shard"] = ("model",)
     rules["kv_heads"] = None
     rules["act_heads"] = None          # q gathers (tiny at decode: B×D)
     return ExecutionRules(base.name + "+seqkv", rules)

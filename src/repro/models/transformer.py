@@ -158,8 +158,8 @@ def block_decode(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
 def block_decode_slotted(p: dict, x: jax.Array, cfg: ModelConfig,
                          ctx: ShardingCtx, kv_slices: Tuple,
                          positions: jax.Array, active: jax.Array,
-                         window: int = 0,
-                         kv_bucket: int = 0) -> Tuple[jax.Array, Tuple]:
+                         window: int = 0, kv_bucket: int = 0,
+                         kv_shards: int = 1) -> Tuple[jax.Array, Tuple]:
     """``block_decode`` with PER-ROW cursors (continuous batching): row b
     appends at its own ``positions[b]`` and attends over its own prefix.
     Inactive rows write nothing (their KV slice stays byte-identical); their
@@ -171,6 +171,12 @@ def block_decode_slotted(p: dict, x: jax.Array, cfg: ModelConfig,
     caller must guarantee max(positions) < kv_bucket; the serving engine
     picks the bucket per macro-step from the live cursors.
 
+    ``kv_shards`` > 1 (static, non-windowed only): split-KV flash decode —
+    the bucketed read returns shard-major KV (``layer_read_shards``) and
+    ``decode_attention_split`` combines the per-shard partial softmax
+    statistics with the LSE merge. Token-exact vs the sequential walk; the
+    engine guarantees every bucket divides by ``kv_shards``.
+
     Deliberately a twin of ``block_decode`` rather than its replacement: the
     vmapped per-row writes and (B,S) masks cost measurably more than the
     shared-cursor path, which stays on the uniform fast form (drain serving,
@@ -178,21 +184,34 @@ def block_decode_slotted(p: dict, x: jax.Array, cfg: ModelConfig,
     decode_step == decode_step_slotted under a uniform cursor is enforced by
     tests/test_serving_scheduler.py."""
     from repro.kv.cache import (batch_valid_mask, layer_append_slotted,
-                                layer_read_bucket)
+                                layer_read_bucket, layer_read_shards)
+    from repro.models.attention import decode_attention_split
     B = x.shape[0]
     k_l, v_l, ks_l, vs_l = kv_slices
     if window:
         kv_bucket = 0                       # ring buffers have no prefix order
+        kv_shards = 1                       # ... and no contiguous shard cut
     h = common.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
     h = ctx.ann(h, "batch", "seq", "embed")
     q, k, v = qkv_project(p["attn"], h, cfg, ctx, positions[:, None])
     k_l, v_l, ks_l, vs_l = layer_append_slotted(
         k_l, v_l, ks_l, vs_l, k[:, 0], v[:, 0], positions, window, active)
-    kc, vc = layer_read_bucket(k_l, v_l, ks_l, vs_l, kv_bucket, dtype=x.dtype)
-    kc = ctx.ann(kc, "batch", "kv_heads", "kv_seq", "head_dim")
-    vc = ctx.ann(vc, "batch", "kv_heads", "kv_seq", "head_dim")
-    mask = batch_valid_mask(kc.shape[2], window, positions)        # (B,Sb)
-    o = decode_attention(q[:, 0], kc, vc, mask, ctx)
+    if kv_shards > 1:
+        kc, vc = layer_read_shards(k_l, v_l, ks_l, vs_l, kv_bucket,
+                                   kv_shards, dtype=x.dtype)
+        kc = ctx.ann(kc, "batch", "kv_heads", "kv_shard", "kv_seq",
+                     "head_dim")
+        vc = ctx.ann(vc, "batch", "kv_heads", "kv_shard", "kv_seq",
+                     "head_dim")
+        mask = batch_valid_mask(kc.shape[2] * kc.shape[3], window, positions)
+        o = decode_attention_split(q[:, 0], kc, vc, mask, ctx)
+    else:
+        kc, vc = layer_read_bucket(k_l, v_l, ks_l, vs_l, kv_bucket,
+                                   dtype=x.dtype)
+        kc = ctx.ann(kc, "batch", "kv_heads", "kv_seq", "head_dim")
+        vc = ctx.ann(vc, "batch", "kv_heads", "kv_seq", "head_dim")
+        mask = batch_valid_mask(kc.shape[2], window, positions)    # (B,Sb)
+        o = decode_attention(q[:, 0], kc, vc, mask, ctx)
     o = common.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
     x = ctx.ann(x + o, "batch", "seq", "embed_shard")
     h = common.apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
@@ -430,13 +449,15 @@ def decode_step(params, cache: KVCache, tokens: jax.Array, cfg: ModelConfig,
 def decode_step_slotted(params, cache: KVCache, tokens: jax.Array,
                         positions: jax.Array, active: jax.Array,
                         cfg: ModelConfig, ctx: ShardingCtx,
-                        kv_bucket: int = 0) -> Tuple[KVCache, jax.Array]:
+                        kv_bucket: int = 0,
+                        kv_shards: int = 1) -> Tuple[KVCache, jax.Array]:
     """Continuous-batching decode step (DESIGN.md §7). tokens/positions/
     active: (B,). Mirrors ``decode_step`` but each row carries its OWN
     cursor: row b appends at positions[b] and attends 0..positions[b]; the
     shared ``cache.length`` is kept only as an upper bound. Equal to
     ``decode_step`` when all rows share one cursor and are active.
-    ``kv_bucket``: static length-aware KV extent (see block_decode_slotted)."""
+    ``kv_bucket``: static length-aware KV extent; ``kv_shards``: static
+    split-KV shard count (see block_decode_slotted)."""
     x = common.embed(params["embed"], tokens[:, None], ctx)
     if cfg.pos == "learned":
         x = x + jnp.take(params["pos_embed"], positions,
@@ -451,7 +472,7 @@ def decode_step_slotted(params, cache: KVCache, tokens: jax.Array,
             ks_l = vs_l = None
         h, (k_l, v_l, ks_l, vs_l) = block_decode_slotted(
             lp, h, cfg, ctx, (k_l, v_l, ks_l, vs_l), positions, active,
-            window=cache.window, kv_bucket=kv_bucket)
+            window=cache.window, kv_bucket=kv_bucket, kv_shards=kv_shards)
         ys = (k_l, v_l, ks_l, vs_l) if quant else (k_l, v_l)
         return h, ys
 

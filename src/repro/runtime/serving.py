@@ -288,12 +288,13 @@ class ExecutorBackend:
                  params, caches_aval, *, mode: str, slots: int,
                  prompt_len: int, max_new_cap: int, block_size: int,
                  kv_bucket_chunk: int, prefill_chunk: int,
-                 debug_reset_slots: bool):
+                 debug_reset_slots: bool, a_shards: int = 1):
         self.api, self.ctx, self.rt = api, ctx, rt
         self.slots, self.prompt_len = slots, prompt_len
         self.max_new_cap = max_new_cap
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
+        self.a_shards = a_shards
         self.caches = None
         self.buckets: Tuple[int, ...] = ()
         self._decode_blocks: Dict[int, Callable] = {}
@@ -312,7 +313,9 @@ class ExecutorBackend:
         bucketable = isinstance(caches_aval, KVCache) \
             and not caches_aval.window
         s_max = caches_aval.k.shape[3] if bucketable else 0
-        return kv_buckets(s_max, kv_bucket_chunk) \
+        # a_shards > 1 → every bucket must split into equal shard blocks
+        # (kv_buckets rounds the chunk up; the engine validated s_max)
+        return kv_buckets(s_max, kv_bucket_chunk, self.a_shards) \
             if bucketable and kv_bucket_chunk > 0 else (0,)
 
     def _build_reset(self, caches_aval, debug_reset_slots):
@@ -475,13 +478,16 @@ class ColocatedBackend(ExecutorBackend):
                 donate_argnums=(0,))
 
         self._build_reset(caches_aval, debug_reset_slots)
+        # split-KV decode (a_shards > 1) is forwarded only when on:
+        # attention-free families' decode_slotted has no kv_shards kwarg
+        sh = {"kv_shards": self.a_shards} if self.a_shards > 1 else {}
         self._build_decode_programs(
             params, caches_aval, kv_bucket_chunk, "serve_",
             lambda p, c, t, pos, act: api.decode_slotted(p, c, t, pos, act,
-                                                         ctx),
+                                                         ctx, **sh),
             lambda p, c, t, pos, act, rem, eos, sb: api.decode_block(
                 p, c, t, pos, act, rem, eos, ctx, block_size=T,
-                kv_bucket=sb))
+                kv_bucket=sb, **sh))
 
     def _build_drain(self, params):
         api, ctx = self.api, self.ctx
@@ -545,7 +551,8 @@ class WABackend(ExecutorBackend):
                           prefill_chunk, debug_reset_slots):
         api, ctx = self.api, self.ctx
         B, P, T = self.slots, self.prompt_len, self.block_size
-        self.wa = WADisaggregated(api.config, ctx.mesh, routing="sharding")
+        self.wa = WADisaggregated(api.config, ctx.mesh, routing="sharding",
+                                  a_shards=self.a_shards)
         self._el = jnp.dtype(dtype_of(api.config)).itemsize
         self.routed_bytes = 0
         scalar = jnp.zeros((), jnp.int32)
@@ -667,6 +674,20 @@ class ServingEngine:
     bytes. Requires ``ModelAPI.wa_servable`` (prefix-ordered KV-cache
     transformers) and the continuous scheduler.
 
+    ``a_shards``: split-KV flash decode width (KV-cache families,
+    continuous mode). > 1 splits every slot's KV walk into that many equal
+    contiguous sequence shards; each shard computes partial softmax
+    statistics (running max, normalizer, un-normalized accumulator) and the
+    shards recombine through the LSE merge (``kernels/flash_decode/
+    combine.py``) — token-exact vs the sequential walk. Under
+    ``backend="wa"`` on a mesh the shard axis is the A-domain model axis
+    (``seq_sharded_kv``), so attention latency scales with A-width; on the
+    colocated backend (and any single-device run) the same math runs
+    unsharded. The KV extent (prompt_len + max_new_cap) must divide by
+    ``a_shards``; bucket sets are rounded so every bucket splits evenly.
+    Program names do not change — the shard count is a build-time static
+    baked into the same programs, so compiles == 1 still holds per bucket.
+
     An engine instance may be ``run()`` repeatedly: per-run accumulators
     (timings, sync counts, queues) reset and the slot caches are allocated
     fresh each run, while the AOT-compiled programs persist (compiles == 1
@@ -680,9 +701,11 @@ class ServingEngine:
                  block_size: int = 1, kv_bucket_chunk: int = 0,
                  prefill_chunk: int = 0,
                  debug_reset_slots: bool = False,
-                 backend: str = "colocated"):
+                 backend: str = "colocated", a_shards: int = 1):
         if mode not in ("auto", "continuous", "drain"):
             raise ValueError(mode)
+        if a_shards < 1:
+            raise ValueError(f"a_shards must be >= 1, got {a_shards}")
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; choose from "
                              f"{sorted(BACKENDS)}")
@@ -747,6 +770,7 @@ class ServingEngine:
         self.block_size = block_size
         self.kv_bucket_chunk = kv_bucket_chunk
         self.prefill_chunk = prefill_chunk
+        self.a_shards = a_shards
         self.debug_reset_slots = debug_reset_slots
         self.rt = runtime or StaticRuntime()
         self.queue: List[Request] = []
@@ -761,6 +785,26 @@ class ServingEngine:
         self._kv_extent = self._caches_aval.k.shape[3] \
             if isinstance(self._caches_aval, KVCache) \
             and not self._caches_aval.window else None
+        if self.a_shards > 1:
+            # split-KV flash decode shards the *prefix-ordered* KV walk of
+            # one slot along the sequence axis; families without such a
+            # cache (recurrent state, ring windows) have nothing to shard
+            if self.mode == "drain":
+                raise ValueError("split-KV decode (a_shards > 1) runs "
+                                 "through the slotted decode programs; "
+                                 "drain mode has none")
+            if self._kv_extent is None:
+                raise ValueError(
+                    f"a_shards={self.a_shards} requires a prefix-ordered "
+                    f"(non-windowed) KV-cache family; the "
+                    f"{api.config.family} family has no KV sequence axis "
+                    f"to shard")
+            if self._kv_extent % self.a_shards:
+                raise ValueError(
+                    f"KV extent {self._kv_extent} (prompt_len + "
+                    f"max_new_cap) not divisible by a_shards="
+                    f"{self.a_shards}; every shard must own an equal "
+                    f"contiguous block")
         if self.prefill_chunk and isinstance(self._caches_aval, KVCache) \
                 and self._caches_aval.window:
             raise ValueError("chunked prefill requires a non-windowed KV "
@@ -845,7 +889,8 @@ class ServingEngine:
                 max_new_cap=self.max_new_cap, block_size=self.block_size,
                 kv_bucket_chunk=self.kv_bucket_chunk,
                 prefill_chunk=self.prefill_chunk,
-                debug_reset_slots=self.debug_reset_slots)
+                debug_reset_slots=self.debug_reset_slots,
+                a_shards=self.a_shards)
 
     def run(self, params, requests: List[Request],
             max_steps: int = 10_000) -> Dict[str, Any]:
@@ -1159,6 +1204,7 @@ class ServingEngine:
             "mode": self.mode,
             "backend": self.backend,
             "block_size": self.block_size,
+            "a_shards": self.a_shards,
             "prefill_mode": ("chunked" if self.prefill_chunk
                              else "monolithic"),
             "prefill_chunk": self.prefill_chunk,

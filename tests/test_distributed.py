@@ -212,6 +212,60 @@ def test_wa_backend_serves_on_mesh_matches_colocated():
     """)
 
 
+def test_split_kv_serve_on_8_device_mesh_matches_sequential():
+    """Split-KV flash decode on a REAL (1,8) mesh (``make test-long``): the
+    WA backend with a_shards=4 spreads each slot's four KV sequence shards
+    over the 8-wide A-domain model axis (``seq_sharded_kv``'s "kv_shard"
+    rule), computes the partial flash statistics shard-locally, and merges
+    the (o, m, l) triples across devices. The token streams must equal the
+    colocated sequential walk exactly, with compiles == 1 for every routed
+    program — distribution is invisible to both the scheduler and the
+    emitted tokens."""
+    run_py("""
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.configs.registry import get_config
+    from repro.models import build_model, NULL_CTX
+    from repro.models.sharding import ShardingCtx, sub_operator
+    from repro.runtime.serving import Request, ServingEngine
+
+    cfg = get_config("internlm2-1.8b").reduced().replace(dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 8), ("data", "model"))
+    ctx = ShardingCtx(mesh, sub_operator())
+
+    def reqs():
+        rng = np.random.default_rng(0)
+        # ragged true lengths: one ends inside shard 0 (extent 32 → shard
+        # blocks of 8), one crosses a shard boundary mid-decode
+        plan = [(6, 0, 5), (10, 0, 8), (6, 2, 7)]
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, p,
+                                            dtype=np.int32),
+                        max_new_tokens=n, arrival_step=a)
+                for i, (n, a, p) in enumerate(plan)]
+
+    # extent 8 + 24 = 32 cuts into 4 shard blocks of 8
+    kw = dict(mode="continuous", max_new_cap=24, block_size=4,
+              kv_bucket_chunk=16, prefill_chunk=4)
+    r_seq, r_spl = reqs(), reqs()
+    # sequential baseline needs no mesh: colocated math on NULL_CTX is the
+    # token-exact reference the distributed split walk must reproduce
+    ServingEngine(api, NULL_CTX, 2, 8, **kw).run(params, r_seq, max_steps=300)
+    st = ServingEngine(api, ctx, 2, 8, backend="wa", a_shards=4, **kw).run(
+        params, r_spl, max_steps=300)
+    assert st["completed"] == 3
+    assert st["a_shards"] == 4
+    for name, rec in st["runtime"].items():
+        assert rec["compiles"] == 1, (name, rec)
+        assert name.startswith("serve_wa_"), name
+    for a, b in zip(r_seq, r_spl):
+        assert a.generated == b.generated, a.rid
+    print("OK")
+    """)
+
+
 def test_pp_decode_lowering_small_mesh():
     """Pipelined decode compiles + runs on a (2,2,2) mesh and every stage's
     KV advances by one position per call."""

@@ -1,16 +1,31 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle.
+
+The partial-softmax combine tests run twice when ``hypothesis`` is
+installed (CI — requirements-dev.txt): once property-based over generated
+shard statistics, once over a fixed seeded sweep. Without hypothesis the
+seeded sweep alone keeps the coverage (no skips)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_decode.ops import flash_decode
-from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.flash_decode.combine import (NEG_INF, combine_partial_stats,
+                                                merge_partial_stats)
+from repro.kernels.flash_decode.ops import flash_decode, flash_decode_partial
+from repro.kernels.flash_decode.ref import (flash_decode_ref,
+                                            flash_decode_ref_partial)
 from repro.kernels.fused_ffn.ops import fused_ffn
 from repro.kernels.fused_ffn.ref import fused_ffn_ref
 from repro.kernels.gemv.gemv import gemv_int8_pallas
 from repro.kernels.gemv.ref import gemv_int8_ref
 from repro.quant.int8 import quantize_int8, quantize_kv
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # CI installs it; local runs may not
+    HAVE_HYPOTHESIS = False
 
 
 @pytest.mark.parametrize("B,K,N,bn,bk", [
@@ -109,6 +124,172 @@ def test_flash_decode_int8_kv():
     want = flash_decode_ref(q, kq.astype(jnp.float32) * ks,
                             vq.astype(jnp.float32) * vs, mask)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# split-KV partial statistics: Pallas partial mode vs the ref oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_partial_matches_ref(dtype):
+    B, Hq, n_kv, S, hd = 2, 8, 2, 128, 32
+    q = jax.random.normal(jax.random.key(1), (B, Hq, hd), dtype)
+    k = jax.random.normal(jax.random.key(2), (B, n_kv, S, hd), dtype)
+    v = jax.random.normal(jax.random.key(3), (B, n_kv, S, hd), dtype)
+    mask = jnp.arange(S)[None, :] < jnp.array([[70], [128]])
+    got = flash_decode_partial(q, k, v, mask, interpret=True, block_s=32,
+                               kv_limit=jnp.asarray(128))
+    want = flash_decode_ref_partial(q, k, v, mask, kv_limit=128)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    for g, w in zip(got, want):
+        assert g.dtype == jnp.float32                # stats always f32
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=tol, atol=tol)
+
+
+def test_flash_decode_partial_limit_empty_is_exact_identity():
+    """A shard whose kv_limit skips every tile must return the merge
+    identity (0, NEG_INF, 0) BIT-exactly on both paths — appending it to a
+    combine cannot perturb a single bit (test_combine_* prove the merge
+    side; this pins the producer side)."""
+    B, Hq, n_kv, S, hd = 2, 4, 2, 64, 16
+    q = jax.random.normal(jax.random.key(1), (B, Hq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.key(2), (B, n_kv, S, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(3), (B, n_kv, S, hd), jnp.float32)
+    mask = jnp.ones((B, S), bool)
+    for impl in (dict(interpret=True, block_s=32), dict(use_pallas=False)):
+        o, m, l = flash_decode_partial(q, k, v, mask,
+                                       kv_limit=jnp.asarray(0), **impl)
+        assert np.array_equal(np.asarray(o), np.zeros_like(np.asarray(o)))
+        assert np.array_equal(np.asarray(m),
+                              np.full((B, Hq), NEG_INF, np.float32))
+        assert np.array_equal(np.asarray(l), np.zeros((B, Hq), np.float32))
+
+
+def test_flash_decode_sharded_partials_combine_to_full_walk():
+    """Four shard-local partial passes (shard-local clamped limits, ragged
+    true lengths → one shard ends mid-tile, two are wholly empty) merged by
+    combine_partial_stats equal the sequential full-extent walk."""
+    B, Hq, n_kv, S, hd, n = 2, 8, 4, 256, 32, 4
+    Sb = S // n
+    q = jax.random.normal(jax.random.key(1), (B, Hq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.key(2), (B, n_kv, S, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(3), (B, n_kv, S, hd), jnp.float32)
+    lens = jnp.array([70, 100])
+    mask = jnp.arange(S)[None, :] < lens[:, None]
+    want = flash_decode_ref(q, k, v, mask)
+    parts = []
+    for s in range(n):
+        lim = int(np.clip(int(lens.max()) - s * Sb, 0, Sb))
+        parts.append(flash_decode_partial(
+            q, k[:, :, s * Sb:(s + 1) * Sb], v[:, :, s * Sb:(s + 1) * Sb],
+            mask[:, s * Sb:(s + 1) * Sb], interpret=True, block_s=32,
+            kv_limit=jnp.asarray(lim)))
+    got = combine_partial_stats(jnp.stack([p[0] for p in parts]),
+                                jnp.stack([p[1] for p in parts]),
+                                jnp.stack([p[2] for p in parts]), axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# partial-softmax combine: property-based (hypothesis when available) +
+# seeded sweep vs a single-pass float64 reference
+# ---------------------------------------------------------------------------
+
+def _check_combine(shard_spec, dtype, seed):
+    """shard_spec: [(n_keys, score_offset)] — one entry per shard; n_keys
+    of 0 models a shard fully masked out by its kv_limit (the exact merge
+    identity), extreme offsets model pathological running maxes. The
+    combined output must match a single-pass float64 softmax over the
+    concatenated live keys, and appending identity shards must not flip a
+    single output bit."""
+    hd = 8
+    rng = np.random.default_rng(seed)
+    scores, values = [], []
+    for n_keys, off in shard_spec:
+        s = (rng.standard_normal(n_keys) + off).astype(np.float32)
+        scores.append(np.asarray(jnp.asarray(s, dtype), np.float32))
+        values.append(np.asarray(
+            jnp.asarray(rng.standard_normal((n_keys, hd)), dtype),
+            np.float32))
+    os, ms, ls = [], [], []
+    for s, val in zip(scores, values):
+        if len(s) == 0:
+            os.append(np.zeros(hd, np.float32))
+            ms.append(np.float32(NEG_INF))
+            ls.append(np.float32(0.0))
+        else:
+            m = s.max()
+            p = np.exp(s - m, dtype=np.float32)
+            os.append(p @ val)
+            ms.append(np.float32(m))
+            ls.append(p.sum(dtype=np.float32))
+    o = jnp.asarray(np.stack(os), dtype)
+    m = jnp.asarray(np.stack(ms), dtype)
+    l = jnp.asarray(np.stack(ls), dtype)
+    got = np.asarray(combine_partial_stats(o, m, l, axis=0))
+    assert np.isfinite(got).all(), got
+    live = np.concatenate([s for s in scores if len(s)] or
+                          [np.zeros(0, np.float32)])
+    if len(live) == 0:
+        np.testing.assert_array_equal(got, np.zeros(hd, np.float32))
+    else:
+        vals = np.concatenate([v for v in values if len(v)])
+        p = np.exp(live.astype(np.float64) - live.max())
+        want = (p[:, None] * vals).sum(0) / p.sum()
+        tol = 1e-5 if dtype == jnp.float32 else 4e-2
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+    # bit-stability: identity shards (empty via kv_limit) are free to append
+    o2 = jnp.concatenate([o, jnp.zeros((2, hd), dtype)])
+    m2 = jnp.concatenate([m, jnp.full((2,), NEG_INF, dtype)])
+    l2 = jnp.concatenate([l, jnp.zeros((2,), dtype)])
+    assert np.array_equal(np.asarray(combine_partial_stats(o2, m2, l2)), got)
+    # ...and the merge is associative: left-fold == flat combine (bitwise
+    # would over-promise across regrouping; the LSE algebra is exact)
+    o12, m12, l12 = merge_partial_stats(o[:1 + len(shard_spec) // 2],
+                                        m[:1 + len(shard_spec) // 2],
+                                        l[:1 + len(shard_spec) // 2])
+    ot = jnp.concatenate([o12[None].astype(dtype),
+                          o[1 + len(shard_spec) // 2:]])
+    mt = jnp.concatenate([m12[None].astype(dtype),
+                          m[1 + len(shard_spec) // 2:]])
+    lt = jnp.concatenate([l12[None].astype(dtype),
+                          l[1 + len(shard_spec) // 2:]])
+    tree = np.asarray(combine_partial_stats(ot, mt, lt))
+    tol = 1e-6 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(tree, got, rtol=tol, atol=tol)
+
+
+# a fixed sweep covering the hypothesis search space's corners: empty
+# shards first/last/everywhere, extreme maxes both directions, singletons
+_COMBINE_CASES = [
+    [(4, 0.0), (4, 0.0)],
+    [(0, 0.0), (5, 0.0), (3, 0.0)],
+    [(6, 1e4), (6, -1e4)],
+    [(1, 300.0), (8, 0.0), (0, 0.0), (2, -300.0)],
+    [(0, 0.0), (0, 0.0)],
+    [(8, -1e4), (0, 0.0), (1, 1e4)],
+    [(2, 50.0), (2, 49.0), (2, 48.0)],
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", range(len(_COMBINE_CASES)))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_combine_seeded_sweep(case, dtype, seed):
+    _check_combine(_COMBINE_CASES[case], dtype, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(spec=st.lists(st.tuples(st.integers(0, 8),
+                                   st.floats(-1e4, 1e4, allow_nan=False)),
+                         min_size=1, max_size=6),
+           seed=st.integers(0, 2**31 - 1),
+           dtype_idx=st.integers(0, 1))
+    def test_combine_property(spec, seed, dtype_idx):
+        _check_combine(spec, (jnp.float32, jnp.bfloat16)[dtype_idx], seed)
 
 
 @pytest.mark.parametrize("act", ["silu", "gelu"])

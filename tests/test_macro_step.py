@@ -168,6 +168,15 @@ def test_kv_bucket_helpers():
     assert bucket_for(10, (64, 128, 136)) == 64
     assert bucket_for(65, (64, 128, 136)) == 128
     assert bucket_for(999, (64, 128, 136)) == 136
+    # split-KV (shards > 1): every bucket must cut into equal shard blocks
+    # — the chunk stride rounds UP to a shard multiple, never truncates
+    assert kv_buckets(128, 64, shards=2) == (64, 128)
+    assert kv_buckets(128, 24, shards=8) == (24, 48, 72, 96, 120, 128)
+    assert kv_buckets(128, 20, shards=8) == (24, 48, 72, 96, 120, 128)
+    assert kv_buckets(40, 16, shards=4) == (16, 32, 40)
+    assert kv_buckets(64, 60, shards=8) == (64,)
+    with pytest.raises(ValueError, match="not divisible"):
+        kv_buckets(130, 64, shards=4)
 
 
 def test_decode_attention_bucketed_matches_full():
@@ -232,25 +241,50 @@ def test_engine_block_tokens_equal_per_step_engine(dense):
         assert a.generated == b.generated, a.rid
 
 
-def test_block_programs_compile_once_across_admissions(dense):
+@pytest.mark.parametrize("a_shards", [1, 2])
+def test_block_programs_compile_once_across_admissions(dense, a_shards):
     """Zero retracing (§4.3 invariant) extends to the macro-step regime:
     prefill1, admit, and EVERY decode-block bucket compile exactly once
-    while calls grow across staggered admissions."""
+    while calls grow across staggered admissions. Split-KV decode
+    (a_shards > 1) keeps the SAME program names and the same bucket set —
+    the shard count is a build-time static baked into each program, so the
+    invariant (and this assertion set) cannot drift with the width."""
     cfg, api, params = dense
     rt = StaticRuntime()
     eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, runtime=rt,
                         mode="continuous", max_new_cap=32, block_size=4,
-                        kv_bucket_chunk=16)
+                        kv_bucket_chunk=16, a_shards=a_shards)
     stats = eng.run(params, _requests(cfg, PLAN), max_steps=400)
     assert stats["completed"] == len(PLAN)
     rs = stats["runtime"]
     # buckets fixed at prepare: s_max = 8 + 32 = 40, chunk 16 → 16/32/40
+    # (every bucket divides by a_shards=2, so the set is width-invariant)
     assert {"serve_prefill1", "serve_admit", "serve_decode_block_s16",
             "serve_decode_block_s32", "serve_decode_block_s40"} <= set(rs)
     for name, rec in rs.items():
         assert rec["compiles"] == 1, (name, rec)
     assert sum(rec["calls"] for n, rec in rs.items()
                if n.startswith("serve_decode_block")) == stats["macro_steps"]
+
+
+def test_block_programs_compile_once_across_shard_resident_lengths(dense):
+    """Cursor positions that land inside different shard blocks (shard 0
+    only, mid-shard 1, the full extent) must all route through the SAME
+    per-bucket programs — shard-resident length is traced state, never a
+    compile key. Two runs with different length mixes: still one compile
+    per program."""
+    cfg, api, params = dense
+    rt = StaticRuntime()
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, runtime=rt,
+                        mode="continuous", max_new_cap=32, block_size=4,
+                        kv_bucket_chunk=16, a_shards=2)
+    # short run: cursors stay inside shard 0 (extent 40 → blocks of 20)
+    s1 = eng.run(params, _requests(cfg, [(4, 0), (4, 0)]), max_steps=400)
+    # long run: cursors cross into shard 1 (8 + 24 = 32 > 20)
+    s2 = eng.run(params, _requests(cfg, [(24, 0), (13, 2)]), max_steps=400)
+    assert s1["completed"] == 2 and s2["completed"] == 2
+    for name, rec in s2["runtime"].items():
+        assert rec["compiles"] == 1, (name, rec)
 
 
 def test_host_syncs_drop_by_block_size(dense):

@@ -1,0 +1,281 @@
+"""Split-KV flash decode tests (DESIGN.md §3 "split-KV flash decode").
+
+Covers the invariants the split-KV ISSUE demands:
+- ``decode_attention_split[_bucketed]`` matches the sequential bucketed
+  walk for ragged true lengths, including slots whose KV ends mid-shard
+  and shards that are entirely past a slot's live extent,
+- the serve-level equivalence MATRIX: split-KV decode produces token
+  streams byte-identical to the sequential walk for dense and int8-KV ×
+  backend {colocated, wa} × block size {1, 8} × a_shards {1, 2, 4} on a
+  staggered ragged-length workload,
+- the shard-local KV layout helpers (``kv/cache.py``): shard extents,
+  clamped shard-local limits, and the pre-dequantization sharded read
+  agreeing with the bucketed read it wraps,
+- the overlong-prompt left-shift path (``SlotScheduler.next_chunk``)
+  stays bit-identical under sequence sharding — the shifted window
+  recompute uses GLOBAL positions and shards are a read-time reshape,
+- engine validation: a_shards < 1, non-dividing extents, attention-free
+  families and drain mode are rejected up front.
+
+Fixtures run in float32 (as in test_wa_backend.py): token equality must
+test the LSE-merge semantics, not bf16 accumulation-order luck.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED
+from repro.kv.cache import (layer_read_bucket, layer_read_shards,
+                            shard_extent, shard_kv_limits)
+from repro.models import NULL_CTX, build_model
+from repro.models.attention import (decode_attention_bucketed,
+                                    decode_attention_split,
+                                    decode_attention_split_bucketed)
+from repro.runtime.serving import Request, ServingEngine
+from repro.runtime.static_runtime import StaticRuntime
+
+PROMPT_LEN = 8
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def dense_int8():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32",
+                                                   kv_dtype="int8")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+def _requests(cfg, plan, seed=0):
+    """plan: (max_new, arrival_step[, prompt_len]) — seeded per call so
+    identical plans produce identical prompts across engines."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, entry in enumerate(plan):
+        new, arr, plen = entry if len(entry) == 3 else entry + (PROMPT_LEN,)
+        out.append(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, plen,
+                                               dtype=np.int32),
+                           max_new_tokens=new, arrival_step=arr))
+    return out
+
+
+# true lengths 5/8/11/3: mid-shard ends at every width (extent 40 → shard
+# blocks of 40, 20, 10), one prompt past the static width (chunk lane)
+RAGGED = [(6, 0, 5), (6, 0, 8), (6, 2, 11), (6, 4, 3)]
+
+
+def _serve(api, params, plan, backend, T, a_shards, chunk=4, rt=None):
+    reqs = _requests(api.config, plan)
+    eng = ServingEngine(api, NULL_CTX, 2, PROMPT_LEN,
+                        runtime=rt or StaticRuntime(), mode="continuous",
+                        max_new_cap=32, block_size=T,
+                        kv_bucket_chunk=16 if T > 1 else 0,
+                        prefill_chunk=chunk, backend=backend,
+                        a_shards=a_shards)
+    stats = eng.run(params, reqs, max_steps=400)
+    return reqs, stats, eng
+
+
+# ---------------------------------------------------------------------------
+# attention-level: split walk == sequential walk under ragged lengths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_decode_attention_split_bucketed_matches_sequential(n_shards):
+    """Ragged live lengths against a 96-wide extent, bucket 48: one row's
+    KV ends mid-shard, one exactly at a shard boundary, one within shard 0
+    only (every later shard fully masked → merge identity weight)."""
+    key = jax.random.key(0)
+    B, Hq, n_kv, S, hd = 3, 8, 4, 96, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, n_kv, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, n_kv, S, hd), jnp.float32)
+    mask = jnp.arange(S)[None, :] < jnp.array([[20], [24], [7]])
+    want = decode_attention_bucketed(q, k, v, mask, NULL_CTX, kv_bucket=48)
+    got = decode_attention_split_bucketed(q, k, v, mask, NULL_CTX,
+                                          n_shards=n_shards, kv_bucket=48)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # full-extent (kv_bucket=0) identity too
+    want0 = decode_attention_bucketed(q, k, v, mask, NULL_CTX)
+    got0 = decode_attention_split_bucketed(q, k, v, mask, NULL_CTX,
+                                           n_shards=n_shards)
+    np.testing.assert_allclose(np.asarray(got0), np.asarray(want0),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_split_accepts_shard_major_mask():
+    """The (B, n_shards, Sb) mask form is the same walk as the flat
+    (B, n_shards*Sb) form — serving hands the flat one, the WA layer the
+    shard-major one."""
+    key = jax.random.key(1)
+    B, Hq, n_kv, S, hd, n = 2, 4, 2, 64, 16, 4
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, n_kv, n, S // n, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, n_kv, n, S // n, hd), jnp.float32)
+    mask = jnp.arange(S)[None, :] < jnp.array([[37], [64]])
+    flat = decode_attention_split(q, k, v, mask, NULL_CTX)
+    shaped = decode_attention_split(q, k, v, mask.reshape(B, n, S // n),
+                                    NULL_CTX)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(shaped))
+
+
+def test_split_rejects_non_dividing_extent():
+    q = jnp.zeros((1, 4, 16), jnp.float32)
+    k = v = jnp.zeros((1, 2, 40, 16), jnp.float32)
+    mask = jnp.ones((1, 40), bool)
+    with pytest.raises(ValueError, match="not divisible"):
+        decode_attention_split_bucketed(q, k, v, mask, NULL_CTX, n_shards=3)
+
+
+# ---------------------------------------------------------------------------
+# cache-level: shard-local KV layout helpers
+# ---------------------------------------------------------------------------
+
+def test_shard_extent_and_limits():
+    assert shard_extent(40, 1) == 40
+    assert shard_extent(40, 4) == 10
+    with pytest.raises(ValueError, match="not divisible"):
+        shard_extent(40, 3)
+    with pytest.raises(ValueError, match=">= 1"):
+        shard_extent(40, 0)
+    # clamp(global - s*block, 0, block): 17 over 4 blocks of 10
+    np.testing.assert_array_equal(np.asarray(shard_kv_limits(17, 4, 10)),
+                                  [10, 7, 0, 0])
+    np.testing.assert_array_equal(np.asarray(shard_kv_limits(0, 4, 10)),
+                                  [0, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(shard_kv_limits(40, 4, 10)),
+                                  [10, 10, 10, 10])
+
+
+@pytest.mark.parametrize("fixture", ["dense", "dense_int8"])
+def test_layer_read_shards_matches_bucketed_read(fixture, request):
+    """The sharded read is the bucketed read + a contiguous shard-major
+    reshape — byte-identical positions, including the int8 dequantization
+    path (scales applied before the reshape)."""
+    cfg, api, params = request.getfixturevalue(fixture)
+    caches = api.init_caches(2, 40)
+    toks = jax.random.randint(jax.random.key(2), (2, PROMPT_LEN), 0,
+                              cfg.vocab_size)
+    caches, _ = api.prefill(params, {"tokens": toks}, NULL_CTX)
+    k_l, v_l = caches.k[0], caches.v[0]
+    ks_l = caches.k_scale[0] if caches.k_scale is not None else None
+    vs_l = caches.v_scale[0] if caches.v_scale is not None else None
+    kb, vb = layer_read_bucket(k_l, v_l, ks_l, vs_l, 16, jnp.float32)
+    for n in (1, 2, 4):
+        ks, vs = layer_read_shards(k_l, v_l, ks_l, vs_l, 16, n, jnp.float32)
+        assert ks.shape == (kb.shape[0], kb.shape[1], n, 16 // n, kb.shape[3])
+        np.testing.assert_array_equal(
+            np.asarray(ks.reshape(kb.shape)), np.asarray(kb))
+        np.testing.assert_array_equal(
+            np.asarray(vs.reshape(vb.shape)), np.asarray(vb))
+
+
+# ---------------------------------------------------------------------------
+# serve-level equivalence matrix: split-KV == sequential walk, both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["colocated", "wa"])
+@pytest.mark.parametrize("T", [1, 8])
+def test_split_kv_serve_matches_sequential_dense(dense, backend, T):
+    cfg, api, params = dense
+    base, s_base, _ = _serve(api, params, RAGGED, backend, T, 1)
+    assert s_base["completed"] == len(RAGGED)
+    for sh in (2, 4):
+        split, s_split, _ = _serve(api, params, RAGGED, backend, T, sh)
+        assert s_split["completed"] == len(RAGGED)
+        assert s_split["a_shards"] == sh
+        for a, b in zip(base, split):
+            assert a.generated == b.generated, (a.rid, backend, T, sh)
+
+
+@pytest.mark.parametrize("backend", ["colocated", "wa"])
+@pytest.mark.parametrize("T", [1, 8])
+def test_split_kv_serve_matches_sequential_int8(dense_int8, backend, T):
+    """int8 KV: shards dequantize the same bucketed bytes the sequential
+    walk reads — the merge sees identical shard-local values."""
+    cfg, api, params = dense_int8
+    base, s_base, _ = _serve(api, params, RAGGED, backend, T, 1)
+    assert s_base["completed"] == len(RAGGED)
+    split, s_split, _ = _serve(api, params, RAGGED, backend, T, 4)
+    assert s_split["completed"] == len(RAGGED)
+    for a, b in zip(base, split):
+        assert a.generated == b.generated, (a.rid, backend, T)
+
+
+# ---------------------------------------------------------------------------
+# overlong-prompt left-shift (PR 3 fix) under sequence sharding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["colocated", "wa"])
+def test_overlong_prompt_left_shift_is_shard_invariant(dense, backend):
+    """A 35-token prompt against extent 40 with chunk 16 forces the final
+    window to left-shift (start 32 → 24) and recompute positions 24..34.
+    The shift math uses GLOBAL kv_extent and shards are a read-time
+    reshape over absolute positions, so the recompute must stay
+    bit-identical at every width: same token streams AND byte-identical
+    PROMPT KV (the decode-appended tail of deeper layers legitimately
+    differs in low-order float bits — it sits downstream of the merge's
+    different summation order)."""
+    cfg, api, params = dense
+    plan = [(5, 0, 35), (4, 0, 6)]
+    streams, caches = {}, {}
+    for sh in (1, 2, 4):
+        reqs, stats, eng = _serve(api, params, plan, backend, 8, sh,
+                                  chunk=16)
+        assert stats["completed"] == len(plan)
+        # the 35-token prompt runs chunks at 0/16 then the SHIFTED 24
+        assert stats["prefill_chunks"] == 3 + 1
+        streams[sh] = [list(r.generated) for r in reqs]
+        caches[sh] = (np.asarray(eng._caches.k), np.asarray(eng._caches.v))
+    assert streams[1] == streams[2] == streams[4]
+    for sh in (2, 4):
+        # slot 0 held the 35-token prompt, slot 1 the 6-token one; chunk
+        # prefill (incl. the shifted recompute) must not feel the width
+        for buf in (0, 1):
+            np.testing.assert_array_equal(
+                caches[sh][buf][:, 0, :, :35], caches[1][buf][:, 0, :, :35])
+            np.testing.assert_array_equal(
+                caches[sh][buf][:, 1, :, :6], caches[1][buf][:, 1, :, :6])
+
+
+# ---------------------------------------------------------------------------
+# engine validation
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_invalid_a_shards():
+    api = build_model(ASSIGNED["qwen2-0.5b"].reduced())
+    with pytest.raises(ValueError, match=">= 1"):
+        ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, a_shards=0)
+    # extent 8 + 32 = 40 does not cut into 3 equal shard blocks
+    with pytest.raises(ValueError, match="not divisible"):
+        ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                      max_new_cap=32, a_shards=3)
+    with pytest.raises(ValueError, match="drain"):
+        ServingEngine(api, NULL_CTX, 2, PROMPT_LEN, mode="drain",
+                      a_shards=2)
+    ssm = build_model(ASSIGNED["mamba2-1.3b"].reduced())
+    with pytest.raises(ValueError, match="KV sequence axis"):
+        ServingEngine(ssm, NULL_CTX, 2, PROMPT_LEN, mode="continuous",
+                      a_shards=2)
+
+
+def test_wa_split_requires_sharding_routing():
+    """a_shards > 1 is an AOT sharded read; the eager device_put routing
+    cannot stage it and must refuse at construction."""
+    from repro.core.wa import WADisaggregated
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32")
+    with pytest.raises(ValueError, match="sharding"):
+        WADisaggregated(cfg, None, routing="device_put", a_shards=2)
+    with pytest.raises(ValueError, match=">= 1"):
+        WADisaggregated(cfg, None, routing="sharding", a_shards=0)

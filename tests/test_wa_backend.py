@@ -68,13 +68,15 @@ def _requests(cfg, plan, seed=0):
 STAGGERED = [(9, 0), (13, 0), (5, 2), (9, 6)]
 
 
-def _serve(api, params, plan, backend, T, chunk, rt=None, slots=2):
+def _serve(api, params, plan, backend, T, chunk, rt=None, slots=2,
+           a_shards=1):
     reqs = _requests(api.config, plan)
     eng = ServingEngine(api, NULL_CTX, slots, PROMPT_LEN,
                         runtime=rt or StaticRuntime(), mode="continuous",
                         max_new_cap=32, block_size=T,
                         kv_bucket_chunk=16 if T > 1 else 0,
-                        prefill_chunk=chunk, backend=backend)
+                        prefill_chunk=chunk, backend=backend,
+                        a_shards=a_shards)
     stats = eng.run(params, reqs, max_steps=400)
     return reqs, stats, eng
 
@@ -126,11 +128,16 @@ def test_wa_ragged_true_lengths_match_colocated(dense):
 # zero retracing: compiles == 1 for every WA step program (§4.3)
 # ---------------------------------------------------------------------------
 
-def test_wa_programs_compile_once_across_staggered_serve(dense):
+@pytest.mark.parametrize("a_shards", [1, 2])
+def test_wa_programs_compile_once_across_staggered_serve(dense, a_shards):
+    """Split-KV decode (a_shards > 1) bakes the shard count into the SAME
+    routed programs — the strict program-name set and the compiles == 1
+    invariant are width-invariant."""
     cfg, api, params = dense
     rt = StaticRuntime()
     plan = [(4, 0, 5), (4, 0, 8), (4, 1, 11), (4, 3, 2), (4, 5, 7)]
-    reqs, stats, eng = _serve(api, params, plan, "wa", 4, 4, rt=rt)
+    reqs, stats, eng = _serve(api, params, plan, "wa", 4, 4, rt=rt,
+                              a_shards=a_shards)
     assert stats["completed"] == len(plan)
     rs = stats["runtime"]
     # only routed programs — the scheduler/executor split means switching
@@ -142,8 +149,12 @@ def test_wa_programs_compile_once_across_staggered_serve(dense):
         assert rec["compiles"] == 1, (name, rec)   # zero retracing
     assert rs["serve_wa_prefill_chunk"]["calls"] == \
         sum(-(-p // 4) for _, _, p in plan)
-    # engine reuse: a second run recompiles nothing
-    stats2 = eng.run(params, _requests(cfg, plan), max_steps=400)
+    # engine reuse + a different shard-resident length mix: a second run
+    # (cursors crossing shard boundaries the first never reached)
+    # recompiles nothing
+    plan2 = [(24, 0, 5), (13, 0, 8), (4, 1, 11), (4, 3, 2), (4, 5, 7)]
+    stats2 = eng.run(params, _requests(cfg, plan2), max_steps=400)
+    assert stats2["completed"] == len(plan2)
     assert all(rec["compiles"] == 1 for rec in stats2["runtime"].values())
 
 
