@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast test-long bench-smoke bench-serve lint check
+.PHONY: test test-fast test-long bench-smoke bench-serve verify-static lint check
 
 test:            ## tier-1 verify (full suite, fail fast)
 	python -m pytest -x -q
@@ -19,7 +19,16 @@ bench-smoke:     ## fast benchmark subset (CSV sanity; serve_tpot exercises the 
 bench-serve:     ## serving TPOT/TTFT per-step vs macro-step (BENCH_serving.json)
 	python -m benchmarks.run serve_tpot
 
-lint:            ## dependency-free syntax gate
-	python -m compileall -q src tests benchmarks examples
+verify-static:   ## static program verifier: every serving program, full matrix, dry-run mesh
+	python -m repro.analysis.verify --preset full --mesh 2,4
 
-check: lint test
+lint:            ## ruff (pinned in requirements-dev.txt); compileall fallback when absent
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks examples && \
+		python -m compileall -q scratch; \
+	else \
+		echo "ruff not installed -- falling back to the syntax gate"; \
+		python -m compileall -q src tests benchmarks examples scratch; \
+	fi
+
+check: lint test verify-static

@@ -41,4 +41,4 @@ def run():
              f"tpot_x={g_tp:.2f};thru_x={g_th:.2f}")
     emit("fig8/max", 0.0,
          f"tpot_x={max(all_tp):.1f};thru_x={max(all_th):.1f};"
-         f"paper=13.9/12.5")
+         "paper=13.9/12.5")

@@ -287,14 +287,14 @@ def _wa_backend_scenario(api, params, ctx):
         if backend == "wa":
             rec["routing_bytes_per_token"] = st["wa"]["routing_bytes_per_token"]
             rec["routing_total_bytes"] = st["wa"]["routing_total_bytes"]
-            rec["routing_bytes_per_decode_token"] = \
+            rec["routing_bytes_per_decode_token"] =\
                 st["wa"]["routing_bytes_per_decode_token"]
         out[backend] = rec
         derived = (f"ttft_mean_ms={st['ttft_mean_ms']:.1f};"
                    f"host_syncs={st['host_syncs']};"
                    f"max_compiles_per_step={max(compiles.values())}")
         if backend == "wa":
-            derived += (f";routing_bytes_per_token="
+            derived += (";routing_bytes_per_token="
                         f"{st['wa']['routing_bytes_per_token']}")
         emit(f"serving/wa_backend/{backend}/tpot",
              st["tpot_mean_ms"] * 1e3, derived)

@@ -67,7 +67,7 @@ def run():
              f"meas_over_est={us/est:.2f}")
     emit("table2/reduced-measured/trend", 0.0,
          f"meas_est_range=[{min(ratios):.2f},{max(ratios):.2f}];"
-         f"paper_range=[1.15,1.52]")
+         "paper_range=[1.15,1.52]")
 
     # --- staggered-arrival serving: continuous vs drain scheduling --------
     # The paper's prototype defers continuous batching (§7.2); this scenario

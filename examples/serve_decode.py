@@ -73,4 +73,4 @@ if "wa" in stats:
     wa = stats["wa"]
     print(f"W<->A route: {wa['routing_bytes_per_token'] / 1024:.1f} KiB/token "
           f"({wa['routing_total_bytes'] / 1e6:.2f} MB total — "
-          f"'only embeddings move', DESIGN.md §3)")
+          "'only embeddings move', DESIGN.md §3)")

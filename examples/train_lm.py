@@ -8,7 +8,6 @@ import argparse
 import shutil
 import tempfile
 
-from repro.configs.base import ModelConfig
 from repro.configs.registry import REGISTRY
 from repro.launch.train import train
 

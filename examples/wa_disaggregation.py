@@ -55,7 +55,7 @@ err = float(jnp.max(jnp.abs(got - want)))
 print(f"\nWA-disaggregated decode max|Δ| vs colocated: {err:.2e} "
       f"({'OK' if err < 1e-3 else 'MISMATCH'})")
 print(f"W↔A routing traffic: {routing_bytes(cfg, B)/1024:.1f} KiB/token "
-      f"('only embeddings move' — paper §4.1)")
+      "('only embeddings move' — paper §4.1)")
 
 # --- serving: the WA backend as a first-class engine path -----------------
 from repro.models.sharding import ShardingCtx, sub_operator

@@ -1,0 +1,27 @@
+"""Static program verifier (DESIGN.md §8).
+
+The paper's result rests on three *static* properties of the compiled
+serving programs — weights stay resident in the W domain, KV stays in the
+A domain, and coordination is relaxed to true sub-operator dependencies.
+Nothing at runtime checks them: a sharding annotation lost through a
+reshape (the GSPMD back-propagation failure PR 5 hit in ``core/wa.py``)
+silently turns a cache-resident program into a replicated one and shows up
+only as a diffuse TPOT regression.
+
+This package lints every AOT serving program at the jaxpr and optimized-HLO
+level, on dry-run host-device meshes, so CI needs no hardware:
+
+  residency      KV buffers keep their A-domain (kv_seq-sharded) layout and
+                 never cross into W; weight placement vs the W-domain plan
+  compile_once   every serve_* name compiles exactly once per signature;
+                 weak-type/dtype drift that causes silent retraces
+  host_sync      no callbacks/infeed/host round-trips inside step programs;
+                 KV buffers are donated (alias map audited)
+  routing_check  W↔A hop bytes recomputed from the program jaxpr must match
+                 the analytic routing_bytes meter in runtime/serving.py
+  kernel_bounds  flash-decode grids cover the KV extent, kv_limit is traced
+                 and consumed; chunk-lane dynamic_update_slice writes cannot
+                 alias across slots
+
+CLI: ``python -m repro.analysis.verify`` (or ``make verify-static``).
+"""

@@ -1,0 +1,75 @@
+"""Compile-once auditor (pass 2).
+
+Invariant (§4.3 pinned-pool): every serving program compiles EXACTLY once
+per (mesh, signature) — dispatch is a cached call with zero retracing. Two
+signatures under one ``serve_*`` name mean some operand's shape/dtype
+drifts between dispatches and the runtime silently recompiles on the
+latency-critical path. Weak-typed leaves are the classic cause: a bare
+python scalar reaching an operand slot traces to a weak dtype, and the
+first committed array at the same slot retraces the program.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+from repro.analysis.findings import Report
+from repro.analysis.programs import Cell
+from repro.runtime.static_runtime import StaticRuntime
+
+PASS = "compile_once"
+
+
+def _sig_diff(a: Tuple, b: Tuple) -> str:
+    if len(a) != len(b):
+        return f"leaf count {len(a)} vs {len(b)}"
+    for i, (la, lb) in enumerate(zip(a, b)):
+        if la != lb:
+            return f"leaf {i}: {la} vs {lb}"
+    return "identical signatures under distinct keys"
+
+
+def audit_runtime(rt: StaticRuntime, report: Report,
+                  expect_serve_prefix: bool = True):
+    by_name: Dict[str, List[Tuple[Tuple, object]]] = defaultdict(list)
+    for (name, _mesh_id, sig), step in rt._cache.items():
+        by_name[name].append((sig, step))
+
+    for name, entries in sorted(by_name.items()):
+        if expect_serve_prefix and not name.startswith("serve"):
+            report.warning(
+                PASS, name, "program name",
+                "non-serve_* program registered in the serving runtime — "
+                "the zero-retracing audit only covers named serving steps")
+        if len(entries) > 1:
+            (sig0, _), (sig1, _) = entries[0], entries[1]
+            report.error(
+                PASS, name, f"{len(entries)} signatures",
+                f"program compiled under {len(entries)} distinct operand "
+                "signatures — every dispatch whose operands alternate "
+                "between them retraces on the critical path "
+                f"({_sig_diff(sig0, sig1)})")
+        for sig, step in entries:
+            for i, leaf in enumerate(sig):
+                shape, dtype, weak = leaf
+                if weak:
+                    report.error(
+                        PASS, name, f"operand leaf {i}",
+                        f"weak-typed {dtype}{list(shape or ())} in the "
+                        "compile signature — a bare python scalar reached "
+                        "this slot; the first committed array here "
+                        "retraces the program (wrap with jnp.asarray / "
+                        "an explicit dtype)")
+
+
+def check_compile_once(cell: Cell, report: Report):
+    audit_runtime(cell.rt, report)
+    # cross-check the registry against what the engine exposes: every
+    # dispatched program handle must be IN the audited cache (a handle
+    # compiled outside StaticRuntime would dodge the zero-retrace stats)
+    names = {name for (name, *_rest) in cell.rt._cache}
+    for rec in cell.records:
+        if rec.name not in names:
+            report.error(PASS, rec.name, "registry",
+                         "program handle not present in the StaticRuntime "
+                         "cache — compiled outside the audited path")

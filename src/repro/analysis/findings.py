@@ -1,0 +1,77 @@
+"""Finding/Report containers shared by the verifier passes.
+
+A Finding names the pass, the PROGRAM and the OPERAND it fired on — a
+diagnostic that cannot be acted on (which program? which buffer?) is a
+bug in the pass, not a style problem.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+ERROR = "error"
+WARNING = "warning"
+INFO = "info"
+
+
+@dataclass(frozen=True)
+class Finding:
+    severity: str          # ERROR / WARNING / INFO
+    pass_name: str         # residency / compile_once / host_sync / ...
+    program: str           # serving program name (or "<runtime>")
+    operand: str           # leaf path, eqn descriptor or param index
+    message: str
+
+    def format(self) -> str:
+        return (f"[{self.severity.upper():7s}] {self.pass_name}: "
+                f"{self.program} :: {self.operand}\n    {self.message}")
+
+
+@dataclass
+class Report:
+    findings: List[Finding] = field(default_factory=list)
+
+    def add(self, severity: str, pass_name: str, program: str,
+            operand: str, message: str):
+        self.findings.append(
+            Finding(severity, pass_name, program, operand, message))
+
+    def error(self, pass_name, program, operand, message):
+        self.add(ERROR, pass_name, program, operand, message)
+
+    def warning(self, pass_name, program, operand, message):
+        self.add(WARNING, pass_name, program, operand, message)
+
+    def info(self, pass_name, program, operand, message):
+        self.add(INFO, pass_name, program, operand, message)
+
+    def extend(self, other: "Report"):
+        self.findings.extend(other.findings)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == ERROR]
+
+    @property
+    def warnings(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == WARNING]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.findings:
+            out[f.severity] = out.get(f.severity, 0) + 1
+        return out
+
+    def format(self, verbose: bool = False) -> str:
+        shown = self.findings if verbose \
+            else [f for f in self.findings if f.severity != INFO]
+        lines = [f.format() for f in shown]
+        c = self.counts()
+        lines.append(f"-- {c.get(ERROR, 0)} error(s), "
+                     f"{c.get(WARNING, 0)} warning(s), "
+                     f"{c.get(INFO, 0)} info")
+        return "\n".join(lines)

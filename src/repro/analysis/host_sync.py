@@ -1,0 +1,90 @@
+"""Host-sync detector (pass 3).
+
+Invariant (§4.3 / DESIGN.md §7): the steady-state serving loop syncs with
+the host once per macro-step — nothing INSIDE a step program may force an
+extra round-trip. Two ways a program smuggles one in:
+
+  - host ops compiled into the program: python callbacks
+    (pure/io/debug_callback), infeed/outfeed, send/recv. Each runs every
+    dispatch (worse: every micro-step if inside the block scan).
+  - a "donated" KV cache the compiler could not alias: the donation
+    silently degrades to a full device copy of the cache per dispatch —
+    and the alias map in the optimized HLO is the only place that truth
+    appears.
+
+The donation audit reads ``input_output_alias`` from the compiled HLO and
+requires every cache leaf of every steady-state program (kinds in
+``DONATING_KINDS``) to be aliased.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.findings import Report
+from repro.analysis.jaxpr_walk import iter_eqns
+from repro.analysis.programs import Cell, DONATING_KINDS, ProgramRecord
+from repro.launch.hlo_analysis import parse_host_ops, parse_input_output_alias
+
+PASS = "host_sync"
+
+# jaxpr-level primitives that round-trip through the host
+_CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
+                   "infeed", "outfeed", "host_local_array_to_global_array")
+
+
+def _check_callbacks(rec: ProgramRecord, report: Report):
+    try:
+        jaxpr = rec.step.jaxpr()
+    except (ValueError, TypeError) as e:
+        report.warning(PASS, rec.name, "jaxpr",
+                       f"could not retrace for callback scan: {e}")
+        return
+    for site in iter_eqns(jaxpr):
+        name = site.eqn.primitive.name
+        if name in _CALLBACK_PRIMS:
+            times = f"{site.trips}×" if site.trips > 1 else "once"
+            report.error(
+                PASS, rec.name, name,
+                "host callback compiled into the step program (runs "
+                f"{times} per dispatch) — every dispatch blocks on a "
+                "device→host→device round-trip, defeating the macro-step "
+                "sync amortization")
+
+
+def _check_hlo_host_ops(rec: ProgramRecord, report: Report):
+    for line in parse_host_ops(rec.step.compiled.as_text()):
+        report.error(PASS, rec.name, "hlo host op",
+                     f"host-facing op in optimized HLO: {line}")
+
+
+def _check_donation(rec: ProgramRecord, cell: Cell, report: Report):
+    rng = rec.flat_leaf_range("caches")
+    if rng is None or rec.kind not in DONATING_KINDS:
+        return
+    if not rec.step.donate_argnums:
+        report.error(
+            PASS, rec.name, "caches",
+            f"steady-state {rec.kind} program does not donate its cache "
+            "operand — XLA must copy the full KV every dispatch (pass "
+            "donate_argnums for the caches arg)")
+        return
+    alias = parse_input_output_alias(rec.step.compiled.as_text())
+    aliased_params = set(alias.values())
+    flat, _ = jax.tree_util.tree_flatten_with_path(cell.caches_aval)
+    start, stop = rng
+    for offset, (path, leaf) in enumerate(flat):
+        pnum = start + offset
+        if pnum not in aliased_params:
+            report.error(
+                PASS, rec.name,
+                f"caches{jax.tree_util.keystr(path)} (param {pnum})",
+                f"cache leaf {leaf.shape}:{leaf.dtype} marked donated but "
+                "ABSENT from the compiled alias map — the donation "
+                "degraded to a copy of this buffer every dispatch")
+
+
+def check_host_sync(cell: Cell, report: Report):
+    for rec in cell.records:
+        _check_callbacks(rec, report)
+        _check_hlo_host_ops(rec, report)
+        _check_donation(rec, cell, report)

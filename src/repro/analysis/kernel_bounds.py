@@ -1,0 +1,277 @@
+"""Kernel bounds checker (pass 5).
+
+Two invariants at the bottom of the stack:
+
+  K1  flash-decode grid coverage + live kv_limit: the Pallas grid must
+      tile the FULL KV extent of every operand (an under-covering grid
+      silently drops tail KV — attention quietly forgets the newest
+      positions), and the traced ``kv_limit`` operand must actually be
+      READ by the kernel body (a dead limit means the tile early-out — the
+      whole point of the traced operand — is gone). Checked by evaluating
+      each BlockSpec index map over every grid point and unioning the
+      covered index ranges; no TPU needed, tracing is enough.
+
+  K2  chunk-write slot isolation: the chunked-prefill lane writes each
+      (1, n_kv, C, hd) chunk with ``dynamic_update_slice`` at a TRACED
+      slot offset. Its update extent along the slot axis must be 1 — an
+      extent > 1 with a traced start could alias a neighbouring slot's
+      live KV at runtime and no runtime check would ever fire (DUS clamps,
+      it does not trap). Stack-level writes (extent == slots) are safe
+      only at a LITERAL 0 offset.
+
+The serving programs on CPU dispatch the jnp reference kernel, so K1 runs
+against the kernel library directly at every (bucket, shard) shape the
+cell's engine would serve — same shapes, same dtypes, no hardware.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax import core as jax_core
+
+from repro.analysis.findings import Report
+from repro.analysis.jaxpr_walk import iter_eqns, literal_value
+from repro.analysis.programs import Cell, ProgramRecord
+from repro.kv.cache import KVCache
+
+PASS = "kernel_bounds"
+
+_MAX_GRID_POINTS = 65536
+
+
+# ---------------------------------------------------------------------------
+# K1: pallas grid coverage + kv_limit liveness
+# ---------------------------------------------------------------------------
+
+def _eval_index_map(bm, idx: Tuple[int, ...]) -> Optional[Tuple[int, ...]]:
+    im = getattr(bm, "index_map_jaxpr", None)
+    if im is None:
+        return None
+    try:
+        out = jax_core.eval_jaxpr(im.jaxpr, im.consts,
+                                  *[np.int32(i) for i in idx])
+        return tuple(int(x) for x in out)
+    except Exception:
+        return None
+
+
+def check_pallas_sites(jaxpr, program: str, report: Report,
+                       expect_limit: bool = False) -> int:
+    """Audit every pallas_call in ``jaxpr``; returns how many were seen."""
+    seen = 0
+    for site in iter_eqns(jaxpr):
+        eqn = site.eqn
+        if eqn.primitive.name != "pallas_call":
+            continue
+        seen += 1
+        gm = eqn.params.get("grid_mapping")
+        if gm is None:
+            report.warning(PASS, program, "pallas_call",
+                           "no grid_mapping param — cannot audit bounds")
+            continue
+        grid = tuple(int(g) for g in gm.grid)
+        npts = int(np.prod(grid, dtype=np.int64)) if grid else 1
+        if npts > _MAX_GRID_POINTS:
+            report.warning(PASS, program, "pallas_call",
+                           f"grid {grid} too large to enumerate "
+                           f"({npts} points) — coverage unchecked")
+            continue
+        n_in = getattr(gm, "num_inputs", None)
+        mappings = list(gm.block_mappings)
+        in_avals = [v.aval for v in eqn.invars]
+        if n_in is None:
+            n_in = min(len(mappings), len(in_avals))
+        pts = [()] if not grid else list(np.ndindex(*grid))
+        for op_i in range(min(n_in, len(mappings), len(in_avals))):
+            _check_coverage(program, report, op_i, in_avals[op_i],
+                            mappings[op_i], pts)
+        if expect_limit:
+            _check_limit_live(program, report, eqn, in_avals[:n_in])
+    return seen
+
+
+def _check_coverage(program: str, report: Report, op_i: int, aval,
+                    bm, pts: List[Tuple[int, ...]]):
+    bshape = tuple(1 if b is None else int(b)
+                   for b in getattr(bm, "block_shape", ()))
+    if len(bshape) != len(aval.shape) or not pts:
+        return
+    starts = set()
+    for p in pts:
+        s = _eval_index_map(bm, p)
+        if s is None:
+            return                      # exotic index map — skip, don't lie
+        starts.add(s)
+    for d, (extent, blk) in enumerate(zip(aval.shape, bshape)):
+        covered = set()
+        for s in starts:
+            lo = s[d] * blk
+            covered.update(range(lo, min(lo + blk, extent)))
+        if len(covered) != extent:
+            missing = sorted(set(range(extent)) - covered)
+            report.error(
+                PASS, program,
+                f"pallas operand {op_i} ({aval.shape}:{aval.dtype}) dim {d}",
+                f"grid tiles cover only {len(covered)}/{extent} positions "
+                f"(first missing: {missing[:4]}) — the kernel silently "
+                "drops the uncovered KV tail; grid/block_s do not tile "
+                "the extent")
+
+
+def _check_limit_live(program: str, report: Report, eqn, in_avals):
+    """The (1,1) int32 kv_limit operand must be consumed by the kernel."""
+    lim_idx = [i for i, a in enumerate(in_avals)
+               if tuple(a.shape) == (1, 1) and a.dtype == np.int32]
+    if not lim_idx:
+        report.error(
+            PASS, program, "kv_limit",
+            "flash-decode pallas_call has NO (1,1) int32 kv_limit "
+            "operand — tile early-out is impossible and every dispatch "
+            "walks the full padded extent")
+        return
+    kjaxpr = eqn.params.get("jaxpr")
+    if kjaxpr is None:
+        return
+    kj = kjaxpr.jaxpr if isinstance(kjaxpr, jax_core.ClosedJaxpr) else kjaxpr
+    for i in lim_idx:
+        if i >= len(kj.invars):
+            continue
+        ref = kj.invars[i]
+        used = any(ref in site.eqn.invars for site in iter_eqns(kj))
+        if not used:
+            report.error(
+                PASS, program, f"kv_limit (operand {i})",
+                "kv_limit ref is never read inside the kernel body — the "
+                "early-out is dead code and padded tiles all execute")
+
+
+# ---------------------------------------------------------------------------
+# K1 driver: trace the kernel library at the cell's serving shapes
+# ---------------------------------------------------------------------------
+
+def _flash_shapes(cell: Cell) -> List[Tuple[str, int]]:
+    """(label, kv extent) pairs the cell's engine would hand the kernel:
+    each KV bucket, and each per-shard extent under split-KV."""
+    backend = cell.backend
+    caches = cell.caches_aval
+    if not isinstance(caches, KVCache):
+        return []
+    S_full = caches.k.shape[3]
+    out = []
+    buckets = [b for b in (backend.buckets or ()) if b > 0] or [S_full]
+    for b in buckets:
+        sh = cell.spec.a_shards
+        if sh > 1:
+            out.append((f"bucket {b} / {sh} shards", b // sh))
+        else:
+            out.append((f"bucket {b}", b))
+    return out
+
+
+def check_kernel_library(cell: Cell, report: Report):
+    from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
+    caches = cell.caches_aval
+    if not isinstance(caches, KVCache):
+        report.info(PASS, "<kernel>", cell.spec.label,
+                    "attention-free family: no flash-decode kernel")
+        return
+    _L, B, n_kv, _S, hd = caches.k.shape
+    Hq = cell.cfg.n_heads
+    quant = caches.k_scale is not None
+    for label, S in _flash_shapes(cell):
+        for bs in {S, max(S // 2, 1)}:
+            if S % bs:
+                continue
+
+            def trace(q, k, v, ks, vs, mask, lim, _bs=bs):
+                return flash_decode_pallas(q, k, v, ks, vs, mask,
+                                           block_s=_bs, kv_limit=lim)
+
+            q = jax.ShapeDtypeStruct((B, Hq, hd), np.float32)
+            kv = jax.ShapeDtypeStruct((B, n_kv, S, hd), caches.k.dtype)
+            sc = jax.ShapeDtypeStruct((B, n_kv, S, 1), np.float32)\
+                if quant else None
+            mask = jax.ShapeDtypeStruct((B, S), np.bool_)
+            lim = jax.ShapeDtypeStruct((1, 1), np.int32)
+            try:
+                jaxpr = jax.make_jaxpr(trace)(q, kv, kv, sc, sc, mask, lim)
+            except Exception as e:
+                report.error(PASS, f"flash_decode[{label}]", f"block_s={bs}",
+                             "kernel fails to trace at serving shape "
+                             f"(B={B}, n_kv={n_kv}, S={S}, hd={hd}): {e}")
+                continue
+            n = check_pallas_sites(jaxpr, f"flash_decode[{label}]", report,
+                                   expect_limit=True)
+            if n == 0:
+                report.error(PASS, f"flash_decode[{label}]", "pallas_call",
+                             "no pallas_call traced — the kernel path "
+                             "silently fell back")
+
+
+# ---------------------------------------------------------------------------
+# K2: chunk-write slot isolation
+# ---------------------------------------------------------------------------
+
+def check_chunk_writes(cell: Cell, rec: ProgramRecord, report: Report):
+    caches = cell.caches_aval
+    if not isinstance(caches, KVCache) or rec.kind != "chunk":
+        return
+    try:
+        jaxpr = rec.step.jaxpr()
+    except (ValueError, TypeError) as e:
+        report.warning(PASS, rec.name, "jaxpr",
+                       f"could not retrace for chunk-write audit: {e}")
+        return
+    leaves = [leaf for leaf in jax.tree_util.tree_leaves(caches)
+              if getattr(leaf, "ndim", 0) == 5]
+    slice_shapes = {leaf.shape[1:] for leaf in leaves}   # (B, n_kv, S, *)
+    stack_shapes = {leaf.shape for leaf in leaves}       # (L, B, n_kv, S, *)
+    B = cell.spec.slots
+    n_checked = 0
+    for site in iter_eqns(jaxpr):
+        eqn = site.eqn
+        if eqn.primitive.name != "dynamic_update_slice":
+            continue
+        dst, upd, *starts = eqn.invars
+        dshape = tuple(dst.aval.shape)
+        if dshape in slice_shapes:                       # per-layer write
+            slot_dim = 0
+        elif dshape in stack_shapes:                     # whole-stack write
+            slot_dim = 1
+        else:
+            continue
+        n_checked += 1
+        extent = upd.aval.shape[slot_dim]
+        start = literal_value(starts[slot_dim])
+        if extent == 1:
+            continue
+        if extent == dshape[slot_dim] and start == 0:
+            continue                                     # full-width literal
+        report.error(
+            PASS, rec.name,
+            f"dynamic_update_slice dst {dshape} slot dim {slot_dim}",
+            f"chunk write updates {extent} slots at "
+            f"{'a TRACED offset' if start is None else f'offset {start}'} "
+            "— a masked chunk/shard write may alias a neighbouring "
+            f"slot's live KV (slot-extent must be 1, got {extent} of "
+            f"{B} slots)")
+    if n_checked == 0:
+        report.warning(PASS, rec.name, "dynamic_update_slice",
+                       "no cache-shaped DUS writes found in the chunk "
+                       "program — the slot-isolation audit matched nothing "
+                       "(cache write idiom changed?)")
+
+
+def check_kernel_bounds(cell: Cell, report: Report):
+    # serving programs (CPU programs carry no pallas_call; audit anyway —
+    # on TPU builds the same pass sees the real kernels in-program)
+    for rec in cell.records:
+        try:
+            jaxpr = rec.step.jaxpr()
+        except (ValueError, TypeError):
+            continue
+        check_pallas_sites(jaxpr, rec.name, report)
+        check_chunk_writes(cell, rec, report)
+    check_kernel_library(cell, report)

@@ -1,0 +1,205 @@
+"""Build serving cells for verification and classify their programs.
+
+A *cell* is one (arch, backend, kv dtype, a_shards, admission mode) point:
+the verifier builds the REAL ``ServingEngine`` for it — same constructors,
+same ``StaticRuntime``, same program names as serving — against abstract
+parameters (``jax.eval_shape`` of ``api.init``), so nothing runs and no
+weights materialize; only compilation happens. Whatever the engine would
+serve is exactly what gets linted; there is no shadow model to drift.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ASSIGNED
+from repro.models import NULL_CTX, build_model
+from repro.models.sharding import ShardingCtx, sub_operator
+from repro.runtime.serving import ServingEngine
+from repro.runtime.static_runtime import CompiledStep, StaticRuntime
+
+# program-name suffix → kind; kinds drive per-pass policy (which programs
+# must donate, which carry routed hops, which hold chunk writes)
+_KINDS = (
+    ("prefill_chunk", "chunk"),
+    ("wa_admit", "chunk"),          # degenerate full-width chunk
+    ("decode_block", "block"),
+    ("decode_drain", "drain"),
+    ("prefill_batch", "prefill"),
+    ("prefill1", "prefill"),
+    ("admit", "admit"),             # colocated write_slot copy
+    ("decode", "decode"),
+    ("reset", "reset"),
+)
+
+# kinds whose programs sit on the steady-state serving path and must donate
+# their cache operand (a non-donated cache = one full KV copy per dispatch)
+DONATING_KINDS = ("chunk", "block", "decode", "admit", "reset", "drain")
+
+
+@dataclass(frozen=True)
+class CellSpec:
+    """One verification point. Defaults mirror the serving-test fixtures
+    (qwen2-0.5b reduced, f32 activations) — small enough that a CI host
+    compiles the full matrix, real enough to exercise every program."""
+    label: str
+    arch: str = "qwen2-0.5b"
+    backend: str = "colocated"
+    kv_dtype: Optional[str] = None          # None = dense, "int8" = quantized
+    a_shards: int = 1
+    block_size: int = 4
+    prefill_chunk: int = 4                  # 0 → monolithic admission
+    slots: int = 2
+    prompt_len: int = 8
+    max_new_cap: int = 24
+    kv_bucket_chunk: int = 16
+
+    def describe(self) -> str:
+        kv = self.kv_dtype or "dense"
+        adm = f"chunk{self.prefill_chunk}" if self.prefill_chunk \
+            else "monolithic"
+        return (f"{self.label}: {self.arch} backend={self.backend} kv={kv} "
+                f"a_shards={self.a_shards} T={self.block_size} adm={adm}")
+
+
+@dataclass
+class ProgramRecord:
+    name: str
+    step: CompiledStep
+    kind: str
+    arg_roles: Dict[str, int]               # 'params'/'caches' → arg position
+
+    def flat_leaf_range(self, role: str) -> Optional[Tuple[int, int]]:
+        """[start, stop) of this role's leaves in the program's FLAT
+        parameter numbering (the numbering HLO alias maps use)."""
+        idx = self.arg_roles.get(role)
+        if idx is None:
+            return None
+        start = sum(len(jax.tree_util.tree_leaves(a))
+                    for a in self.step.abstract_args[:idx])
+        n = len(jax.tree_util.tree_leaves(self.step.abstract_args[idx]))
+        return start, start + n
+
+
+@dataclass
+class Cell:
+    spec: CellSpec
+    cfg: object
+    api: object
+    mesh: object                            # None for the no-mesh dry run
+    engine: ServingEngine
+    rt: StaticRuntime
+    params_aval: object
+    caches_aval: object
+    records: List[ProgramRecord] = field(default_factory=list)
+
+    @property
+    def backend(self):
+        return self.engine._ex
+
+    @property
+    def w_ctx(self) -> ShardingCtx:
+        """Rules the weight leaves are planned under."""
+        if self.spec.backend == "wa":
+            return self.backend.wa.w_ctx
+        return self.engine.ctx
+
+    @property
+    def cache_ctx(self) -> ShardingCtx:
+        """Rules the KV-cache leaves are planned under (the A domain for
+        the WA backend; the engine's own rules when colocated)."""
+        return self.backend.cache_ctx
+
+
+def classify(name: str) -> str:
+    for suffix, kind in _KINDS:
+        if suffix in name:
+            return kind
+    return "other"
+
+
+def _arg_roles(step: CompiledStep, params_aval, caches_aval) \
+        -> Dict[str, int]:
+    """Locate the params / caches arguments by pytree structure. The first
+    caches-shaped arg wins (serve_admit also takes a batch-1 caches-shaped
+    ``single`` operand in position 1)."""
+    roles: Dict[str, int] = {}
+    p_struct = jax.tree_util.tree_structure(params_aval)
+    c_struct = jax.tree_util.tree_structure(caches_aval)
+    for i, a in enumerate(step.abstract_args or ()):
+        s = jax.tree_util.tree_structure(a)
+        if "params" not in roles and s == p_struct:
+            roles["params"] = i
+        elif "caches" not in roles and s == c_struct:
+            roles["caches"] = i
+    return roles
+
+
+def build_cell(spec: CellSpec, mesh) -> Cell:
+    cfg = ASSIGNED[spec.arch].reduced().replace(dtype="float32")
+    if spec.kv_dtype:
+        cfg = cfg.replace(kv_dtype=spec.kv_dtype)
+    api = build_model(cfg)
+    params_aval = jax.eval_shape(lambda: api.init(jax.random.key(0)))
+    ctx = ShardingCtx(mesh, sub_operator()) if mesh is not None else NULL_CTX
+    rt = StaticRuntime(mesh)
+    eng = ServingEngine(api, ctx, spec.slots, spec.prompt_len, runtime=rt,
+                        mode="continuous", max_new_cap=spec.max_new_cap,
+                        block_size=spec.block_size,
+                        kv_bucket_chunk=spec.kv_bucket_chunk,
+                        prefill_chunk=spec.prefill_chunk,
+                        backend=spec.backend, a_shards=spec.a_shards)
+    eng._prepare(params_aval)               # compiles; runs nothing
+    caches_aval = eng._caches_aval
+    cell = Cell(spec, cfg, api, mesh, eng, rt, params_aval, caches_aval)
+    for (name, _mesh_id, _sig), step in sorted(rt._cache.items(),
+                                               key=lambda kv: kv[0][0]):
+        cell.records.append(ProgramRecord(
+            name, step, classify(name),
+            _arg_roles(step, params_aval, caches_aval)))
+    return cell
+
+
+def make_mesh(data: int, model: int):
+    """(data, model) mesh over the visible devices — with
+    ``--xla_force_host_platform_device_count`` these are host devices and
+    the whole verification run needs no accelerator."""
+    devs = np.array(jax.devices()[:data * model]).reshape(data, model)
+    from jax.sharding import Mesh
+    return Mesh(devs, ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Verification matrices
+# ---------------------------------------------------------------------------
+
+def ci_matrix() -> List[CellSpec]:
+    """Both backends × {dense, int8} × a_shards {1, 4} (the CI job)."""
+    out = []
+    for backend in ("colocated", "wa"):
+        for kv in (None, "int8"):
+            for sh in (1, 4):
+                kvs = kv or "dense"
+                out.append(CellSpec(
+                    label=f"{backend}-{kvs}-a{sh}",
+                    backend=backend, kv_dtype=kv, a_shards=sh))
+    return out
+
+
+def full_matrix() -> List[CellSpec]:
+    """The acceptance matrix: CI cells + monolithic admission, a_shards=2
+    and the per-step (T=1) decode program."""
+    out = ci_matrix()
+    for backend in ("colocated", "wa"):
+        out.append(CellSpec(label=f"{backend}-dense-a1-mono",
+                            backend=backend, prefill_chunk=0))
+        out.append(CellSpec(label=f"{backend}-dense-a2",
+                            backend=backend, a_shards=2))
+    out.append(CellSpec(label="wa-dense-a1-T1", backend="wa", block_size=1))
+    return out
+
+
+MATRICES = {"ci": ci_matrix, "full": full_matrix}

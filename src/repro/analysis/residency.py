@@ -1,0 +1,188 @@
+"""Residency checker (pass 1).
+
+Invariant (paper §3.1): KV stays resident in the A domain — under the WA
+backend the cache's sequence axis is sharded over the model axis
+(``seq_sharded_kv``) and every serving program must consume AND produce the
+cache in that layout; weights stay planned under the W-domain rules. The
+failure this guards is exactly the PR 5 reshape bug: GSPMD cannot
+back-propagate a shard-major annotation through a reshape, so one dropped
+``with_sharding_constraint`` makes the compiled program accept a REPLICATED
+cache — every device holds (and updates) the full KV, silently.
+
+Checks, per serving program on a real (dry-run) mesh:
+
+  R1  WA cells: each KV leaf's compiled input sharding is equivalent to
+      the A-domain plan whenever that plan shards the sequence/shard axis
+      → ERROR on mismatch (the bug class above).
+  R2  cache coherence: every program in a cell agrees on each cache leaf's
+      input sharding, and each donating program's OUTPUT cache sharding
+      equals its input (donated buffers round-trip stably; a disagreement
+      = one full cache reshard per dispatch) → ERROR.
+  R3  weight placement: compiled weight shardings vs the W-domain plan
+      (``param_specs``). The serving driver feeds uncommitted params, so
+      GSPMD may legitimately pick replication for small leaves → WARNING
+      by default, ERROR under strict_weights.
+  R4  no cache-sized collectives: any collective moving ≥ one full
+      per-layer KV slice per dispatch means KV crosses domains → ERROR.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.kv.cache import KVCache
+from repro.launch.hlo_analysis import parse_collectives
+from repro.models.param_specs import cache_specs, param_specs
+from repro.analysis.findings import Report
+from repro.analysis.programs import Cell, ProgramRecord
+
+PASS = "residency"
+
+
+_KV_FIELDS = ("k", "v", "k_scale", "v_scale", "length")
+
+
+def _leaf_paths(tree) -> List[str]:
+    # KVCache registers flat children (no keypaths) — keystr would print
+    # "<flat index N>"; name its fields so diagnostics are actionable
+    if isinstance(tree, KVCache):
+        kids = (tree.k, tree.v, tree.k_scale, tree.v_scale, tree.length)
+        return [f".{name}" for name, kid in zip(_KV_FIELDS, kids)
+                if kid is not None]
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) for path, _leaf in flat]
+
+
+def _shardings_for_arg(rec: ProgramRecord, role: str):
+    """Flat list of compiled input shardings for the given role's arg."""
+    idx = rec.arg_roles.get(role)
+    if idx is None:
+        return None
+    per_arg = rec.step.compiled.input_shardings[0]
+    return jax.tree_util.tree_leaves(per_arg[idx])
+
+
+def _output_cache_shardings(rec: ProgramRecord, caches_aval):
+    """Compiled output shardings of the caches subtree, or None when the
+    program's output does not lead with a caches-shaped tree."""
+    out_sh = rec.step.compiled.output_shardings
+    c_struct = jax.tree_util.tree_structure(caches_aval)
+    if jax.tree_util.tree_structure(out_sh) == c_struct:
+        return jax.tree_util.tree_leaves(out_sh)
+    if isinstance(out_sh, tuple) and out_sh and\
+            jax.tree_util.tree_structure(out_sh[0]) == c_struct:
+        return jax.tree_util.tree_leaves(out_sh[0])
+    return None
+
+
+def _equiv(a, b, ndim: int) -> bool:
+    try:
+        return a.is_equivalent_to(b, ndim)
+    except (TypeError, ValueError):
+        return False
+
+
+def check_residency(cell: Cell, report: Report,
+                    strict_weights: bool = False):
+    if cell.mesh is None:
+        report.info(PASS, "<cell>", cell.spec.label,
+                    "no mesh: residency is vacuous on a single device")
+        return
+    caches_aval = cell.caches_aval
+    cache_paths = _leaf_paths(caches_aval)
+    cache_leaves = jax.tree_util.tree_leaves(caches_aval)
+    exp_specs = jax.tree_util.tree_leaves(
+        cache_specs(caches_aval, cell.cache_ctx), is_leaf=lambda x:
+        isinstance(x, jax.sharding.PartitionSpec))
+    seen: Dict[str, tuple] = {}          # leaf path → (program, sharding)
+
+    for rec in cell.records:
+        # R4: cache-sized collectives
+        _check_cache_collectives(cell, rec, caches_aval, report)
+        # R3: weight placement
+        _check_weights(cell, rec, report, strict_weights)
+        got = _shardings_for_arg(rec, "caches")
+        if got is None:
+            continue
+        # R1: A-domain plan adherence (the planned-sharded leaves)
+        for path, leaf, spec, sh in zip(cache_paths, cache_leaves,
+                                        exp_specs, got):
+            planned = NamedSharding(cell.mesh, spec)
+            plan_shards = any(p is not None for p in spec)
+            if plan_shards and not _equiv(sh, planned, len(leaf.shape)):
+                detail = ("compiled REPLICATED — every device holds the "
+                          "full KV (the PR 5 reshape-dropped-annotation "
+                          "failure)") if sh.is_fully_replicated else\
+                    f"compiled {sh}"
+                report.error(
+                    PASS, rec.name, f"caches{path}",
+                    f"KV leaf planned {spec} in the "
+                    f"{cell.cache_ctx.rules.name} domain but {detail}; "
+                    "re-pin the cache operand with ann(..., 'kv_seq', ...)")
+            # R2a: cross-program coherence
+            prev = seen.get(path)
+            if prev is None:
+                seen[path] = (rec.name, sh)
+            elif not _equiv(sh, prev[1], len(leaf.shape)):
+                report.error(
+                    PASS, rec.name, f"caches{path}",
+                    f"cache leaf sharding {sh} disagrees with "
+                    f"{prev[0]}'s {prev[1]} — the donated cache buffer is "
+                    "resharded every time dispatch alternates between "
+                    "these programs")
+        # R2b: donated output == input (round-trip stability)
+        out_sh = _output_cache_shardings(rec, caches_aval)
+        if out_sh is not None and rec.step.donate_argnums:
+            for path, leaf, ish, osh in zip(cache_paths, cache_leaves,
+                                            got, out_sh):
+                if not _equiv(ish, osh, len(leaf.shape)):
+                    report.error(
+                        PASS, rec.name, f"caches{path}",
+                        f"donated cache leaf enters as {ish} but is "
+                        f"produced as {osh} — the donation aliases "
+                        "mismatched layouts (reshard per dispatch)")
+
+
+def _check_weights(cell: Cell, rec: ProgramRecord, report: Report,
+                   strict: bool):
+    got = _shardings_for_arg(rec, "params")
+    if got is None:
+        return
+    paths = _leaf_paths(cell.params_aval)
+    leaves = jax.tree_util.tree_leaves(cell.params_aval)
+    specs = jax.tree_util.tree_leaves(
+        param_specs(cell.params_aval, cell.w_ctx), is_leaf=lambda x:
+        isinstance(x, jax.sharding.PartitionSpec))
+    emit = report.error if strict else report.warning
+    for path, leaf, spec, sh in zip(paths, leaves, specs, got):
+        plan_shards = any(p is not None for p in spec)
+        planned = NamedSharding(cell.mesh, spec)
+        if plan_shards and not _equiv(sh, planned, len(leaf.shape)):
+            emit(PASS, rec.name, f"params{path}",
+                 f"weight planned {spec} under "
+                 f"{cell.w_ctx.rules.name} but compiled "
+                 f"{'replicated' if sh.is_fully_replicated else str(sh)} — "
+                 "the leaf materializes outside its W-domain shard "
+                 "(cache-residency budget assumes the plan)")
+
+
+def _check_cache_collectives(cell: Cell, rec: ProgramRecord, caches_aval,
+                             report: Report):
+    if not isinstance(caches_aval, KVCache):
+        return
+    k = caches_aval.k                     # (L, B, n_kv, S, hd)
+    slice_bytes = int(np.prod(k.shape[1:], dtype=np.int64)) * k.dtype.itemsize
+    mesh_shape = tuple(cell.mesh.devices.shape)
+    axes = tuple(cell.mesh.axis_names)
+    summary = parse_collectives(rec.step.compiled.as_text(), mesh_shape, axes)
+    for op in summary.ops:
+        if op.operand_bytes >= slice_bytes:
+            report.error(
+                PASS, rec.name, op.kind,
+                f"collective moves {int(op.operand_bytes)} B ≥ one full "
+                f"per-layer KV slice ({slice_bytes} B) every dispatch — "
+                "the cache is crossing domains instead of staying "
+                f"A-resident ({op.line})")

@@ -1,0 +1,133 @@
+"""Static-verifier CLI: ``python -m repro.analysis.verify``.
+
+Builds the serving-program matrix on a dry-run host-device mesh
+(``--xla_force_host_platform_device_count`` — no accelerator needed) and
+runs every pass over every compiled program. Exit code 0 iff no ERROR
+findings.
+
+    python -m repro.analysis.verify                    # full matrix
+    python -m repro.analysis.verify --preset ci        # the CI matrix
+    python -m repro.analysis.verify --mesh 1,8 --strict-weights
+
+NOTE: device forcing must happen before jax initializes — this module
+imports jax (and everything that imports jax) only inside ``main``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _parse(argv):
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.verify",
+        description="static invariant verifier for the AOT serving programs")
+    p.add_argument("--preset", choices=("ci", "full"), default="full",
+                   help="cell matrix: ci = both backends × {dense,int8} × "
+                        "a_shards {1,4}; full adds monolithic admission, "
+                        "a_shards=2 and T=1 (default)")
+    p.add_argument("--mesh", default="2,4", metavar="DATA,MODEL",
+                   help="dry-run mesh shape (default 2,4)")
+    p.add_argument("--no-mesh", action="store_true",
+                   help="single-device run (residency/routing vacuous; "
+                        "fast syntax-level gate)")
+    p.add_argument("--strict-weights", action="store_true",
+                   help="weight-placement mismatches become errors")
+    p.add_argument("--cell", action="append", default=None,
+                   help="only cells whose label contains this substring "
+                        "(repeatable)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write findings as JSON")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="include INFO findings in the report")
+    return p.parse_args(argv)
+
+
+def _force_devices(n: int):
+    if "jax" in sys.modules:
+        import jax
+        if len(jax.devices()) < n:
+            raise RuntimeError(
+                f"jax already initialized with {len(jax.devices())} "
+                f"device(s) but the mesh needs {n}; run this CLI in a "
+                "fresh process")
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] =\
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+
+
+def verify_cell(cell, strict_weights: bool = False):
+    """Run every pass over one built cell; returns the cell's Report."""
+    from repro.analysis import (compile_once, host_sync, kernel_bounds,
+                                residency, routing_check)
+    from repro.analysis.findings import Report
+    report = Report()
+    residency.check_residency(cell, report, strict_weights=strict_weights)
+    compile_once.check_compile_once(cell, report)
+    host_sync.check_host_sync(cell, report)
+    routing_check.check_routing(cell, report)
+    kernel_bounds.check_kernel_bounds(cell, report)
+    return report
+
+
+def main(argv=None) -> int:
+    args = _parse(argv if argv is not None else sys.argv[1:])
+    mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+    if not args.no_mesh:
+        _force_devices(int(mesh_shape[0] * mesh_shape[1]))
+
+    from repro.analysis.findings import ERROR, Report
+    from repro.analysis.programs import MATRICES, build_cell, make_mesh
+
+    specs = MATRICES[args.preset]()
+    if args.cell:
+        specs = [s for s in specs
+                 if any(sub in s.label for sub in args.cell)]
+        if not specs:
+            print(f"no cells match {args.cell}", file=sys.stderr)
+            return 2
+    mesh = None if args.no_mesh else make_mesh(*mesh_shape)
+
+    total = Report()
+    rows = []
+    t_all = time.monotonic()
+    for spec in specs:
+        t0 = time.monotonic()
+        print(f"==> {spec.describe()}", flush=True)
+        cell = build_cell(spec, mesh)
+        report = verify_cell(cell, strict_weights=args.strict_weights)
+        dt = time.monotonic() - t0
+        n_err = len(report.errors)
+        n_warn = len(report.warnings)
+        programs = [r.name for r in cell.records]
+        print(f"    {len(programs)} programs, {n_err} error(s), "
+              f"{n_warn} warning(s)  [{dt:.1f}s]", flush=True)
+        if report.findings:
+            for line in report.format(verbose=args.verbose).splitlines():
+                print(f"    {line}")
+        total.extend(report)
+        rows.append({"cell": spec.label, "programs": programs,
+                     "errors": n_err, "warnings": n_warn,
+                     "seconds": round(dt, 2),
+                     "findings": [f.__dict__ for f in report.findings]})
+
+    dt_all = time.monotonic() - t_all
+    c = total.counts()
+    verdict = "PASS" if total.ok else "FAIL"
+    print(f"\n{verdict}: {len(specs)} cell(s), "
+          f"{c.get(ERROR, 0)} error(s), "
+          f"{c.get('warning', 0)} warning(s) in {dt_all:.1f}s")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"verdict": verdict, "cells": rows}, fh, indent=2)
+        print(f"wrote {args.json}")
+    return 0 if total.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

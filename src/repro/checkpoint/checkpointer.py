@@ -18,7 +18,6 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import tempfile
 from typing import Any, Dict, Optional
 
 import jax
@@ -111,7 +110,6 @@ def restore_pytree(template, directory: str, step: int,
 
     # rebuild in template order
     flat, treedef = jax.tree_util.tree_flatten(template)
-    keys = sorted(_leaf_paths(template).keys())
     paths = jax.tree_util.tree_leaves_with_path(template)
     ordered = []
     for path, _ in paths:

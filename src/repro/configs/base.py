@@ -7,7 +7,7 @@ key in runtime/static_runtime.py, mirroring the paper's static shard→core maps
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,7 @@ Each cell is (arch × shape); ``mode`` selects which step function is lowered:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclass(frozen=True)

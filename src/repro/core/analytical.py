@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import ModelConfig
 
@@ -72,7 +72,6 @@ def kv_bytes_per_token(cfg: ModelConfig, ctx_len: int,
                        bytes_per_el: float = 1.0) -> float:
     """KV working set touched to decode ONE token (whole context)."""
     if cfg.family == "ssm":
-        d_in = cfg.ssm.d_inner(cfg.d_model)
         nh = cfg.ssm.n_heads(cfg.d_model)
         return cfg.n_layers * nh * cfg.ssm.head_dim * cfg.ssm.d_state * 4.0
     kinds = cfg.block_kinds()

@@ -22,9 +22,8 @@ Pod strategies for the multi-pod mesh:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +32,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig
 from repro.models.param_specs import cache_specs, param_specs
-from repro.models.registry import DECODE_SLACK, ModelAPI, build_model
+from repro.models.registry import DECODE_SLACK, build_model
 from repro.models.sharding import (ExecutionRules, ShardingCtx, fsdp,
                                    operator_centric, seq_sharded_kv,
                                    sub_operator)

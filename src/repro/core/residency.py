@@ -50,11 +50,11 @@ def plan(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
     batch = shape.global_batch
     # paradox: in-flight requests ≥ pp_depth ⇒ per-domain KV is depth-invariant
     in_flight = batch * max(pp_depth, 1)
-    kv_total = kv_bytes_per_token(cfg, ctx, dtype_bytes(cfg, kv=True)) \
-        * batch if shape.is_decode else \
+    kv_total = kv_bytes_per_token(cfg, ctx, dtype_bytes(cfg, kv=True))\
+        * batch if shape.is_decode else\
         kv_bytes_per_token(cfg, ctx, dtype_bytes(cfg, kv=True)) * batch
     kv_per_chip = kv_total / n_chips
-    paradox = kv_bytes_per_token(cfg, ctx, dtype_bytes(cfg, kv=True)) \
+    paradox = kv_bytes_per_token(cfg, ctx, dtype_bytes(cfg, kv=True))\
         * in_flight / max(pp_depth, 1)   # ∝ Layers×Batch×Ctx — p cancels
 
     opt = 3 * wb_total * 2 if train else 0.0    # f32 master+m+v ≈ 12B/param @bf16
@@ -65,7 +65,7 @@ def plan(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
     notes = []
     if not vmem_ok:
         notes.append(f"weights/chip {w_per_chip/1e6:.0f}MB > VMEM — "
-                     f"HBM-streamed (gemv kernel regime)")
+                     "HBM-streamed (gemv kernel regime)")
     if wa_prof:
         notes.append("WA separation profitable: co-located hot set exceeds "
                      "fast-memory budget (paper Fig 9 high-pressure regime)")
@@ -80,7 +80,7 @@ def paradox_table(cfg: ModelConfig, ctx_len: int, batch: int,
     for p in depths:
         layers_per = cfg.n_layers / p
         in_flight = p * batch
-        per_domain = (layers_per / cfg.n_layers) * in_flight * \
+        per_domain = (layers_per / cfg.n_layers) * in_flight *\
             kv_bytes_per_token(cfg, ctx_len, dtype_bytes(cfg, kv=True))
         out[p] = per_domain
     return out

@@ -51,7 +51,7 @@ only ever sees routed activations and per-row RoPE phases (DESIGN.md §3).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +62,7 @@ from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig
 from repro.core.residency import plan as residency_plan
 from repro.models import common
-from repro.models.attention import chunk_attention, decode_attention, \
+from repro.models.attention import chunk_attention, decode_attention,\
     decode_attention_split, qkv_project
 from repro.models.registry import make_decode_block
 from repro.models.sharding import ShardingCtx, seq_sharded_kv, sub_operator
@@ -115,6 +115,40 @@ def routing_bytes(cfg: ModelConfig, batch: int, bytes_per_el: int = 2) -> int:
     """Per-decoded-token W↔A activation traffic: 2 hops per layer of the
     (B, d_model) embedding — the paper's 'only embeddings move'."""
     return 2 * cfg.n_layers * batch * cfg.d_model * bytes_per_el
+
+
+# ---------------------------------------------------------------------------
+# Statically-identifiable hop markers
+# ---------------------------------------------------------------------------
+# The sharding-mode W↔A hops are plain with_sharding_constraint boundaries,
+# which on reduced test configs can degrade to a replicated spec (e.g. 4
+# heads on an 8-wide model axis) and become indistinguishable from any other
+# annotation in the jaxpr. Wrapping each hop in a named inner jit gives the
+# static verifier (repro.analysis.routing_check) a stable anchor: a ``pjit``
+# eqn whose name is WA_HOP_TO_A / WA_HOP_TO_W, regardless of how the spec
+# degraded. Semantically identical to the bare constraint.
+
+WA_HOP_TO_A = "wa_hop_to_a"
+WA_HOP_TO_W = "wa_hop_to_w"
+
+
+def _make_hop(tag: str):
+    def hop(x, sharding):
+        return jax.lax.with_sharding_constraint(x, sharding)
+    hop.__name__ = tag
+    return jax.jit(hop, static_argnums=(1,))
+
+
+_hop_to_a = _make_hop(WA_HOP_TO_A)
+_hop_to_w = _make_hop(WA_HOP_TO_W)
+
+
+def _tagged_ann(hop, ctx: ShardingCtx, x, logical):
+    """ctx.ann with the constraint routed through a named hop marker."""
+    if ctx.mesh is None or ctx.mesh.empty:
+        return x
+    spec = ctx.spec(tuple(logical), x.shape)
+    return hop(x, NamedSharding(ctx.mesh, spec))
 
 
 # ---------------------------------------------------------------------------
@@ -178,8 +212,8 @@ class WADisaggregated:
         if self.routing != "sharding":
             raise ValueError(
                 f"{what} must compile into ONE program; eager device_put "
-                f"routing cannot cross submeshes inside a jit trace — build "
-                f"WADisaggregated(routing='sharding') for the AOT path")
+                "routing cannot cross submeshes inside a jit trace — build "
+                "WADisaggregated(routing='sharding') for the AOT path")
 
     # -- single layer pieces (weight side) ------------------------------
     def _w_qkv(self, lp, x, positions):
@@ -249,6 +283,25 @@ class WADisaggregated:
         o = decode_attention(q[:, 0], kc, vc, mask, self.a_ctx)
         return (k_l, v_l, ks_l, vs_l), o
 
+    def _pin_cache_stacks(self, k_st, v_st, ks_st, vs_st):
+        """Pin the resident KV stacks to the A-domain layout at program
+        ENTRY. GSPMD infers each program's cache placement independently —
+        on a data-sharded mesh the chunk program used to compile its cache
+        input batch-REPLICATED while the decode block compiled it
+        batch-sharded, so the donated buffer resharded at every admission
+        boundary (found by the repro.analysis residency pass; invisible on
+        data=1 test meshes). The entry pin makes every WA program agree on
+        the planned A-domain layout."""
+        if self.routing != "sharding":
+            return k_st, v_st, ks_st, vs_st
+        ann = self.a_ctx.ann
+        k_st = ann(k_st, None, "batch", "kv_heads", "kv_seq", "head_dim")
+        v_st = ann(v_st, None, "batch", "kv_heads", "kv_seq", "head_dim")
+        if ks_st is not None:
+            ks_st = ann(ks_st, None, "batch", "kv_heads", "kv_seq", None)
+            vs_st = ann(vs_st, None, "batch", "kv_heads", "kv_seq", None)
+        return k_st, v_st, ks_st, vs_st
+
     # -- route helpers ------------------------------------------------------
     def _to_a(self, x):
         """W → A hop. Eager: a cross-submesh device_put (lowers to ICI).
@@ -259,7 +312,8 @@ class WADisaggregated:
         if self.routing == "device_put":
             return jax.device_put(x, NamedSharding(self.a_mesh,
                                                    P("data", None, None)))
-        return self.a_ctx.ann(x, "batch", "seq", "act_heads", "head_dim")
+        return _tagged_ann(_hop_to_a, self.a_ctx, x,
+                           ("batch", "seq", "act_heads", "head_dim"))
 
     def _to_w(self, x):
         """A → W hop: the attention output re-shards onto the W domain's
@@ -267,7 +321,8 @@ class WADisaggregated:
         if self.routing == "device_put":
             return jax.device_put(x, NamedSharding(self.w_mesh,
                                                    P("data", None, None)))
-        return self.w_ctx.ann(x, "batch", "seq", "act_heads", "head_dim")
+        return _tagged_ann(_hop_to_w, self.w_ctx, x,
+                           ("batch", "seq", "act_heads", "head_dim"))
 
     # -- decode step --------------------------------------------------------
     def _layer_loop(self, params, cache: KVCache, tokens, positions, attend):
@@ -279,8 +334,8 @@ class WADisaggregated:
         if cfg.pos == "learned":
             x = x + jnp.take(params["pos_embed"], positions[:, 0],
                              axis=0)[:, None].astype(x.dtype)
-        k_st, v_st = cache.k, cache.v
-        ks_st, vs_st = cache.k_scale, cache.v_scale
+        k_st, v_st, ks_st, vs_st = self._pin_cache_stacks(
+            cache.k, cache.v, cache.k_scale, cache.v_scale)
         for i in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[i], params["blocks"])
             q, k, v = self._w_qkv(lp, x, positions)
@@ -373,13 +428,13 @@ class WADisaggregated:
         elif cfg.pos == "sinusoidal":
             table = common.sinusoidal_pos(cache.k.shape[3], cfg.d_model)
             x = x + jnp.take(table, positions, axis=0)[None].astype(x.dtype)
-        k_st, v_st = cache.k, cache.v
-        ks_st, vs_st = cache.k_scale, cache.v_scale
+        k_st, v_st, ks_st, vs_st = self._pin_cache_stacks(
+            cache.k, cache.v, cache.k_scale, cache.v_scale)
         S = cache.k.shape[3]
         # causal over absolute positions: query i attends cache slots
         # <= start+i (padding queries i >= valid_len attend zeros/stale
         # slots — their outputs are discarded)
-        mask = jnp.arange(S, dtype=jnp.int32)[None, :] \
+        mask = jnp.arange(S, dtype=jnp.int32)[None, :]\
             <= positions[:, None]                                      # (C,S)
         for i in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[i], params["blocks"])

@@ -13,7 +13,6 @@ from queue import Queue
 from typing import Dict, Iterator, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig

@@ -15,7 +15,7 @@ allocation of the GB-scale KV in steady state).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +67,8 @@ def init_kv_cache(n_layers: int, batch: int, n_kv: int, max_len: int,
     # k/v (and the scales) must be DISTINCT buffers: the serving engine
     # donates the whole cache pytree per step, and XLA rejects donating one
     # buffer twice
-    mk = lambda s, dt: jnp.zeros(s, dt)
+    def mk(s, dt):
+        return jnp.zeros(s, dt)
     sshape = shape[:-1] + (1,)
     return KVCache(mk(shape, store), mk(shape, store),
                    mk(sshape, jnp.float32) if quantized else None,
@@ -171,8 +172,9 @@ def layer_read_bucket(k_l, v_l, k_scale_l, v_scale_l, bucket: int,
     ``bucket`` of 0 or >= S is the full-extent read."""
     S = k_l.shape[2]
     if bucket and bucket < S:
-        cut = lambda a: (None if a is None
-                         else jax.lax.slice_in_dim(a, 0, bucket, axis=2))
+        def cut(a):
+            return (None if a is None
+                    else jax.lax.slice_in_dim(a, 0, bucket, axis=2))
         k_l, v_l = cut(k_l), cut(v_l)
         k_scale_l, v_scale_l = cut(k_scale_l), cut(v_scale_l)
     return layer_read(k_l, v_l, k_scale_l, v_scale_l, dtype)

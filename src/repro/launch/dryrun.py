@@ -18,12 +18,11 @@ import argparse
 import json
 import time
 import traceback
-from typing import Optional
 
 import jax
 import numpy as np
 
-from repro.configs.registry import ASSIGNED, REGISTRY, get_config
+from repro.configs.registry import ASSIGNED, get_config
 from repro.configs.shapes import ALL_SHAPES, SHAPES, applicable
 from repro.core.execution import make_step
 from repro.launch.hlo_analysis import parse_collectives, ring_traffic_bytes
@@ -139,8 +138,6 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             lowered = bundle.lower()
             compiled = lowered.compile()
             mem = compiled.memory_analysis()
-            from repro.core.compat import cost_analysis
-            cost = cost_analysis(compiled)
             hlo = compiled.as_text()
         chips = int(np.prod(mesh.devices.shape))
         coll = parse_collectives(hlo, mesh.devices.shape, mesh.axis_names)

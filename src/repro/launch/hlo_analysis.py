@@ -23,7 +23,7 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -119,7 +119,6 @@ def _axes_of_group(group: List[int], mesh_shape: Tuple[int, ...],
     """Classify which mesh axes a replica group spans by id strides."""
     if len(group) <= 1:
         return ()
-    strides = []
     n = len(mesh_shape)
     # per-axis stride in the flattened id space
     ax_stride = [int(np.prod(mesh_shape[i + 1:])) for i in range(n)]
@@ -167,6 +166,62 @@ def parse_collectives(hlo_text: str, mesh_shape: Tuple[int, ...],
             ob = rb
         summary.ops.append(CollectiveOp(kind, rb, ob, gsize, axes, ls[:160]))
     return summary
+
+
+# ---------------------------------------------------------------------------
+# Static-verifier helpers (repro.analysis): donation + host-op audit
+# ---------------------------------------------------------------------------
+
+_ALIAS_ENTRY_RE = re.compile(r"\{\s*([\d,\s]*)\s*\}\s*:\s*\(\s*(\d+)")
+_HOST_OPS = ("infeed", "outfeed", "send", "recv", "send-done", "recv-done")
+_HOST_CALL_RE = re.compile(r"callback|py_func|host", re.I)
+_CUSTOM_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+
+def parse_input_output_alias(hlo_text: str) -> Dict[Tuple[int, ...], int]:
+    """Donation map from the HloModule header:
+
+        input_output_alias={ {0}: (12, {}, may-alias), {1}: (13, ...) }
+
+    → {output_index_tuple: flat_parameter_number}. An empty dict means XLA
+    kept NO buffer donation — every "donated" input is actually copied."""
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" not in line:
+            continue
+        seg = line.split("input_output_alias=", 1)[1]
+        # header is one line; entries are {out_idx}: (param, {param_idx}, kind)
+        out: Dict[Tuple[int, ...], int] = {}
+        for m in _ALIAS_ENTRY_RE.finditer(seg):
+            idx = tuple(int(x) for x in
+                        m.group(1).replace(" ", "").split(",") if x)
+            out[idx] = int(m.group(2))
+        return out
+    return {}
+
+
+def parse_host_ops(hlo_text: str) -> List[str]:
+    """Ops that imply a host round-trip inside the compiled program:
+    infeed/outfeed, send/recv, and python-callback custom-calls. A decode
+    program containing any of these synchronizes with the host every
+    dispatch — exactly the per-step sync the macro-step engine exists to
+    remove."""
+    hits: List[str] = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls or ls.startswith("//"):
+            continue
+        rest = ls.split(" = ", 1)[1]
+        opm = re.match(r"(\([^)]*\)|\S+)\s+([\w-]+)", rest)
+        if not opm:
+            continue
+        kind = opm.group(2)
+        if kind in _HOST_OPS:
+            hits.append(ls[:200])
+        elif kind.startswith("custom-call"):
+            tm = _CUSTOM_TARGET_RE.search(ls)
+            if tm and _HOST_CALL_RE.search(tm.group(1)):
+                hits.append(ls[:200])
+    return hits
 
 
 def ring_traffic_bytes(summary: CollectiveSummary) -> float:

@@ -29,8 +29,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     if len(devices) < n:
         raise RuntimeError(
             f"need {n} devices for mesh {shape}, have {len(devices)} — "
-            f"run under launch/dryrun.py (sets "
-            f"--xla_force_host_platform_device_count=512)")
+            "run under launch/dryrun.py (sets "
+            "--xla_force_host_platform_device_count=512)")
     return Mesh(np.array(devices[:n]).reshape(shape), axes)
 
 

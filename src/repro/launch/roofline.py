@@ -11,7 +11,7 @@ train; 2·N·D + attention-term for inference steps.
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig

@@ -17,7 +17,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.registry import get_config

@@ -14,7 +14,7 @@ Two regimes, mirroring the paper's kernel split (§4.2):
 
 The Pallas TPU kernels in ``repro.kernels.flash_decode`` implement the decode
 path for real hardware; this module is the mathematically identical jnp form
-used for CPU dry-runs (DESIGN.md §9).
+used for CPU dry-runs (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -24,10 +24,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.flash_decode.combine import combine_partial_stats
-from repro.kv.cache import KVCache, valid_mask
 from repro.models import common
 from repro.models.common import scan_unroll
 from repro.models.sharding import ShardingCtx

@@ -13,19 +13,17 @@ growing self-attention KV lives on the attention domain (DESIGN.md §6).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.kv.cache import (KVCache, bump_length, init_kv_cache, valid_mask)
+from repro.kv.cache import KVCache, init_kv_cache
 from repro.models import common
-from repro.models.attention import (decode_attention, flash_attention,
-                                    make_attn_params)
+from repro.models.attention import decode_attention, make_attn_params
 from repro.models.sharding import ShardingCtx
-from repro.models.transformer import (block_decode, make_ffn_params,
-                                      ffn_apply, write_prefill)
+from repro.models.transformer import make_ffn_params, ffn_apply, write_prefill
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,6 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.models.sharding import ShardingCtx

@@ -19,10 +19,10 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import LOCAL_ATTN, RGLRU, ModelConfig
-from repro.kv.cache import KVCache, append_kv, bump_length, init_kv_cache
+from repro.configs.base import RGLRU, ModelConfig
+from repro.kv.cache import KVCache, init_kv_cache
 from repro.kv.state import (RecurrentState, causal_conv, conv_step,
-                            init_rglru_state, read_state, write_state)
+    init_rglru_state)
 from repro.models import common
 from repro.models.sharding import ShardingCtx
 from repro.models.transformer import (block_decode, block_full_seq,

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kv.state import (RecurrentState, causal_conv, conv_step,
-                            init_ssd_state, read_state, write_state)
+    init_ssd_state)
 from repro.models import common
 from repro.models.sharding import ShardingCtx
 

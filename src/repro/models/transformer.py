@@ -12,14 +12,13 @@ identical, the collective schedule is not.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.kv.cache import (KVCache, append_kv, bump_length, init_kv_cache,
-                            read_kv, valid_mask)
+from repro.kv.cache import KVCache, init_kv_cache
 from repro.models import common
 from repro.models.attention import (decode_attention, flash_attention,
                                     make_attn_params, qkv_project)
@@ -383,15 +382,12 @@ def write_prefill(cache: KVCache, k_all, v_all, S: int) -> KVCache:
     if cache.window and S > size:
         k_all = k_all[:, :, :, S - size:, :]
         v_all = v_all[:, :, :, S - size:, :]
-        write = size
         # ring alignment: slot of position p is p % size; after S tokens the
         # oldest kept position is S-size ≡ (S-size) % size. Roll so that
         # slot order matches position % size.
         shift = (S - size) % size
         k_all = jnp.roll(k_all, shift, axis=3)
         v_all = jnp.roll(v_all, shift, axis=3)
-    else:
-        write = S
     if cache.is_quantized:
         kq, ks = quantize_kv(k_all)
         vq, vs = quantize_kv(v_all)
@@ -529,8 +525,18 @@ def prefill_chunk(params, cache: KVCache, tokens: jax.Array, slot: jax.Array,
         ys = (k_l, v_l, ks_l, vs_l) if quant else (k_l, v_l)
         return h, ys
 
-    xs = (params["blocks"], cache.k, cache.v) + \
-        ((cache.k_scale, cache.v_scale) if quant else ())
+    # pin the cache stacks to their planned layout at program ENTRY: GSPMD
+    # infers each program's cache placement independently, and on a
+    # data-sharded mesh the chunk program compiled its cache input
+    # batch-REPLICATED while the decode programs compiled it batch-sharded —
+    # one full-cache reshard per admission boundary on the donated buffer
+    # (caught by the repro.analysis residency pass; invisible at data=1)
+    k_st = ctx.ann(cache.k, None, "batch", "kv_heads", "kv_seq", "head_dim")
+    v_st = ctx.ann(cache.v, None, "batch", "kv_heads", "kv_seq", "head_dim")
+    xs = (params["blocks"], k_st, v_st) + \
+        ((ctx.ann(cache.k_scale, None, "batch", "kv_heads", "kv_seq", None),
+          ctx.ann(cache.v_scale, None, "batch", "kv_heads", "kv_seq", None))
+         if quant else ())
     x, ys = jax.lax.scan(body, x, xs, unroll=common.scan_unroll())
     if quant:
         k_new, v_new, ks_new, vs_new = ys

@@ -23,11 +23,9 @@ code path and is unit-tested.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
-import numpy as np
 
 
 class NodeFailure(RuntimeError):

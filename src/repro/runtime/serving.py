@@ -68,9 +68,27 @@ from repro.core.wa import WADisaggregated, routing_bytes
 from repro.kv.cache import KVCache
 from repro.models.attention import bucket_for, kv_buckets
 from repro.models.common import dtype_of
+from repro.models.param_specs import cache_specs
 from repro.models.registry import DECODE_SLACK, ModelAPI
 from repro.models.sharding import ShardingCtx
 from repro.runtime.static_runtime import StaticRuntime
+
+
+def _pin_cache_tree(caches, ctx: ShardingCtx):
+    """Constrain every cache leaf to its planned layout (``cache_specs``).
+
+    Cache-only programs (slot write, slot reset) contain no matmuls and no
+    annotations of their own, so GSPMD sees nothing to anchor on and pins
+    the whole program — including the DONATED cache buffer — to a single
+    device, forcing a full-cache reshard every time dispatch alternates
+    with the model-step programs. Pinning entry and exit keeps every
+    program in a cell on one agreed cache placement."""
+    if ctx.mesh is None or ctx.mesh.empty:
+        return caches
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(ctx.mesh, s)),
+        caches, cache_specs(caches, ctx))
 
 
 @dataclass
@@ -91,7 +109,7 @@ class Request:
 
     @property
     def done(self) -> bool:
-        if self.eos_id >= 0 and self.generated \
+        if self.eos_id >= 0 and self.generated\
                 and self.generated[-1] == self.eos_id:
             return True
         return len(self.generated) >= self.max_new_tokens
@@ -310,20 +328,28 @@ class ExecutorBackend:
         """Static KV bucket set for the block programs. Bucketing applies
         only to prefix-ordered KV caches; recurrent states (and ring
         buffers) get the single full program."""
-        bucketable = isinstance(caches_aval, KVCache) \
+        bucketable = isinstance(caches_aval, KVCache)\
             and not caches_aval.window
         s_max = caches_aval.k.shape[3] if bucketable else 0
         # a_shards > 1 → every bucket must split into equal shard blocks
         # (kv_buckets rounds the chunk up; the engine validated s_max)
-        return kv_buckets(s_max, kv_bucket_chunk, self.a_shards) \
+        return kv_buckets(s_max, kv_bucket_chunk, self.a_shards)\
             if bucketable and kv_bucket_chunk > 0 else (0,)
+
+    @property
+    def cache_ctx(self) -> ShardingCtx:
+        """Sharding ctx that owns the slot caches (A domain under WA)."""
+        return self.ctx
 
     def _build_reset(self, caches_aval, debug_reset_slots):
         if debug_reset_slots and self.api.reset_slot is not None:
             scalar = jnp.zeros((), jnp.int32)
+            cctx = self.cache_ctx
             self._reset = self.rt.compile_step(
                 "serve_reset",
-                lambda c, slot: self.api.reset_slot(c, slot),
+                lambda c, slot: _pin_cache_tree(
+                    self.api.reset_slot(_pin_cache_tree(c, cctx), slot),
+                    cctx),
                 (caches_aval, scalar), donate_argnums=(0,))
 
     @staticmethod
@@ -331,7 +357,7 @@ class ExecutorBackend:
         # active-slot mask: retired slots emit a fixed token id 0 and
         # never advance — finished requests cannot pollute the stream
         nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
-        return jnp.where(active, nxt, 0), \
+        return jnp.where(active, nxt, 0),\
             positions + active.astype(jnp.int32)
 
     def _build_decode_programs(self, params, caches_aval, kv_bucket_chunk,
@@ -357,7 +383,7 @@ class ExecutorBackend:
             rem0 = jnp.zeros((B,), jnp.int32)
             eos0 = jnp.full((B,), -1, jnp.int32)
             for sb in self.buckets:
-                name = f"{prefix}decode_block" if len(self.buckets) == 1 \
+                name = f"{prefix}decode_block" if len(self.buckets) == 1\
                     else f"{prefix}decode_block_s{sb}"
 
                 def block_step(p, caches, tok, pos, act, rem, eos, _sb=sb):
@@ -420,7 +446,7 @@ class ExecutorBackend:
 
     def decode_block(self, params, bucket, last_tok, positions, active,
                      remaining, eos):
-        self.caches, toks, emitted, last_d, pos_d, act_d, rem_d = \
+        self.caches, toks, emitted, last_d, pos_d, act_d, rem_d =\
             self._decode_blocks[bucket](
                 params, self.caches, jnp.asarray(last_tok),
                 jnp.asarray(positions), jnp.asarray(active),
@@ -467,7 +493,9 @@ class ColocatedBackend(ExecutorBackend):
                 return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
 
             def admit_fn(caches, single, slot):
-                return api.write_slot(caches, single, slot)
+                caches = _pin_cache_tree(caches, ctx)
+                return _pin_cache_tree(api.write_slot(caches, single, slot),
+                                       ctx)
 
             toks1 = jnp.zeros((1, P), jnp.int32)
             single_aval, _ = jax.eval_shape(prefill1_fn, params, toks1)
@@ -547,6 +575,10 @@ class WABackend(ExecutorBackend):
 
     name = "wa"
 
+    @property
+    def cache_ctx(self) -> ShardingCtx:
+        return self.wa.a_ctx
+
     def _build_continuous(self, params, caches_aval, kv_bucket_chunk,
                           prefill_chunk, debug_reset_slots):
         api, ctx = self.api, self.ctx
@@ -577,6 +609,31 @@ class WABackend(ExecutorBackend):
                 p, c, t, pos, act, rem, eos, None, block_size=T,
                 kv_bucket=sb))
 
+    # -- W↔A traffic model -------------------------------------------------
+    def expected_routing(self, name: str) -> Tuple[int, int]:
+        """Analytic routing model for ONE dispatch of program ``name``:
+        returns ``(rows, trips)`` meaning the dispatch routes
+        ``trips × routing_bytes(cfg, rows, el)`` W↔A bytes (``trips`` =
+        micro-steps inside the program; a T-block scans T micro-steps).
+        Single source of truth shared by the runtime meter (``_meter``) and
+        the static verifier's routing cross-check
+        (``repro.analysis.routing_check``) — the meter and the compiled
+        programs cannot drift apart without the gate failing."""
+        if name == "serve_wa_admit":
+            return self.prompt_len, 1
+        if name == "serve_wa_prefill_chunk":
+            return self.prefill_chunk, 1
+        if name == "serve_wa_decode":
+            return self.slots, 1
+        if name.startswith("serve_wa_decode_block"):
+            return self.slots, self.block_size
+        raise KeyError(f"no routing model for WA program {name!r}")
+
+    def _meter(self, name: str):
+        rows, trips = self.expected_routing(name)
+        self.routed_bytes += trips * routing_bytes(self.api.config, rows,
+                                                   self._el)
+
     # -- execution (adds the W↔A traffic meter) ---------------------------
     def fresh(self):
         super().fresh()
@@ -586,8 +643,7 @@ class WABackend(ExecutorBackend):
         """Monolithic WA admission: ONE full-width chunk (start 0, the
         padded width valid) — KV lands directly in the slot, no separate
         write-slot copy (the cache never leaves the A domain)."""
-        self.routed_bytes += routing_bytes(self.api.config, self.prompt_len,
-                                           self._el)
+        self._meter("serve_wa_admit")
         self.caches, tok = self._chunk(
             params, self.caches, jnp.asarray(row[None]),
             jnp.asarray(slot, jnp.int32), jnp.asarray(0, jnp.int32),
@@ -595,19 +651,16 @@ class WABackend(ExecutorBackend):
         return tok
 
     def run_chunk(self, params, row, slot, start, valid):
-        self.routed_bytes += routing_bytes(self.api.config,
-                                           self.prefill_chunk, self._el)
+        self._meter("serve_wa_prefill_chunk")
         return super().run_chunk(params, row, slot, start, valid)
 
     def decode_step(self, params, last_tok, positions, active):
-        self.routed_bytes += routing_bytes(self.api.config, self.slots,
-                                           self._el)
+        self._meter("serve_wa_decode")
         return super().decode_step(params, last_tok, positions, active)
 
     def decode_block(self, params, bucket, last_tok, positions, active,
                      remaining, eos):
-        self.routed_bytes += self.block_size * routing_bytes(
-            self.api.config, self.slots, self._el)
+        self._meter("serve_wa_decode_block")
         return super().decode_block(params, bucket, last_tok, positions,
                                     active, remaining, eos)
 
@@ -724,7 +777,7 @@ class ServingEngine:
             if not api.wa_servable:
                 raise ValueError(
                     f"{api.config.family} family has no WA-disaggregated "
-                    f"serving support (DESIGN.md §6)")
+                    "serving support (DESIGN.md §6)")
             resolved_mode = "continuous"
         else:
             # continuous mode needs a decode half (api.decode_block for
@@ -733,7 +786,7 @@ class ServingEngine:
             # monolithic admission)
             decode_ok = (api.decode_block is not None if block_size > 1 else
                          api.decode_slotted is not None)
-            if mode == "auto" and prefill_chunk > 0 \
+            if mode == "auto" and prefill_chunk > 0\
                     and api.prefill_chunk is None:
                 # fall back to monolithic admission — LOUDLY: a benchmark
                 # config that asked for the chunk lane must not quietly
@@ -741,8 +794,8 @@ class ServingEngine:
                 warnings.warn(
                     f"prefill_chunk={prefill_chunk} requested but the "
                     f"{api.config.family} family has no prefill_chunk "
-                    f"support; falling back to monolithic admission (the "
-                    f"chunked-prefill lane is OFF for this engine)",
+                    "support; falling back to monolithic admission (the "
+                    "chunked-prefill lane is OFF for this engine)",
                     UserWarning, stacklevel=2)
                 prefill_chunk = 0
             admit_ok = (api.prefill_chunk is not None if prefill_chunk > 0
@@ -752,11 +805,11 @@ class ServingEngine:
                 raise ValueError(
                     f"{api.config.family} family has no "
                     f"{'chunked-prefill' if prefill_chunk > 0 else 'slotted'} "
-                    f"serving support")
+                    "serving support")
             if mode == "drain" and prefill_chunk > 0:
                 raise ValueError("chunked prefill requires the continuous "
                                  "scheduler (drain prefills the whole batch)")
-            resolved_mode = ("continuous" if slotted_ok else "drain") \
+            resolved_mode = ("continuous" if slotted_ok else "drain")\
                 if mode == "auto" else mode
         self.api = api
         self.ctx = ctx
@@ -782,8 +835,8 @@ class ServingEngine:
         self._caches_aval = jax.eval_shape(
             lambda: api.init_caches(batch_slots,
                                     prompt_len + self.max_new_cap))
-        self._kv_extent = self._caches_aval.k.shape[3] \
-            if isinstance(self._caches_aval, KVCache) \
+        self._kv_extent = self._caches_aval.k.shape[3]\
+            if isinstance(self._caches_aval, KVCache)\
             and not self._caches_aval.window else None
         if self.a_shards > 1:
             # split-KV flash decode shards the *prefix-ordered* KV walk of
@@ -796,26 +849,26 @@ class ServingEngine:
             if self._kv_extent is None:
                 raise ValueError(
                     f"a_shards={self.a_shards} requires a prefix-ordered "
-                    f"(non-windowed) KV-cache family; the "
+                    "(non-windowed) KV-cache family; the "
                     f"{api.config.family} family has no KV sequence axis "
-                    f"to shard")
+                    "to shard")
             if self._kv_extent % self.a_shards:
                 raise ValueError(
                     f"KV extent {self._kv_extent} (prompt_len + "
-                    f"max_new_cap) not divisible by a_shards="
+                    "max_new_cap) not divisible by a_shards="
                     f"{self.a_shards}; every shard must own an equal "
-                    f"contiguous block")
-        if self.prefill_chunk and isinstance(self._caches_aval, KVCache) \
+                    "contiguous block")
+        if self.prefill_chunk and isinstance(self._caches_aval, KVCache)\
                 and self._caches_aval.window:
             raise ValueError("chunked prefill requires a non-windowed KV "
                              "cache (ring order has no per-position write "
                              "offset)")
-        if self.prefill_chunk and self._kv_extent is not None \
+        if self.prefill_chunk and self._kv_extent is not None\
                 and self.prefill_chunk > self._kv_extent:
             raise ValueError(
                 f"prefill_chunk={self.prefill_chunk} exceeds the KV extent "
                 f"{self._kv_extent}; the fixed (1,C) window must fit the "
-                f"cache")
+                "cache")
         self._reset_per_run()
 
     # ------------------------------------------------------------------
@@ -855,7 +908,7 @@ class ServingEngine:
         if r.max_new_tokens < 1:
             raise ValueError(
                 f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
-                f"must be >= 1 (every admission produces a first token)")
+                "must be >= 1 (every admission produces a first token)")
         if r.max_new_tokens > self.max_new_cap:
             raise ValueError(
                 f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
@@ -865,9 +918,9 @@ class ServingEngine:
                 raise ValueError(
                     f"request {r.rid}: prompt length {L} exceeds the static "
                     f"prompt width {self.prompt_len} and would be silently "
-                    f"truncated; raise prompt_len or enable the "
-                    f"chunked-prefill lane (prefill_chunk > 0)")
-        elif self._kv_extent is not None \
+                    "truncated; raise prompt_len or enable the "
+                    "chunked-prefill lane (prefill_chunk > 0)")
+        elif self._kv_extent is not None\
                 and L + r.max_new_tokens > self._kv_extent:
             raise ValueError(
                 f"request {r.rid}: prompt length {L} + "
@@ -1078,7 +1131,7 @@ class ServingEngine:
             out = ex.decode_block(params, sb, sched.last_tok,
                                   sched.positions, active,
                                   sched.remaining, sched.eos)
-            toks, emitted, last_d, pos_d, act_np, rem_d = \
+            toks, emitted, last_d, pos_d, act_np, rem_d =\
                 self._host_sync(*out)
             dt = time.monotonic() - t0
             self.tpot_samples.append(dt / T)

@@ -21,7 +21,7 @@ re-tracing dispatch — benchmarks/fig10_runtime.py measures both on CPU.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -34,6 +34,13 @@ class CompiledStep:
     lowered: Any                     # jax.stages.Lowered (kept for analysis)
     compile_s: float
     calls: int = 0
+    # retained for static analysis (repro.analysis): the traced callable and
+    # its abstract signature let the verifier re-derive the jaxpr of the
+    # EXACT program that serves — no shadow re-implementation to drift
+    fn: Optional[Callable] = None
+    abstract_args: Optional[Tuple] = None
+    donate_argnums: Tuple[int, ...] = ()
+    static_argnums: Tuple[int, ...] = ()
 
     def __call__(self, *args):
         self.calls += 1
@@ -46,6 +53,16 @@ class CompiledStep:
     def memory_analysis(self):
         return self.compiled.memory_analysis()
 
+    def jaxpr(self):
+        """ClosedJaxpr of the step as traced at compile time (for the
+        static verifier's jaxpr-level passes)."""
+        if self.fn is None or self.abstract_args is None:
+            raise ValueError(f"step {self.name!r} kept no trace inputs")
+        if self.static_argnums:
+            raise ValueError(f"step {self.name!r} has static argnums; "
+                             "jaxpr() supports fully-traced steps only")
+        return jax.make_jaxpr(self.fn)(*self.abstract_args)
+
 
 class StaticRuntime:
     """AOT compile cache keyed on (name, mesh, abstract arg signature)."""
@@ -57,8 +74,14 @@ class StaticRuntime:
     # ------------------------------------------------------------------
     @staticmethod
     def _sig(args) -> Tuple:
+        # weak_type participates in the signature: a weakly-typed scalar
+        # (e.g. a bare python int leaking into an operand slot) traces to a
+        # DIFFERENT program than the committed-dtype one and silently
+        # recompiles on the serving path.  The compile-once auditor
+        # (repro.analysis.compile_once) flags any weak-typed leaf.
         leaves = jax.tree_util.tree_leaves(args)
-        return tuple((getattr(x, "shape", None), str(getattr(x, "dtype", "")))
+        return tuple((getattr(x, "shape", None), str(getattr(x, "dtype", "")),
+                      bool(getattr(x, "weak_type", False)))
                      for x in leaves)
 
     def compile_step(self, name: str, fn: Callable, abstract_args: Tuple,
@@ -77,7 +100,10 @@ class StaticRuntime:
         lowered = jitted.lower(*abstract_args)
         compiled = lowered.compile()
         step = CompiledStep(name, compiled, lowered,
-                            compile_s=time.monotonic() - t0)
+                            compile_s=time.monotonic() - t0,
+                            fn=fn, abstract_args=abstract_args,
+                            donate_argnums=tuple(donate_argnums),
+                            static_argnums=tuple(static_argnums))
         self._cache[key] = step
         return step
 

@@ -2,12 +2,9 @@
 host's single device (multi-device behaviour is tested via subprocesses that
 set the flag themselves; see test_distributed.py)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import ASSIGNED, REGISTRY
-from repro.models import NULL_CTX, build_model
 
 
 @pytest.fixture(scope="session")

@@ -1,12 +1,10 @@
 """Multi-device behaviour via SUBPROCESSES that set the host-device-count
 flag themselves (the main test process must keep seeing 1 device)."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -15,8 +13,8 @@ def run_py(code: str, devices: int = 8, timeout: int = 420) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env.pop("XLA_FLAGS", None)
-    prelude = (f"import os\n"
-               f"os.environ['XLA_FLAGS'] = "
+    prelude = ("import os\n"
+               "os.environ['XLA_FLAGS'] = "
                f"'--xla_force_host_platform_device_count={devices}'\n")
     out = subprocess.run([sys.executable, "-c", prelude + textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,

@@ -1,9 +1,8 @@
 """Unit tests for the HLO collective parser (the roofline's data source)."""
-import numpy as np
 
-from repro.launch.hlo_analysis import (CollectiveSummary, _axes_of_group,
-                                       _group_info, _shape_bytes,
-                                       parse_collectives, ring_traffic_bytes)
+from repro.launch.hlo_analysis import (_axes_of_group, _group_info,
+    _shape_bytes, parse_collectives, parse_host_ops, parse_input_output_alias,
+    ring_traffic_bytes)
 
 HLO = """
 HloModule test
@@ -61,3 +60,98 @@ def test_bytes_by_axes_accumulates():
     by = s.bytes_by_axes()
     # permutes carry source_target_pairs (not replica_groups) → "?" bucket
     assert "model" in by and "data" in by and "?" in by
+
+
+# ---------------------------------------------------------------------------
+# _shape_bytes edge cases
+# ---------------------------------------------------------------------------
+
+def test_shape_bytes_scalar():
+    # HLO prints rank-0 as "f32[]" — empty dims means ONE element, not zero
+    assert _shape_bytes("f32[]") == 4.0
+    assert _shape_bytes("s32[]") == 4.0
+    assert _shape_bytes("pred[]") == 1.0
+
+
+def test_shape_bytes_sub_byte_dtypes():
+    assert _shape_bytes("s4[16]") == 8.0           # half a byte per element
+    assert _shape_bytes("u4[3]") == 1.5            # fractional is fine
+    assert _shape_bytes("(s4[8], u4[8])") == 8.0
+
+
+def test_shape_bytes_tuple_with_scalars():
+    assert _shape_bytes("(f32[], f32[8], bf16[])") == 4.0 + 32.0 + 2.0
+
+
+def test_shape_bytes_unknown_dtype_ignored():
+    # opaque/token results must not crash or contribute bytes
+    assert _shape_bytes("token[]") == 0.0
+    assert _shape_bytes("(token[], f32[2])") == 8.0
+
+
+def test_parse_collectives_tuple_result():
+    hlo = """
+HloModule t
+ENTRY main {
+  %ar = (f32[8]{0}, f32[]) all-reduce(%a, %b), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+}
+"""
+    s = parse_collectives(hlo, (2, 4), ("data", "model"))
+    assert s.count() == 1
+    op = s.ops[0]
+    assert op.kind == "all-reduce"
+    assert op.result_bytes == 8 * 4 + 4           # both tuple members
+    assert op.group_size == 4
+
+
+# ---------------------------------------------------------------------------
+# donation alias map + host-op scan (the host-sync pass's data source)
+# ---------------------------------------------------------------------------
+
+ALIAS_HLO = """
+HloModule serve, input_output_alias={ {0}: (12, {}, may-alias), {1}: (13, {}, may-alias), {2, 0}: (14, {}, must-alias) }, entry_computation_layout={...}
+ENTRY main {
+  %p = f32[4]{0} parameter(0)
+}
+"""
+
+
+def test_parse_input_output_alias():
+    m = parse_input_output_alias(ALIAS_HLO)
+    assert m == {(0,): 12, (1,): 13, (2, 0): 14}
+
+
+def test_parse_input_output_alias_absent():
+    assert parse_input_output_alias("HloModule bare\nENTRY main {}") == {}
+
+
+HOST_HLO = """
+HloModule h
+ENTRY main {
+  %p0 = f32[2]{0} parameter(0)
+  %t = token[] after-all()
+  %inf = (f32[2]{0}, token[]) infeed(%t)
+  %cb = f32[2]{0} custom-call(%p0), custom_call_target="xla_python_cpu_callback", api_version=API_VERSION_STATUS_RETURNING
+  %ok = f32[2]{0} custom-call(%p0), custom_call_target="__cublas$gemm"
+  %add = f32[2]{0} add(%p0, %p0)
+}
+"""
+
+
+def test_parse_host_ops_finds_infeed_and_callbacks():
+    hits = parse_host_ops(HOST_HLO)
+    assert len(hits) == 2
+    assert any("infeed" in h for h in hits)
+    assert any("xla_python_cpu_callback" in h for h in hits)
+
+
+def test_parse_host_ops_clean_program():
+    clean = """
+HloModule c
+ENTRY main {
+  %p0 = f32[2]{0} parameter(0)
+  %add = f32[2]{0} add(%p0, %p0)
+  %mm = f32[2]{0} custom-call(%p0), custom_call_target="__cublas$gemm"
+}
+"""
+    assert parse_host_ops(clean) == []

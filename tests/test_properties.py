@@ -16,7 +16,7 @@ from repro.core.analytical import (EPYC_9684X, baseline_llama_cpp,
                                    paper_system, stage_latency)
 from repro.core.residency import paradox_table
 from repro.configs.registry import ASSIGNED
-from repro.kv.cache import KVCache, slot_valid_mask, window_slots
+from repro.kv.cache import slot_valid_mask
 from repro.quant.int8 import dequantize, int8_matmul, quantize_int8
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -160,7 +160,7 @@ def test_stage_latency_monotone_in_context():
 def test_moe_matches_dense_loop_reference(seed):
     import dataclasses
     from repro.models.moe import make_moe_params, moe_ffn
-    from repro.models import NULL_CTX, common
+    from repro.models import NULL_CTX
     cfg = ASSIGNED["phi3.5-moe-42b-a6.6b"].reduced()
     cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=0.0),
                       dtype="float32")

@@ -10,7 +10,7 @@ from repro.checkpoint.checkpointer import Checkpointer, latest_step, save_pytree
 from repro.configs.registry import ASSIGNED
 from repro.data.synthetic import SyntheticLMData
 from repro.models import NULL_CTX, build_model
-from repro.optim.adamw import adamw_init, adamw_update, cosine_lr, global_norm
+from repro.optim.adamw import adamw_init, adamw_update, cosine_lr
 from repro.runtime.elastic import ElasticController
 from repro.runtime.serving import Request, ServingEngine
 

@@ -1,12 +1,8 @@
 """End-to-end behaviour tests for the paper's system."""
-import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.registry import ASSIGNED, get_config
 from repro.configs.shapes import SHAPES, applicable
