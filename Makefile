@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast test-long bench-smoke bench-serve verify-static lint check
+.PHONY: test test-fast test-long test-chaos bench-smoke bench-serve verify-static lint check
 
 test:            ## tier-1 verify (full suite, fail fast)
 	python -m pytest -x -q
@@ -12,6 +12,9 @@ test-fast:       ## skip the slow multi-device subprocess tests
 
 test-long:       ## 8-device split-KV serve (long-context A-domain matrix)
 	python -m pytest -x -q tests/test_distributed.py -k split_kv
+
+test-chaos:      ## seeded fault-injection schedules (25+ deterministic chaos runs + preemption suite)
+	python -m pytest -x -q tests/test_chaos.py tests/test_preemption.py
 
 bench-smoke:     ## fast benchmark subset (CSV sanity; serve_tpot exercises the colocated-vs-WA backend scenario on every PR)
 	python -m benchmarks.run table2_end_to_end fig10_runtime serve_tpot

@@ -32,7 +32,18 @@ Three claims are measured on the CPU dry-run config:
    regression baseline for the routed program path, exercised by
    ``make bench-smoke`` on every PR.
 
-4. Split-KV flash decode (ISSUE 6 / DESIGN.md §3): at 8k–32k context the
+4. Preemptible serving under pressure (DESIGN.md §7): a bursty open-loop
+   heavy-tailed workload (``FaultPlan.requests`` — Pareto lengths, arrivals
+   in bursts that overcommit the slots, mixed priorities, half the
+   requests carrying TTFT deadlines) through the non-preemptible engine
+   and the preemptible one. Measured: p50/p99 TTFT and TPOT, preemption /
+   restore / rejection / deadline-miss counts, swap-lane wall time, and
+   **goodput-under-deadline** — decode tok/s counting only completed
+   requests that met their TTFT deadline. The preemptible lane may
+   complete FEWER requests (it sheds on priority) but its deadline-met
+   goodput and tail TTFT are the SLO story the failure model §7 claims.
+
+5. Split-KV flash decode (ISSUE 6 / DESIGN.md §3): at 8k–32k context the
    per-token attention walk dominates decode, and sharding one slot's KV
    along the sequence axis over the A submesh divides it by the A-width.
    Measured as the per-device critical path (one C/w shard-local partial
@@ -150,6 +161,95 @@ def _long_prompt_scenario(api, params, ctx):
     emit("serving/long_prompt/chunked_gap_reduction",
          out["chunked_over_monolithic"]["inflight_gap_reduction"],
          f"tpot_ratio={out['chunked_over_monolithic']['tpot_ratio']:.3f}")
+    return out
+
+
+# -- preemptible-serving pressure scenario ---------------------------------
+PR_SEED = 3                  # this seed's priority mix triggers preemption
+PR_REQUESTS = 12
+PR_PROMPT_LEN = 8            # static prefill width (chunked lane admits longer)
+PR_SLOTS = 2                 # bursts of 4 over 2 slots = sustained overcommit
+
+
+def _pressure_workload():
+    from repro.runtime.faults import FaultPlan
+    return FaultPlan(seed=PR_SEED, n_requests=PR_REQUESTS, burst_size=4,
+                     burst_gap=10, max_new_lo=4, max_new_hi=24,
+                     deadline_frac=0.5, ttft_deadline_ms=250.0)
+
+
+def _pressure_scenario(api, params, ctx):
+    from repro.runtime.faults import clone_requests
+    from repro.runtime.serving import ServingEngine
+    cfg = api.config
+    plan = _pressure_workload()
+    base = plan.requests(cfg.vocab_size, prompt_lo=4,
+                         prompt_hi=PR_PROMPT_LEN + 8)
+    out = {"config": {"seed": PR_SEED, "n_requests": PR_REQUESTS,
+                      "burst_size": plan.burst_size,
+                      "burst_gap": plan.burst_gap,
+                      "max_new_hi": plan.max_new_hi,
+                      "deadline_frac": plan.deadline_frac,
+                      "ttft_deadline_ms": plan.ttft_deadline_ms,
+                      "batch_slots": PR_SLOTS, "block_size": BLOCK_SIZE,
+                      "prompt_len": PR_PROMPT_LEN}}
+    for name, preempt in (("fifo", False), ("preemptible", True)):
+        eng = ServingEngine(api, ctx, PR_SLOTS, PR_PROMPT_LEN,
+                            mode="continuous", max_new_cap=32,
+                            block_size=BLOCK_SIZE, kv_bucket_chunk=16,
+                            prefill_chunk=4, preemptible=preempt,
+                            max_queue=16)
+        eng.run(params, clone_requests(base), max_steps=4000)   # warm
+        reqs = clone_requests(base)
+        st = eng.run(params, reqs, max_steps=4000)
+        compiles = {k: v["compiles"] for k, v in st["runtime"].items()}
+        # goodput-under-deadline: decode tokens of completed requests that
+        # met their TTFT deadline, over the same decode wall-clock the raw
+        # throughput uses (scale by the token fraction)
+        met = [m for m in st["per_request"] if m["ttft_deadline_met"]]
+        met_tokens = sum(m["tokens"] for m in met)
+        goodput = st["throughput_tok_s"] * met_tokens\
+            / max(sum(m["tokens"] for m in st["per_request"]), 1)
+        frac = len(met) / max(st["completed"], 1)
+        ttfts = sorted(m["ttft_ms"] for m in st["per_request"])
+        out[name] = {
+            "completed": st["completed"],
+            "rejections": st["rejections"],
+            "deadline_misses": st["deadline_misses"],
+            "preemptions": st["preemptions"],
+            "restores": st["restores"],
+            "swap_time_ms": st["swap_time_ms"],
+            "tpot_mean_ms": st["tpot_mean_ms"],
+            "tpot_p50_ms": st["tpot_p50_ms"],
+            "tpot_p99_ms": st["tpot_p99_ms"],
+            "ttft_mean_ms": st["ttft_mean_ms"],
+            "ttft_p50_ms": ttfts[len(ttfts) // 2] if ttfts else 0.0,
+            "ttft_p99_ms": st["ttft_p99_ms"],
+            "throughput_tok_s": st["throughput_tok_s"],
+            "goodput_under_deadline_tok_s": goodput,
+            "deadline_met_completed": sum(
+                1 for m in st["per_request"] if m["ttft_deadline_met"]),
+            "deadline_met_fraction": frac,
+            "max_compiles_per_step": max(compiles.values()),
+            "compiles": compiles,
+        }
+        emit(f"serving/pressure/{name}/goodput_under_deadline",
+             goodput,
+             f"completed={st['completed']};preempt={st['preemptions']};"
+             f"restore={st['restores']};rej={st['rejections']};"
+             f"miss={st['deadline_misses']};"
+             f"ttft_p99_ms={st['ttft_p99_ms']:.1f};"
+             f"max_compiles_per_step={max(compiles.values())}")
+    out["preemptible_over_fifo"] = {
+        "goodput_ratio": (out["preemptible"]["goodput_under_deadline_tok_s"]
+                          / max(out["fifo"]["goodput_under_deadline_tok_s"],
+                                1e-9)),
+        "ttft_p99_ratio": (out["preemptible"]["ttft_p99_ms"]
+                           / max(out["fifo"]["ttft_p99_ms"], 1e-9)),
+    }
+    emit("serving/pressure/preemptible_goodput_ratio",
+         out["preemptible_over_fifo"]["goodput_ratio"],
+         f"ttft_p99_ratio={out['preemptible_over_fifo']['ttft_p99_ratio']:.3f}")
     return out
 
 
@@ -376,6 +476,7 @@ def run():
          f"tpot_speedup={speedup:.2f};host_sync_reduction={sync_drop:.1f}")
     report["long_prompt"] = _long_prompt_scenario(api, params, ctx)
     report["wa_backend"] = _wa_backend_scenario(api, params, ctx)
+    report["pressure"] = _pressure_scenario(api, params, ctx)
     report["split_kv_long_context"] = _split_kv_long_context_scenario()
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

@@ -39,6 +39,13 @@ ap.add_argument("--a-shards", type=int, default=1,
                      "LSE merge — token-exact, and the long-context "
                      "attention walk scales with the A-domain width "
                      "(prompt_len + decode slack must divide by N)")
+ap.add_argument("--preemptible", action="store_true",
+                help="compile the token-exact KV swap pair and allow "
+                     "priority/pressure preemption at block boundaries "
+                     "(DESIGN.md §7)")
+ap.add_argument("--max-queue", type=int, default=0,
+                help="bounded-queue backpressure: shed lowest-priority "
+                     "queued work beyond N (0 = unbounded)")
 args = ap.parse_args()
 
 print(f"serving {args.requests} requests on {args.arch} "
@@ -52,7 +59,8 @@ stats = serve(args.arch, args.requests, args.batch_slots, args.prompt_len,
               block_size=args.block_size,
               kv_bucket_chunk=args.kv_bucket_chunk,
               prefill_chunk=args.prefill_chunk, backend=args.backend,
-              a_shards=args.a_shards)
+              a_shards=args.a_shards, preemptible=args.preemptible,
+              max_queue=args.max_queue)
 print(f"\nmode:        {stats['mode']} (backend={stats['backend']})")
 print(f"completed:   {stats['completed']} "
       f"({stats['admissions']} admissions, "
@@ -69,6 +77,14 @@ print(f"host syncs:  {stats['host_syncs']} "
       f"{stats['tokens_per_macro_step_mean']:.1f} tok/macro-step)")
 compiles = {k: v["compiles"] for k, v in stats["runtime"].items()}
 print(f"compiles:    {compiles} (must stay 1 per step — zero retracing)")
+print(f"pressure:    {stats['preemptions']} preemptions / "
+      f"{stats['restores']} restores, {stats['rejections']} rejections, "
+      f"{stats['deadline_misses']} deadline misses, "
+      f"{stats['retries']} retries, quarantined={stats['quarantined_slots']} "
+      f"(swap lane {stats['swap_time_ms']:.2f} ms — DESIGN.md §7)")
+for e in stats["rejected"]:
+    print(f"  shed rid={e['rid']:3d} [{e['status']}] "
+          f"priority={e['priority']} reason={e['reason']}")
 if "wa" in stats:
     wa = stats["wa"]
     print(f"W<->A route: {wa['routing_bytes_per_token'] / 1024:.1f} KiB/token "

@@ -30,14 +30,20 @@ _KINDS = (
     ("decode_drain", "drain"),
     ("prefill_batch", "prefill"),
     ("prefill1", "prefill"),
+    ("swap_out", "swap_out"),       # preemption export — READ-ONLY
+    ("swap_in", "swap_in"),         # preemption restore — donates
     ("admit", "admit"),             # colocated write_slot copy
     ("decode", "decode"),
     ("reset", "reset"),
 )
 
 # kinds whose programs sit on the steady-state serving path and must donate
-# their cache operand (a non-donated cache = one full KV copy per dispatch)
-DONATING_KINDS = ("chunk", "block", "decode", "admit", "reset", "drain")
+# their cache operand (a non-donated cache = one full KV copy per dispatch).
+# swap_in restores INTO the resident cache and donates like the rest;
+# swap_out is deliberately absent — it only READS the victim slot, so a
+# failed/retried dispatch can never corrupt the cache (DESIGN.md §7)
+DONATING_KINDS = ("chunk", "block", "decode", "admit", "reset", "drain",
+                  "swap_in")
 
 
 @dataclass(frozen=True)
@@ -56,6 +62,9 @@ class CellSpec:
     prompt_len: int = 8
     max_new_cap: int = 24
     kv_bucket_chunk: int = 16
+    # every cell compiles the preemption swap pair by default — the
+    # verifier lints the extended (robustness) program set, not a subset
+    preemptible: bool = True
 
     def describe(self) -> str:
         kv = self.kv_dtype or "dense"
@@ -151,7 +160,8 @@ def build_cell(spec: CellSpec, mesh) -> Cell:
                         block_size=spec.block_size,
                         kv_bucket_chunk=spec.kv_bucket_chunk,
                         prefill_chunk=spec.prefill_chunk,
-                        backend=spec.backend, a_shards=spec.a_shards)
+                        backend=spec.backend, a_shards=spec.a_shards,
+                        preemptible=spec.preemptible)
     eng._prepare(params_aval)               # compiles; runs nothing
     caches_aval = eng._caches_aval
     cell = Cell(spec, cfg, api, mesh, eng, rt, params_aval, caches_aval)

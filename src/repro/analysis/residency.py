@@ -173,6 +173,17 @@ def _check_cache_collectives(cell: Cell, rec: ProgramRecord, caches_aval,
                              report: Report):
     if not isinstance(caches_aval, KVCache):
         return
+    if rec.kind in ("swap_out", "swap_in"):
+        # the preemption swap pair is the SANCTIONED cross-domain lane:
+        # its whole purpose is moving one slot's KV to/from the host, and
+        # with the slot axis sharded + a traced slot index GSPMD must
+        # gather that axis. Off the steady-state path (rare, priced in
+        # stats()['swap_time_ms']) — the R4 residency budget is about
+        # per-token programs, not the swap lane
+        report.info(PASS, rec.name, "swap lane",
+                    "cache-sized collective allowed: slot export/restore "
+                    "is the explicit host-swap path (DESIGN.md §7)")
+        return
     k = caches_aval.k                     # (L, B, n_kv, S, hd)
     slice_bytes = int(np.prod(k.shape[1:], dtype=np.int64)) * k.dtype.itemsize
     mesh_shape = tuple(cell.mesh.devices.shape)

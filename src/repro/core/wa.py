@@ -66,7 +66,8 @@ from repro.models.attention import chunk_attention, decode_attention,\
     decode_attention_split, qkv_project
 from repro.models.registry import make_decode_block
 from repro.models.sharding import ShardingCtx, seq_sharded_kv, sub_operator
-from repro.kv.cache import (KVCache, batch_valid_mask, layer_append,
+from repro.kv.cache import (KVCache, batch_valid_mask, export_slot_kv,
+                            import_slot_kv, layer_append,
                             layer_append_slotted, layer_read,
                             layer_read_bucket, layer_read_shards,
                             layer_read_slot, layer_write_chunk,
@@ -301,6 +302,34 @@ class WADisaggregated:
             ks_st = ann(ks_st, None, "batch", "kv_heads", "kv_seq", None)
             vs_st = ann(vs_st, None, "batch", "kv_heads", "kv_seq", None)
         return k_st, v_st, ks_st, vs_st
+
+    # -- preemption swap (A-domain slot state ops) -------------------------
+    def swap_out_slot(self, cache: KVCache, slot):
+        """Preemption export of one slot's stored KV ON the A domain: the
+        resident stacks are pinned to the planned A layout first (same entry
+        pin as every other WA cache program — the swap pair must not give
+        GSPMD a program that disagrees on cache placement). The stored
+        extent stays CONTIGUOUS under split-KV (a_shards > 1 is a read-time
+        view, DESIGN.md §3), so the exported host buffer is shard-agnostic:
+        it restores bit-identically under any shard width."""
+        k, v, ks, vs = self._pin_cache_stacks(cache.k, cache.v,
+                                              cache.k_scale, cache.v_scale)
+        return export_slot_kv(
+            cache._replace(k=k, v=v, k_scale=ks, v_scale=vs), slot)
+
+    def swap_in_slot(self, cache: KVCache, saved, slot, valid_len):
+        """Preemption restore on the A domain: masked true-length write of
+        an exported slot image (``import_slot_kv`` — the chunk lane's
+        keep-past-valid semantics at full width), entry- and exit-pinned so
+        the donated cache keeps the agreed A layout."""
+        k, v, ks, vs = self._pin_cache_stacks(cache.k, cache.v,
+                                              cache.k_scale, cache.v_scale)
+        cache = import_slot_kv(
+            cache._replace(k=k, v=v, k_scale=ks, v_scale=vs), saved, slot,
+            valid_len)
+        k, v, ks, vs = self._pin_cache_stacks(cache.k, cache.v,
+                                              cache.k_scale, cache.v_scale)
+        return cache._replace(k=k, v=v, k_scale=ks, v_scale=vs)
 
     # -- route helpers ------------------------------------------------------
     def _to_a(self, x):

@@ -336,6 +336,58 @@ def write_slot_kv(dst: KVCache, src: KVCache, slot) -> KVCache:
                         length=jnp.maximum(dst.length, src.length))
 
 
+def export_slot_kv(cache: KVCache, slot):
+    """Preemption swap-out: ONE batch slot's full-extent stored K/V stacks
+    as a ``(k, v, k_scale, v_scale)`` tuple of (L,1,n_kv,S,hd) slices
+    (scales (L,1,n_kv,S,1); ``None`` entries for dense caches). ``slot`` is
+    a traced scalar — one compiled program swaps out every slot.
+
+    The slices are the STORED bytes — int8 caches export the quantized
+    values and their per-(b,head,pos) scales verbatim, never a dequantized
+    image — so a later ``import_slot_kv`` of the same tuple is
+    byte-identical, the contract token-exact preemption rests on
+    (DESIGN.md §7). The host keeps the full static extent and carries the
+    TRUE length separately (cursors are the source of validity, exactly as
+    in the chunk lane)."""
+    def take(a):
+        if a is None:
+            return None
+        return jax.lax.dynamic_slice(
+            a, (0, slot, 0, 0, 0), (a.shape[0], 1) + a.shape[2:])
+
+    return (take(cache.k), take(cache.v),
+            take(cache.k_scale), take(cache.v_scale))
+
+
+def import_slot_kv(cache: KVCache, saved, slot, valid_len) -> KVCache:
+    """Preemption restore: write an ``export_slot_kv`` tuple back into
+    ``slot``, masked to the sequence's TRUE length — positions
+    >= ``valid_len`` keep the bytes already in the cache, mirroring
+    ``layer_write_chunk``'s keep-past-valid semantics (the restore is the
+    chunk lane's masked write at full width). ``slot``/``valid_len`` are
+    traced scalars; the saved bytes land verbatim (stored dtype, scales
+    included), so restore ∘ export is byte-identical below the cursor."""
+    k_s, v_s, ks_s, vs_s = saved
+    S = cache.k.shape[3]
+    keep = (jnp.arange(S, dtype=jnp.int32) < valid_len)\
+        .reshape(1, 1, 1, S, 1)
+
+    def put(dst, new):
+        if dst is None:
+            return None
+        cur = jax.lax.dynamic_slice(
+            dst, (0, slot, 0, 0, 0), new.shape)
+        merged = jnp.where(keep, new.astype(dst.dtype), cur)
+        return jax.lax.dynamic_update_slice(dst, merged, (0, slot, 0, 0, 0))
+
+    return cache._replace(k=put(cache.k, k_s), v=put(cache.v, v_s),
+                          k_scale=put(cache.k_scale, ks_s),
+                          v_scale=put(cache.v_scale, vs_s),
+                          length=jnp.maximum(cache.length,
+                                             jnp.asarray(valid_len,
+                                                         jnp.int32)))
+
+
 def reset_slot(cache: KVCache, slot) -> KVCache:
     """Zero one batch slot's K/V (retire). Not required for correctness —
     masked attention never reads past a slot's cursor and admission

@@ -43,7 +43,8 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
           executor: str = "sub_operator", mode: str = "auto",
           arrival_every: int = 0, block_size: int = 1,
           kv_bucket_chunk: int = 0, prefill_chunk: int = 0,
-          backend: str = "colocated", a_shards: int = 1):
+          backend: str = "colocated", a_shards: int = 1,
+          preemptible: bool = False, max_queue: int = 0):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -61,7 +62,8 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
                         block_size=block_size,
                         kv_bucket_chunk=kv_bucket_chunk,
                         prefill_chunk=prefill_chunk, backend=backend,
-                        a_shards=a_shards)
+                        a_shards=a_shards, preemptible=preemptible,
+                        max_queue=max_queue)
     stats = eng.run(params, reqs)
     return stats
 
@@ -101,6 +103,14 @@ def main(argv=None):
                          "the KV extent must divide by N; under --backend "
                          "wa on a mesh the shards ride the A-domain model "
                          "axis)")
+    ap.add_argument("--preemptible", action="store_true",
+                    help="compile the token-exact KV swap pair and allow "
+                         "priority/pressure preemption at block boundaries "
+                         "(DESIGN.md §7)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded-queue backpressure: shed lowest-priority "
+                         "queued work beyond N as structured rejections "
+                         "(0 = unbounded)")
     args = ap.parse_args(argv)
     stats = serve(args.arch, args.requests, args.batch, args.prompt_len,
                   args.max_new, mode=args.mode,
@@ -108,15 +118,30 @@ def main(argv=None):
                   block_size=args.block_size,
                   kv_bucket_chunk=args.kv_bucket_chunk,
                   prefill_chunk=args.prefill_chunk,
-                  backend=args.backend, a_shards=args.a_shards)
+                  backend=args.backend, a_shards=args.a_shards,
+                  preemptible=args.preemptible, max_queue=args.max_queue)
     per_req = stats.pop("per_request")
     rt = stats.pop("runtime")
+    rejected = stats.pop("rejected")
     print("serve stats:", stats)
+    # pressure / robustness counters (DESIGN.md §7): every submitted
+    # request is terminally accounted completed / rejected / deadline-missed
+    print(f"pressure: preemptions={stats['preemptions']} "
+          f"restores={stats['restores']} rejections={stats['rejections']} "
+          f"deadline_misses={stats['deadline_misses']} "
+          f"retries={stats['retries']} "
+          f"watchdog_timeouts={stats['watchdog_timeouts']} "
+          f"quarantined={stats['quarantined_slots']} "
+          f"swap_time_ms={stats['swap_time_ms']:.2f}")
+    for e in rejected:
+        print(f"  shed rid={e['rid']:3d} [{e['status']}] "
+              f"priority={e['priority']} reason={e['reason']}")
     print("per-request:")
     for m in per_req:
         print(f"  rid={m['rid']:3d} admit@{m['admit_step']:4d} "
               f"queue={m['queue_delay_ms']:8.1f}ms "
-              f"ttft={m['ttft_ms']:8.1f}ms tpot={m['tpot_ms']:6.2f}ms")
+              f"ttft={m['ttft_ms']:8.1f}ms tpot={m['tpot_ms']:6.2f}ms "
+              f"preempts={m['preemptions']}")
     print("runtime:", {k: {kk: round(vv, 3) if isinstance(vv, float) else vv
                            for kk, vv in v.items()} for k, v in rt.items()})
 

@@ -52,6 +52,24 @@ inter-token gap (the decode-stall a prefill inflicts on in-flight requests).
 Engine-level: decode-token throughput over decode wall-time only — prefill
 AND chunk-prefill wall-time are excluded from both sides — host syncs per
 decode token, and per-macro-step token counts.
+
+**Serving under pressure** (DESIGN.md §7, failure model): requests carry a
+``priority`` lane and TTFT/TPOT deadline fields; admission drains the queue
+in priority order, a bounded queue (``max_queue``) sheds lowest-priority
+work as STRUCTURED rejections, and expired-TTFT queued requests are shed as
+deadline misses. With ``preemptible=True`` the engine may, at a block
+boundary (the only preemption point), swap a victim slot's true-length KV
+out to a host-side buffer (``serve_[wa_]swap_out`` — stored bytes verbatim,
+int8 scales included) and later restore it via the masked full-width write
+(``serve_[wa_]swap_in``); cursors already carry true lengths, so a restored
+sequence is byte-identical to an uninterrupted one and the swap pair joins
+the compile-once program set. Every program dispatch runs through a
+hardened wrapper: bounded retry-with-backoff on ``DispatchError`` (raised
+BEFORE the compiled call touches donated operands — retry-safe), a watchdog
+counter for dispatches exceeding ``watchdog_s``, and a poisoned-slot
+quarantine path that demotes a persistently failing request to a structured
+rejection instead of a hung engine. Every request ends terminally accounted:
+completed, rejected, or deadline_missed.
 """
 from __future__ import annotations
 
@@ -65,13 +83,51 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.wa import WADisaggregated, routing_bytes
-from repro.kv.cache import KVCache
+from repro.kv.cache import KVCache, export_slot_kv, import_slot_kv
 from repro.models.attention import bucket_for, kv_buckets
 from repro.models.common import dtype_of
 from repro.models.param_specs import cache_specs
 from repro.models.registry import DECODE_SLACK, ModelAPI
 from repro.models.sharding import ShardingCtx
-from repro.runtime.static_runtime import StaticRuntime
+from repro.runtime.static_runtime import DispatchError, StaticRuntime
+
+
+class RequestRejected(ValueError):
+    """Enqueue-time rejection of an unrepresentable request. Carries the
+    request id, the offending length and the per-mode limit as FIELDS (not
+    just prose) so a fleet log line is actionable: which request, which
+    length, which knob to raise."""
+
+    def __init__(self, rid: int, reason: str, *, length=None, limit=None,
+                 limit_name: str = ""):
+        self.rid, self.reason = rid, reason
+        self.length, self.limit, self.limit_name = length, limit, limit_name
+        super().__init__(f"request {rid}: {reason}")
+
+
+class DispatchFailure(RuntimeError):
+    """A program dispatch kept raising ``DispatchError`` past the bounded
+    retry budget. The boundary loop demotes this to a structured rejection
+    of the responsible request (+ slot quarantine where the slot's cache
+    bytes are suspect) — never a hung engine."""
+
+    def __init__(self, name: str, attempts: int, cause: Exception):
+        self.name, self.attempts, self.cause = name, attempts, cause
+        super().__init__(f"dispatch of {name!r} failed after {attempts} "
+                         f"attempt(s): {cause}")
+
+
+@dataclass
+class SwapState:
+    """Host-side image of a preempted slot: the full-extent STORED bytes
+    (``export_slot_kv`` tuple — int8 values + scales verbatim, dense K/V
+    verbatim) plus the cursor triple that makes restore token-exact. The
+    true KV length travels here, not in the buffer — exactly the chunk
+    lane's cursors-are-validity contract."""
+    saved: Tuple                     # (k, v, k_scale, v_scale) host arrays
+    kv_len: int                      # TRUE length: positions cursor at swap
+    last_tok: int                    # last emitted token (its KV not yet written)
+    remaining: int                   # decode budget left
 
 
 def _pin_cache_tree(caches, ctx: ShardingCtx):
@@ -106,6 +162,18 @@ class Request:
     admit_step: int = -1                # decode step at which it got a slot
     t_last_emit: float = 0.0            # last token-emission sync (gap stats)
     max_gap: float = 0.0                # max inter-token gap (decode stall)
+    priority: int = 0                   # higher wins admission AND survives
+                                        # preemption/shedding longer
+    ttft_deadline_ms: float = 0.0       # 0 → none; queued past it → shed
+    tpot_deadline_ms: float = 0.0       # SLO target (recorded, never sheds)
+    status: str = "pending"             # pending/queued/active → terminal:
+                                        # completed|rejected|deadline_missed
+    reject_reason: Optional[str] = None
+    preemptions: int = 0                # times swapped out of a slot
+    swap: Optional[SwapState] = None    # host KV image while preempted
+    kv_base: int = 0                    # cursor base at start_decode (true
+                                        # prompt length; padded width when
+                                        # admitted monolithically)
 
     @property
     def done(self) -> bool:
@@ -124,6 +192,9 @@ class Request:
 
     def metrics(self) -> Dict[str, Any]:
         n = len(self.generated)
+        ttft = max(0.0, self.t_first_token - self.t_enqueue) * 1e3
+        tpot = ((self.t_done - self.t_first_token) / (n - 1) * 1e3
+                if n > 1 else 0.0)
         return {
             "rid": self.rid,
             "tokens": n,
@@ -131,10 +202,18 @@ class Request:
             "arrival_step": self.arrival_step,
             "admit_step": self.admit_step,
             "queue_delay_ms": max(0.0, self.t_admitted - self.t_enqueue) * 1e3,
-            "ttft_ms": max(0.0, self.t_first_token - self.t_enqueue) * 1e3,
-            "tpot_ms": ((self.t_done - self.t_first_token) / (n - 1) * 1e3
-                        if n > 1 else 0.0),
+            "ttft_ms": ttft,
+            "tpot_ms": tpot,
             "max_gap_ms": self.max_gap * 1e3,
+            "priority": self.priority,
+            "status": self.status,
+            "preemptions": self.preemptions,
+            # deadline attainment (completed requests; goodput-under-
+            # deadline in the pressure benchmark sums these)
+            "ttft_deadline_met": bool(self.ttft_deadline_ms <= 0
+                                      or ttft <= self.ttft_deadline_ms),
+            "tpot_deadline_met": bool(self.tpot_deadline_ms <= 0
+                                      or tpot <= self.tpot_deadline_ms),
         }
 
 
@@ -175,6 +254,7 @@ class SlotScheduler:
         self.last_tok = np.zeros((n_slots,), np.int32)
         self.remaining = np.zeros((n_slots,), np.int32)
         self.eos = np.full((n_slots,), -1, np.int32)
+        self.quarantined: set = set()            # poisoned slots, never reused
 
     # -- queue / occupancy ------------------------------------------------
     def work_remaining(self) -> bool:
@@ -190,6 +270,7 @@ class SlotScheduler:
             r = self.pending.pop(0)
             if not r.t_enqueue:
                 r.t_enqueue = time.monotonic()
+            r.status = "queued"
             self.queue.append(r)
 
     def occupied(self) -> bool:
@@ -198,23 +279,46 @@ class SlotScheduler:
     def decode_active(self) -> np.ndarray:
         return np.array([p == self.DECODE for p in self.phase])
 
-    # -- chunk lane -------------------------------------------------------
-    def assign_free(self, step: int) -> List[Request]:
-        """Move queued requests into free slots (PREFILL phase); their
-        chunks run one per boundary from the admission FIFO."""
-        admitted = []
-        now = time.monotonic()
+    # -- priority queue / quarantine --------------------------------------
+    def usable_free(self) -> Optional[int]:
+        """Lowest-index FREE slot that is not quarantined, or None."""
         for i in range(self.n):
-            if self.phase[i] == self.FREE and self.queue:
-                r = self.queue.pop(0)
-                r.t_admitted = now
-                r.admit_step = step
-                self.req[i] = r
-                self.phase[i] = self.PREFILL
-                self.filled[i] = 0
-                self.prefill_fifo.append(i)
-                admitted.append(r)
-        return admitted
+            if self.phase[i] == self.FREE and i not in self.quarantined:
+                return i
+        return None
+
+    def usable_capacity(self) -> int:
+        return self.n - len(self.quarantined)
+
+    def pop_queue(self) -> Optional[Request]:
+        """Highest-priority queued request; FIFO within a priority class.
+        A preempted request keeps its ORIGINAL enqueue stamp, so it
+        re-admits ahead of later same-priority arrivals (its wait already
+        counted once)."""
+        if not self.queue:
+            return None
+        j = min(range(len(self.queue)),
+                key=lambda j: (-self.queue[j].priority,
+                               self.queue[j].t_enqueue, self.queue[j].rid))
+        return self.queue.pop(j)
+
+    def top_priority(self) -> Optional[int]:
+        return max((r.priority for r in self.queue), default=None)
+
+    def decode_slots(self) -> List[int]:
+        return [i for i in range(self.n) if self.phase[i] == self.DECODE]
+
+    # -- chunk lane -------------------------------------------------------
+    def begin_prefill(self, slot: int, r: Request, step: int):
+        """Admit a fresh request into a free slot (PREFILL phase); its
+        chunks run one per boundary from the admission FIFO."""
+        r.t_admitted = time.monotonic()
+        r.admit_step = step
+        r.status = "active"
+        self.req[slot] = r
+        self.phase[slot] = self.PREFILL
+        self.filled[slot] = 0
+        self.prefill_fifo.append(slot)
 
     def next_chunk(self, chunk: int, kv_extent: Optional[int]
                    ) -> Optional[Tuple[int, Request, int, int]]:
@@ -249,10 +353,35 @@ class SlotScheduler:
     # -- phase transitions ------------------------------------------------
     def start_decode(self, slot: int, cursor: int, first_tok: int):
         r = self.req[slot]
+        r.kv_base = cursor
         self.phase[slot] = self.DECODE
         self.positions[slot] = cursor
         self.last_tok[slot] = first_tok
         self.remaining[slot] = r.max_new_tokens - 1
+        self.eos[slot] = r.eos_id
+
+    def preempt(self, slot: int) -> Request:
+        """Release a DECODE slot whose KV the caller has already swapped
+        out; the request goes back to the queue carrying its SwapState."""
+        assert self.phase[slot] == self.DECODE, (slot, self.phase[slot])
+        r = self.req[slot]
+        self.req[slot] = None
+        self.phase[slot] = self.FREE
+        r.status = "queued"
+        self.queue.append(r)
+        return r
+
+    def resume_decode(self, slot: int, r: Request, state: SwapState):
+        """Re-enter DECODE directly from a restored swap image: cursors
+        resume exactly where the preemption cut them — the prefill phase is
+        skipped, the next decode step appends ``last_tok``'s KV at
+        ``kv_len`` just as an uninterrupted serve would have."""
+        r.status = "active"
+        self.req[slot] = r
+        self.phase[slot] = self.DECODE
+        self.positions[slot] = state.kv_len
+        self.last_tok[slot] = state.last_tok
+        self.remaining[slot] = state.remaining
         self.eos[slot] = r.eos_id
 
     def retire(self, slot: int):
@@ -260,6 +389,49 @@ class SlotScheduler:
         self.phase[slot] = self.FREE
         if slot in self.prefill_fifo:
             self.prefill_fifo.remove(slot)
+
+    # -- invariants --------------------------------------------------------
+    def invariant_violations(self) -> List[str]:
+        """Occupancy/cursor consistency at a block boundary (the chaos
+        harness runs this every boundary via ``strict_invariants``):
+        FREE ⟺ no request, quarantined ⇒ FREE, no rid in two slots, the
+        prefill FIFO holds exactly PREFILL slots, and every DECODE slot's
+        cursor triple matches its request's emission count."""
+        bad: List[str] = []
+        seen: Dict[int, int] = {}
+        for i in range(self.n):
+            r, ph = self.req[i], self.phase[i]
+            if ph == self.FREE and r is not None:
+                bad.append(f"slot {i}: FREE but holds rid {r.rid}")
+            if ph != self.FREE and r is None:
+                bad.append(f"slot {i}: {ph} with no request")
+            if ph != self.FREE and i in self.quarantined:
+                bad.append(f"slot {i}: quarantined but {ph}")
+            if r is not None:
+                if r.rid in seen:
+                    bad.append(f"rid {r.rid} in slots {seen[r.rid]} and {i}")
+                seen[r.rid] = i
+            if ph == self.DECODE:
+                want_pos = r.kv_base + len(r.generated) - 1
+                if int(self.positions[i]) != want_pos:
+                    bad.append(
+                        f"slot {i} rid {r.rid}: cursor {self.positions[i]} "
+                        f"!= kv_base {r.kv_base} + emitted "
+                        f"{len(r.generated)} - 1")
+                if int(self.remaining[i]) != r.max_new_tokens\
+                        - len(r.generated):
+                    bad.append(
+                        f"slot {i} rid {r.rid}: remaining "
+                        f"{self.remaining[i]} != budget "
+                        f"{r.max_new_tokens} - emitted {len(r.generated)}")
+                if int(self.remaining[i]) < 0:
+                    bad.append(f"slot {i} rid {r.rid}: negative remaining")
+        if len(set(self.prefill_fifo)) != len(self.prefill_fifo):
+            bad.append(f"duplicate slots in prefill FIFO {self.prefill_fifo}")
+        for i in self.prefill_fifo:
+            if self.phase[i] != self.PREFILL:
+                bad.append(f"slot {i} in prefill FIFO but {self.phase[i]}")
+        return bad
 
 
 # ---------------------------------------------------------------------------
@@ -296,30 +468,37 @@ class ExecutorBackend:
       wa         T == 1                serve_wa_decode
       wa         T > 1                 serve_wa_decode_block[_s{N}] per bucket
       either     debug_reset_slots     serve_reset
+      either     preemptible           serve_[wa_]swap_out + serve_[wa_]swap_in
 
     The scheduler never sees a jax array; the executor never makes a
     scheduling decision."""
 
     name = "colocated"
+    program_prefix = "serve_"
 
     def __init__(self, api: ModelAPI, ctx: ShardingCtx, rt: StaticRuntime,
                  params, caches_aval, *, mode: str, slots: int,
                  prompt_len: int, max_new_cap: int, block_size: int,
                  kv_bucket_chunk: int, prefill_chunk: int,
-                 debug_reset_slots: bool, a_shards: int = 1):
+                 debug_reset_slots: bool, a_shards: int = 1,
+                 preemptible: bool = False):
         self.api, self.ctx, self.rt = api, ctx, rt
         self.slots, self.prompt_len = slots, prompt_len
         self.max_new_cap = max_new_cap
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
         self.a_shards = a_shards
+        self.preemptible = preemptible
         self.caches = None
         self.buckets: Tuple[int, ...] = ()
         self._decode_blocks: Dict[int, Callable] = {}
         self._reset = None
+        self._swap_out_p = self._swap_in_p = None
         if mode == "continuous":
             self._build_continuous(params, caches_aval, kv_bucket_chunk,
                                    prefill_chunk, debug_reset_slots)
+            if preemptible:
+                self._build_swap(caches_aval)
         else:
             self._build_drain(params)
 
@@ -351,6 +530,38 @@ class ExecutorBackend:
                     self.api.reset_slot(_pin_cache_tree(c, cctx), slot),
                     cctx),
                 (caches_aval, scalar), donate_argnums=(0,))
+
+    # -- preemption swap pair ---------------------------------------------
+    def _swap_export_fn(self, caches, slot):
+        """Traced body of ``{prefix}swap_out`` (backends may override to
+        route through their own cache-domain pins)."""
+        return export_slot_kv(_pin_cache_tree(caches, self.cache_ctx), slot)
+
+    def _swap_import_fn(self, caches, saved, slot, valid_len):
+        """Traced body of ``{prefix}swap_in`` — masked true-length restore
+        (the chunk lane's keep-past-valid write at full width)."""
+        cctx = self.cache_ctx
+        caches = import_slot_kv(_pin_cache_tree(caches, cctx), saved, slot,
+                                valid_len)
+        return _pin_cache_tree(caches, cctx)
+
+    def _build_swap(self, caches_aval):
+        """Compile the token-exact preemption pair (engine validated the
+        family: prefix-ordered non-windowed KV cache). ``swap_out`` is
+        READ-ONLY — no donation, it returns only the slot slices, so a
+        failed/retried dispatch can never corrupt the resident cache;
+        ``swap_in`` donates the caches like every steady-state program.
+        Slot index and true length are traced scalars — one compiled pair
+        serves every slot at every length (compiles == 1)."""
+        scalar = jnp.zeros((), jnp.int32)
+        saved_aval = jax.eval_shape(self._swap_export_fn, caches_aval,
+                                    scalar)
+        self._swap_out_p = self.rt.compile_step(
+            f"{self.program_prefix}swap_out", self._swap_export_fn,
+            (caches_aval, scalar))
+        self._swap_in_p = self.rt.compile_step(
+            f"{self.program_prefix}swap_in", self._swap_import_fn,
+            (caches_aval, saved_aval, scalar, scalar), donate_argnums=(0,))
 
     @staticmethod
     def _postprocess(logits, positions, active):
@@ -455,6 +666,17 @@ class ExecutorBackend:
 
     def reset(self, slot: int):
         self.caches = self._reset(self.caches, jnp.asarray(slot, jnp.int32))
+
+    def swap_out(self, slot: int):
+        """Export one slot's stored KV (device tuple; caller hosts it).
+        Read-only: the resident caches are NOT donated or modified."""
+        return self._swap_out_p(self.caches, jnp.asarray(slot, jnp.int32))
+
+    def swap_in(self, saved, slot: int, valid_len: int):
+        """Masked true-length restore of an exported slot image."""
+        self.caches = self._swap_in_p(
+            self.caches, saved, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(valid_len, jnp.int32))
 
     def drain_prefill(self, params, toks: np.ndarray):
         raise NotImplementedError
@@ -574,10 +796,20 @@ class WABackend(ExecutorBackend):
     form of the paper's "only embeddings move"."""
 
     name = "wa"
+    program_prefix = "serve_wa_"
 
     @property
     def cache_ctx(self) -> ShardingCtx:
         return self.wa.a_ctx
+
+    # the swap pair runs on the A domain through core/wa.py's own cache
+    # pins (split-KV stays a read-time view — the exported bytes are
+    # shard-agnostic); zero W↔A hops, so expected_routing has no entry
+    def _swap_export_fn(self, caches, slot):
+        return self.wa.swap_out_slot(caches, slot)
+
+    def _swap_import_fn(self, caches, saved, slot, valid_len):
+        return self.wa.swap_in_slot(caches, saved, slot, valid_len)
 
     def _build_continuous(self, params, caches_aval, kv_bucket_chunk,
                           prefill_chunk, debug_reset_slots):
@@ -643,26 +875,31 @@ class WABackend(ExecutorBackend):
         """Monolithic WA admission: ONE full-width chunk (start 0, the
         padded width valid) — KV lands directly in the slot, no separate
         write-slot copy (the cache never leaves the A domain)."""
-        self._meter("serve_wa_admit")
         self.caches, tok = self._chunk(
             params, self.caches, jnp.asarray(row[None]),
             jnp.asarray(slot, jnp.int32), jnp.asarray(0, jnp.int32),
             jnp.asarray(self.prompt_len, jnp.int32))
+        # metered AFTER the dispatch ran: a failed/retried dispatch never
+        # reached the device, so it must not inflate the routed-bytes claim
+        self._meter("serve_wa_admit")
         return tok
 
     def run_chunk(self, params, row, slot, start, valid):
+        out = super().run_chunk(params, row, slot, start, valid)
         self._meter("serve_wa_prefill_chunk")
-        return super().run_chunk(params, row, slot, start, valid)
+        return out
 
     def decode_step(self, params, last_tok, positions, active):
+        out = super().decode_step(params, last_tok, positions, active)
         self._meter("serve_wa_decode")
-        return super().decode_step(params, last_tok, positions, active)
+        return out
 
     def decode_block(self, params, bucket, last_tok, positions, active,
                      remaining, eos):
+        out = super().decode_block(params, bucket, last_tok, positions,
+                                   active, remaining, eos)
         self._meter("serve_wa_decode_block")
-        return super().decode_block(params, bucket, last_tok, positions,
-                                    active, remaining, eos)
+        return out
 
     def routing_stats(self, decode_tokens: int) -> Dict[str, Any]:
         """The measured 'only embeddings move' numbers for ``run()`` stats:
@@ -741,6 +978,38 @@ class ServingEngine:
     Program names do not change — the shard count is a build-time static
     baked into the same programs, so compiles == 1 still holds per bucket.
 
+    ``preemptible``: compile the token-exact swap pair
+    (``serve_[wa_]swap_out`` / ``serve_[wa_]swap_in``) and allow the
+    boundary loop to preempt a decoding slot — swap its true-length KV to
+    a host-side buffer, free the slot for higher-priority work (or under
+    injected KV pressure), and restore later with cursors intact. Requires
+    the continuous scheduler and a prefix-ordered non-windowed KV-cache
+    family. Restored sequences are byte-identical to uninterrupted ones.
+
+    ``max_queue``: bounded-queue backpressure. > 0 sheds the
+    lowest-priority (then most recently enqueued) queued request as a
+    structured rejection whenever the queue exceeds the bound — overload
+    degrades to explicit rejections, not unbounded queueing.
+
+    ``max_retries`` / ``retry_backoff_s`` / ``watchdog_s``: dispatch
+    hardening. Every program dispatch retries up to ``max_retries`` times
+    on ``DispatchError`` (with exponential backoff when ``retry_backoff_s``
+    > 0); a dispatch exceeding ``watchdog_s`` wall-clock bumps the watchdog
+    counter. A dispatch that exhausts its budget demotes the responsible
+    request to a structured rejection and quarantines the slot whose cache
+    bytes are suspect (``stats()['quarantined_slots']``).
+
+    ``strict_invariants``: run the scheduler's occupancy/cursor invariant
+    check at every block boundary (the chaos harness turns this on);
+    violations raise ``AssertionError`` immediately.
+
+    ``fault_injector``: deterministic chaos hook
+    (``repro.runtime.faults.FaultInjector`` or compatible). Its
+    ``on_dispatch(name)`` is installed as the ``StaticRuntime`` dispatch
+    interceptor for the run (slow/failed dispatches); its
+    ``slots_held(step)`` models artificial KV pressure — that many slots
+    are withheld at each boundary, preempting victims when preemptible.
+
     An engine instance may be ``run()`` repeatedly: per-run accumulators
     (timings, sync counts, queues) reset and the slot caches are allocated
     fresh each run, while the AOT-compiled programs persist (compiles == 1
@@ -754,7 +1023,12 @@ class ServingEngine:
                  block_size: int = 1, kv_bucket_chunk: int = 0,
                  prefill_chunk: int = 0,
                  debug_reset_slots: bool = False,
-                 backend: str = "colocated", a_shards: int = 1):
+                 backend: str = "colocated", a_shards: int = 1,
+                 preemptible: bool = False, max_queue: int = 0,
+                 max_retries: int = 2, retry_backoff_s: float = 0.0,
+                 watchdog_s: float = 0.0,
+                 strict_invariants: bool = False,
+                 fault_injector: Optional[Any] = None):
         if mode not in ("auto", "continuous", "drain"):
             raise ValueError(mode)
         if a_shards < 1:
@@ -825,6 +1099,15 @@ class ServingEngine:
         self.prefill_chunk = prefill_chunk
         self.a_shards = a_shards
         self.debug_reset_slots = debug_reset_slots
+        self.preemptible = preemptible
+        self.max_queue = max_queue
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.watchdog_s = watchdog_s
+        self.strict_invariants = strict_invariants
+        self.fault_injector = fault_injector
         self.rt = runtime or StaticRuntime()
         self.queue: List[Request] = []
         self._params = None
@@ -869,6 +1152,20 @@ class ServingEngine:
                 f"prefill_chunk={self.prefill_chunk} exceeds the KV extent "
                 f"{self._kv_extent}; the fixed (1,C) window must fit the "
                 "cache")
+        if self.preemptible:
+            # swap-out/restore slices one slot of a prefix-ordered KV
+            # cache at its true length — recurrent states and ring windows
+            # have no such slice, drain mode has no slot scheduler
+            if self.mode != "continuous":
+                raise ValueError("preemptible serving requires the "
+                                 "continuous scheduler (drain has no slots "
+                                 "to swap)")
+            if self._kv_extent is None:
+                raise ValueError(
+                    f"preemptible=True requires a prefix-ordered "
+                    "(non-windowed) KV-cache family; the "
+                    f"{api.config.family} family has no slot KV extent to "
+                    "swap out")
         self._reset_per_run()
 
     # ------------------------------------------------------------------
@@ -887,6 +1184,76 @@ class ServingEngine:
         self._block_tokens: List[int] = []
         self._macro_steps = 0
         self.queue = []
+        # pressure/robustness accounting (DESIGN.md §7 failure model)
+        self._rejected: List[Request] = []
+        self._deadline_missed: List[Request] = []
+        self._preemptions = 0
+        self._restores = 0
+        self._retries = 0
+        self._watchdog_timeouts = 0
+        self._swap_time = 0.0
+        self._quarantined: set = set()
+        # emission log: (rid, token_index) in host-visible order — the
+        # chaos invariant checker proves no token was duplicated, lost or
+        # reordered from this alone
+        self._emit_log: List[Tuple[int, int]] = []
+        self._cursor_watermark: Dict[int, int] = {}
+        self._slot_cap = self.slots
+
+    def _emit_token(self, r: Request, tok: int):
+        r.generated.append(int(tok))
+        self._emit_log.append((r.rid, len(r.generated) - 1))
+
+    def _finish(self, r: Request, now: float):
+        r.status = "completed"
+        r.t_done = now
+
+    def _reject(self, r: Request, reason: str):
+        r.status = "rejected"
+        r.reject_reason = reason
+        r.t_done = time.monotonic()
+        r.swap = None                    # drop any held KV image
+        self._rejected.append(r)
+
+    def _miss_deadline(self, r: Request, reason: str):
+        r.status = "deadline_missed"
+        r.reject_reason = reason
+        r.t_done = time.monotonic()
+        r.swap = None
+        self._deadline_missed.append(r)
+
+    # -- hardened dispatch ---------------------------------------------
+    def _dispatch(self, name: str, fn, *args):
+        """Bounded retry-with-backoff around one program dispatch.
+        ``DispatchError`` is raised by the interceptor layer BEFORE the
+        compiled call touches its operands (donated buffers still valid),
+        so the dispatch retries verbatim; exhausting the budget raises
+        ``DispatchFailure`` for the boundary loop to demote to a structured
+        rejection. Any other exception is a real bug and propagates. A
+        dispatch exceeding ``watchdog_s`` wall-clock bumps the watchdog
+        counter (the work DID run — JAX cannot cancel an in-flight
+        dispatch — so the watchdog detects and records stalls rather than
+        aborting them)."""
+        attempt = 0
+        while True:
+            t0 = time.monotonic()
+            try:
+                out = fn(*args)
+            except DispatchError as e:
+                if attempt >= self.max_retries:
+                    raise DispatchFailure(name, attempt + 1, e) from e
+                attempt += 1
+                self._retries += 1
+                if self.retry_backoff_s:
+                    time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+                continue
+            if self.watchdog_s and time.monotonic() - t0 > self.watchdog_s:
+                self._watchdog_timeouts += 1
+            return out
+
+    def _quarantine_slot(self, sched: SlotScheduler, slot: int):
+        sched.quarantined.add(slot)
+        self._quarantined.add(slot)
 
     def _host_sync(self, *arrays):
         """THE counted device→host round-trip of the decode loop — the
@@ -901,35 +1268,53 @@ class ServingEngine:
 
     def _validate_request(self, r: Request):
         """Admission-time length contract — the silent-truncation fix: a
-        prompt the engine cannot represent is REJECTED here, never cut."""
+        prompt the engine cannot represent is REJECTED here, never cut.
+        Raises ``RequestRejected`` (a ``ValueError``) carrying the request
+        id, the offending length and the per-mode limit as fields, so a
+        fleet log can say WHICH knob the request overflowed."""
         L = len(r.prompt)
         if L == 0:
-            raise ValueError(f"request {r.rid}: empty prompt")
+            raise RequestRejected(r.rid, "empty prompt", length=0,
+                                  limit=1, limit_name="min prompt length")
         if r.max_new_tokens < 1:
-            raise ValueError(
-                f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
-                "must be >= 1 (every admission produces a first token)")
+            raise RequestRejected(
+                r.rid,
+                f"max_new_tokens={r.max_new_tokens} must be >= 1 (every "
+                "admission produces a first token)",
+                length=r.max_new_tokens, limit=1,
+                limit_name="min max_new_tokens")
         if r.max_new_tokens > self.max_new_cap:
-            raise ValueError(
-                f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
-                f"exceeds cache slack {self.max_new_cap}")
+            raise RequestRejected(
+                r.rid,
+                f"max_new_tokens={r.max_new_tokens} exceeds cache slack "
+                f"{self.max_new_cap} (raise max_new_cap)",
+                length=r.max_new_tokens, limit=self.max_new_cap,
+                limit_name="max_new_cap")
         if self.mode == "drain" or not self.prefill_chunk:
             if L > self.prompt_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt length {L} exceeds the static "
-                    f"prompt width {self.prompt_len} and would be silently "
-                    "truncated; raise prompt_len or enable the "
-                    "chunked-prefill lane (prefill_chunk > 0)")
+                raise RequestRejected(
+                    r.rid,
+                    f"prompt length {L} exceeds the static prompt width "
+                    f"{self.prompt_len} (monolithic admission) and would "
+                    "be silently truncated; raise prompt_len or enable the "
+                    "chunked-prefill lane (prefill_chunk > 0)",
+                    length=L, limit=self.prompt_len,
+                    limit_name="prompt_len")
         elif self._kv_extent is not None\
                 and L + r.max_new_tokens > self._kv_extent:
-            raise ValueError(
-                f"request {r.rid}: prompt length {L} + "
-                f"max_new_tokens={r.max_new_tokens} exceeds the KV extent "
-                f"{self._kv_extent}")
+            raise RequestRejected(
+                r.rid,
+                f"prompt length {L} + max_new_tokens={r.max_new_tokens} "
+                f"= {L + r.max_new_tokens} exceeds the KV extent "
+                f"{self._kv_extent} (chunked admission; raise prompt_len "
+                "or max_new_cap)",
+                length=L + r.max_new_tokens, limit=self._kv_extent,
+                limit_name="kv_extent")
 
     def submit(self, req: Request):
         self._validate_request(req)
         req.t_enqueue = time.monotonic()
+        req.status = "queued"
         self.queue.append(req)
 
     # ------------------------------------------------------------------
@@ -943,7 +1328,8 @@ class ServingEngine:
                 kv_bucket_chunk=self.kv_bucket_chunk,
                 prefill_chunk=self.prefill_chunk,
                 debug_reset_slots=self.debug_reset_slots,
-                a_shards=self.a_shards)
+                a_shards=self.a_shards,
+                preemptible=self.preemptible)
 
     def run(self, params, requests: List[Request],
             max_steps: int = 10_000) -> Dict[str, Any]:
@@ -960,6 +1346,11 @@ class ServingEngine:
             self._validate_request(r)
         self._prepare(params)
         self._reset_per_run()
+        # fault-injection hook: installed (or cleared) per run so a clean
+        # reference run on the same engine sees zero injected faults
+        self.rt.set_interceptor(
+            getattr(self.fault_injector, "on_dispatch", None)
+            if self.fault_injector is not None else None)
         if self.mode == "continuous":
             return self._run_continuous(params, requests, max_steps)
         return self._run_drain(params, requests, max_steps)
@@ -974,6 +1365,7 @@ class ServingEngine:
         ex = self._ex
         ex.fresh()
         sched = SlotScheduler(self.slots, requests, self.queue)
+        self._sched = sched
         done: List[Request] = []
         steps = admissions = overlapped = 0
         s_max = self.prompt_len + self.max_new_cap
@@ -981,14 +1373,29 @@ class ServingEngine:
             if steps >= max_steps:
                 break
             sched.pump(steps)
+            if sched.usable_capacity() == 0:
+                # every slot quarantined: nothing can ever be admitted
+                # again — demote ALL remaining work to structured
+                # rejections instead of spinning to max_steps
+                for r in sched.pending + sched.queue:
+                    self._reject(r, "no usable slots (all quarantined)")
+                sched.pending.clear()
+                sched.queue.clear()
+                break
+            self._shed_deadlines(sched)
+            self._bound_queue(sched)
+            self._apply_pressure(sched, steps)
+            self._priority_preempt(sched)
             # "overlapped" = admitted while the batch was already live at
             # the start of this boundary (cold-start fills don't count)
             batch_live = sched.occupied()
             if self.prefill_chunk:
                 while True:
-                    new = sched.assign_free(steps)
-                    admissions += len(new)
-                    overlapped += len(new) if batch_live else 0
+                    n_adm, n_ovl, fin = self._admission_phase(
+                        params, sched, steps, batch_live)
+                    admissions += n_adm
+                    overlapped += n_ovl
+                    done.extend(fin)
                     done.extend(self._advance_chunk_lane(params, sched))
                     # the one-chunk-per-boundary throttle exists to bound
                     # the stall inflicted on LIVE decoders; with none live
@@ -997,11 +1404,13 @@ class ServingEngine:
                     if sched.decode_active().any() or not sched.prefill_fifo:
                         break
             else:
-                n_adm, n_ovl, fin = self._admit_monolithic(
+                n_adm, n_ovl, fin = self._admission_phase(
                     params, sched, steps, batch_live)
                 admissions += n_adm
                 overlapped += n_ovl
                 done.extend(fin)
+            if self.strict_invariants:
+                self._assert_invariants(sched)
             active = sched.decode_active()
             if not active.any():
                 steps += 1                       # idle/prefill-only boundary
@@ -1011,50 +1420,243 @@ class ServingEngine:
         self._caches = ex.caches
         return self._stats(done, steps, admissions, overlapped)
 
-    # -- admission: monolithic lane ------------------------------------
-    def _admit_monolithic(self, params, sched: SlotScheduler, steps: int,
-                          batch_live: bool):
-        """Fill EVERY free slot from the queue with a full-width batch-1
-        prefill + slot write (the pre-chunking admission path, kept as the
-        measured baseline). Prompts are zero-padded up to ``prompt_len`` —
-        never truncated (submit rejects longer) — and the cursor starts at
-        the padded width (the padding IS attended; the chunked lane is the
-        length-true path)."""
+    # -- pressure / SLO policies ---------------------------------------
+    def _shed_deadlines(self, sched: SlotScheduler):
+        """A queued request whose TTFT deadline already expired can only
+        miss — shed it NOW as deadline_missed (terminal, structured)
+        instead of wasting a slot on it. Preempted requests already
+        produced their first token and are never TTFT-shed."""
+        now = time.monotonic()
+        for r in list(sched.queue):
+            if r.ttft_deadline_ms > 0 and not r.generated\
+                    and (now - r.t_enqueue) * 1e3 > r.ttft_deadline_ms:
+                sched.queue.remove(r)
+                self._miss_deadline(
+                    r, f"ttft_deadline_ms={r.ttft_deadline_ms:g} expired "
+                       "in queue")
+
+    def _bound_queue(self, sched: SlotScheduler):
+        """Bounded-queue backpressure: shed the lowest-priority (then most
+        recently enqueued) request while the queue exceeds ``max_queue``.
+        Preempted requests (holding swapped-out KV and emitted tokens) are
+        shed only when nothing else is left."""
+        if not self.max_queue:
+            return
+        while len(sched.queue) > self.max_queue:
+            pool = [r for r in sched.queue if r.swap is None]\
+                or list(sched.queue)
+            v = min(pool, key=lambda r: (r.priority, -r.t_enqueue, -r.rid))
+            sched.queue.remove(v)
+            self._reject(v, f"queue_full (max_queue={self.max_queue})")
+
+    def _pick_victim(self, sched: SlotScheduler) -> Optional[int]:
+        """Lowest-priority decoding slot; most recently admitted within a
+        priority class (least sunk work — its wait already counted and it
+        re-admits first among equals)."""
+        victims = sched.decode_slots()
+        if not victims:
+            return None
+        return min(victims, key=lambda i: (sched.req[i].priority,
+                                           -sched.req[i].t_admitted))
+
+    def _apply_pressure(self, sched: SlotScheduler, steps: int):
+        """Artificial KV pressure from the fault injector: ``slots_held``
+        slots are withheld this boundary — preempt decoding victims until
+        the occupancy fits the reduced capacity, and hold admissions to the
+        same cap (``_slot_cap``) so the boundary doesn't immediately
+        restore what it just swapped out."""
+        self._slot_cap = self.slots
+        inj = self.fault_injector
+        if inj is None or not self.preemptible:
+            return
+        held_fn = getattr(inj, "slots_held", None)
+        if held_fn is None:
+            return
+        cap = max(0, self.slots - int(held_fn(steps)))
+        self._slot_cap = cap
+        for _ in range(self.slots):
+            busy = sum(1 for p in sched.phase if p != sched.FREE)
+            if busy <= cap:
+                break
+            v = self._pick_victim(sched)
+            if v is None or not self._preempt_slot(sched, v):
+                break
+
+    def _priority_preempt(self, sched: SlotScheduler):
+        """Priority lane: while the queue's best request outranks the
+        lowest-priority decoding slot and no usable slot is free, swap the
+        victim out (a block boundary is the ONLY preemption point — KV is
+        consistent there, mid-block it is not host-visible)."""
+        if not self.preemptible:
+            return
+        for _ in range(self.slots):
+            if not sched.queue or sched.usable_free() is not None:
+                break
+            head = sched.top_priority()
+            v = self._pick_victim(sched)
+            if v is None or sched.req[v].priority >= head:
+                break
+            if not self._preempt_slot(sched, v):
+                break
+
+    def _preempt_slot(self, sched: SlotScheduler, slot: int) -> bool:
+        """Token-exact swap-out of one decoding slot: export the stored
+        bytes (read-only program — a failed dispatch leaves the victim
+        decoding), host the image + cursor triple on the request, free the
+        slot and requeue. False if the swap-out dispatch failed."""
         ex = self._ex
+        r = sched.req[slot]
+        t0 = time.monotonic()
+        try:
+            saved = self._dispatch(ex.program_prefix + "swap_out",
+                                   ex.swap_out, slot)
+        except DispatchFailure:
+            return False                 # victim keeps its slot
+        saved = tuple(None if a is None else np.asarray(a) for a in saved)
+        self._swap_time += time.monotonic() - t0
+        r.swap = SwapState(saved=saved,
+                           kv_len=int(sched.positions[slot]),
+                           last_tok=int(sched.last_tok[slot]),
+                           remaining=int(sched.remaining[slot]))
+        r.preemptions += 1
+        self._preemptions += 1
+        sched.preempt(slot)
+        return True
+
+    def _restore(self, params, sched: SlotScheduler, slot: int,
+                 r: Request) -> bool:
+        """Swap a preempted request back in: masked true-length write of
+        its host image, then resume decode with the saved cursor triple —
+        byte-identical to never having been preempted."""
+        ex = self._ex
+        st = r.swap
+        t0 = time.monotonic()
+        try:
+            self._dispatch(ex.program_prefix + "swap_in", ex.swap_in,
+                           st.saved, slot, st.kv_len)
+        except DispatchFailure as e:
+            # the restore never touched the device (DispatchError fires
+            # pre-call): the slot stays clean and FREE; the request is
+            # demoted to a structured rejection
+            self._reject(r, f"dispatch_failed:{e.name}")
+            return False
+        self._swap_time += time.monotonic() - t0
+        r.swap = None
+        sched.resume_decode(slot, r, st)
+        self._restores += 1
+        return True
+
+    # -- admission ------------------------------------------------------
+    def _admission_phase(self, params, sched: SlotScheduler, steps: int,
+                         batch_live: bool):
+        """Drain the queue into usable free slots in priority order. A
+        preempted request re-enters DECODE directly through the swap-in
+        program (no prefill — its KV and cursors are the saved ones); a
+        fresh request enters the chunk lane (PREFILL) or admits
+        monolithically. Returns (fresh admissions, overlapped, finished)."""
         admissions = overlapped = 0
         finished: List[Request] = []
-        for i in range(self.slots):
-            # retry the SAME slot while admissions complete at their first
-            # token (max_new_tokens == 1 / instant EOS) — a one-token
-            # request must not idle the slot until the next boundary
-            while sched.phase[i] == sched.FREE and self.queue:
-                r = self.queue.pop(0)
-                if batch_live:
-                    overlapped += 1
-                r.t_admitted = time.monotonic()
-                r.admit_step = steps
-                sched.req[i] = r
-                t0 = time.monotonic()
-                first = ex.admit_full(params, pad_row(r.prompt,
-                                                      self.prompt_len), i)
-                first.block_until_ready()
-                now = time.monotonic()
-                self._prefill_time += now - t0
-                r.t_first_token = now
-                r.note_emit(now)
-                r.generated.append(int(np.asarray(first)[0]))
-                admissions += 1
-                if r.done:
-                    r.t_done = now
-                    finished.append(r)
-                    sched.req[i] = None
-                    # the admit DID write its prompt KV — zero it like any
-                    # other retirement so dumps stay clean
-                    if ex.has_reset:
-                        ex.reset(i)
-                    continue
-                sched.start_decode(i, self.prompt_len, r.generated[-1])
+        while True:
+            busy = sum(1 for p in sched.phase if p != sched.FREE)
+            if busy >= self._slot_cap:
+                break                    # injected KV pressure holds slots
+            slot = sched.usable_free()
+            if slot is None:
+                break
+            r = sched.pop_queue()
+            if r is None:
+                break
+            if r.swap is not None:
+                self._restore(params, sched, slot, r)
+                continue
+            admissions += 1
+            if batch_live:
+                overlapped += 1
+            if self.prefill_chunk:
+                sched.begin_prefill(slot, r, steps)
+            else:
+                finished.extend(self._admit_one_monolithic(
+                    params, sched, slot, r, steps))
         return admissions, overlapped, finished
+
+    def _admit_one_monolithic(self, params, sched: SlotScheduler, slot: int,
+                              r: Request, steps: int) -> List[Request]:
+        """Full-width batch-1 prefill + slot write (the pre-chunking
+        admission path, kept as the measured baseline). Prompts are
+        zero-padded up to ``prompt_len`` — never truncated (submit rejects
+        longer) — and the cursor starts at the padded width (the padding IS
+        attended; the chunked lane is the length-true path). A one-token
+        request (instant EOS / budget 1) finishes AT admission and frees
+        the slot for the caller's loop to reuse this same boundary."""
+        ex = self._ex
+        r.t_admitted = time.monotonic()
+        r.admit_step = steps
+        r.status = "active"
+        sched.req[slot] = r
+        t0 = time.monotonic()
+        try:
+            first = self._dispatch(
+                ex.program_prefix + "admit", ex.admit_full, params,
+                pad_row(r.prompt, self.prompt_len), slot)
+        except DispatchFailure as e:
+            self._demote_admission(sched, slot, r, e)
+            return []
+        first.block_until_ready()
+        now = time.monotonic()
+        self._prefill_time += now - t0
+        r.t_first_token = now
+        r.note_emit(now)
+        self._emit_token(r, np.asarray(first)[0])
+        if r.done:
+            self._finish(r, now)
+            sched.req[slot] = None
+            # the admit DID write its prompt KV — zero it like any other
+            # retirement so dumps stay clean
+            self._safe_reset(sched, slot)
+            return [r]
+        sched.start_decode(slot, self.prompt_len, r.generated[-1])
+        return []
+
+    def _demote_admission(self, sched: SlotScheduler, slot: int, r: Request,
+                          exc: DispatchFailure):
+        """An admission dispatch exhausted its retries: the slot's cache
+        bytes are suspect (the prompt may be partially written), so the
+        request demotes to a structured rejection and the slot is
+        quarantined — one poisoned request costs one slot, not the
+        engine."""
+        self._reject(r, f"dispatch_failed:{exc.name}")
+        sched.req[slot] = None
+        sched.phase[slot] = sched.FREE
+        if slot in sched.prefill_fifo:
+            sched.prefill_fifo.remove(slot)
+        self._quarantine_slot(sched, slot)
+
+    def _safe_reset(self, sched: SlotScheduler, slot: int):
+        """Debug slot zeroing, hardened: a reset that keeps failing
+        quarantines the slot (its bytes are unknown) instead of killing
+        the serve."""
+        if not self._ex.has_reset:
+            return
+        try:
+            self._dispatch("serve_reset", self._ex.reset, slot)
+        except DispatchFailure:
+            self._quarantine_slot(sched, slot)
+
+    def _assert_invariants(self, sched: SlotScheduler):
+        bad = sched.invariant_violations()
+        for i in range(sched.n):
+            r = sched.req[i]
+            if r is None or sched.phase[i] != sched.DECODE:
+                continue
+            wm = self._cursor_watermark.get(r.rid, -1)
+            pos = int(sched.positions[i])
+            if pos < wm:
+                bad.append(f"rid {r.rid}: cursor moved backwards "
+                           f"{wm} -> {pos}")
+            self._cursor_watermark[r.rid] = pos
+        if bad:
+            raise AssertionError("scheduler invariant violation(s): "
+                                 + "; ".join(bad))
 
     # -- admission: chunked-prefill lane -------------------------------
     def _advance_chunk_lane(self, params, sched: SlotScheduler):
@@ -1063,13 +1665,22 @@ class ServingEngine:
         for one chunk, not one prompt; the final chunk's logits are the
         request's first token and flip the slot to the decode phase with
         its cursor at the TRUE prompt length."""
+        ex = self._ex
         job = sched.next_chunk(self.prefill_chunk, self._kv_extent)
         if job is None:
             return []
         slot, r, start, n_valid = job
         row = pad_row(r.prompt[start:start + n_valid], self.prefill_chunk)
         t0 = time.monotonic()
-        tok = self._ex.run_chunk(params, row, slot, start, n_valid)
+        try:
+            tok = self._dispatch(ex.program_prefix + "prefill_chunk",
+                                 ex.run_chunk, params, row, slot, start,
+                                 n_valid)
+        except DispatchFailure as e:
+            # the slot may hold a partially-written prompt — demote the
+            # request, quarantine the slot (drops it from the FIFO too)
+            self._demote_admission(sched, slot, r, e)
+            return []
         first = np.asarray(tok)                   # blocks: chunk wall-time
         now = time.monotonic()
         self._prefill_time += now - t0
@@ -1078,28 +1689,54 @@ class ServingEngine:
         if sched.chunk_done(slot, start, n_valid):
             r.t_first_token = now
             r.note_emit(now)
-            r.generated.append(int(first[0]))
+            self._emit_token(r, first[0])
             if r.done:
-                r.t_done = now
+                self._finish(r, now)
                 finished.append(r)
                 sched.retire(slot)
-                if self._ex.has_reset:
-                    self._ex.reset(slot)
+                self._safe_reset(sched, slot)
             else:
                 sched.start_decode(slot, len(r.prompt), r.generated[-1])
         return finished
 
     # -- decode round ---------------------------------------------------
+    def _demote_decode(self, sched: SlotScheduler, finished: List[Request],
+                       exc: DispatchFailure) -> np.ndarray:
+        """A decode dispatch exhausted its retries. The fault is the
+        DISPATCH, not an identifiable request — demote the lowest-priority
+        decoding victim (least lost work among the suspects), quarantine
+        its slot, and hand back the shrunken active mask so the caller can
+        retry the round for the survivors. Survivor KV is intact: the
+        failed dispatch never touched its (donated) operands."""
+        v = self._pick_victim(sched)
+        if v is not None:
+            self._reject(sched.req[v], f"dispatch_failed:{exc.name}")
+            sched.retire(v)
+            self._quarantine_slot(sched, v)
+        return sched.decode_active()
+
     def _decode_round(self, params, sched: SlotScheduler, active, s_max):
         """One decode dispatch + ONE counted host sync: a single slotted
-        step (T == 1) or a T-micro-step block with on-device halting."""
+        step (T == 1) or a T-micro-step block with on-device halting. A
+        dispatch that exhausts its retry budget sheds one victim and
+        retries for the survivors — a poisoned round degrades to one
+        structured rejection, never a hung engine."""
         T = self.block_size
         ex = self._ex
         finished: List[Request] = []
         if T == 1:
-            t0 = time.monotonic()
-            nxt, new_pos = ex.decode_step(params, sched.last_tok,
-                                          sched.positions, active)
+            while True:
+                t0 = time.monotonic()
+                try:
+                    nxt, new_pos = self._dispatch(
+                        ex.program_prefix + "decode", ex.decode_step,
+                        params, sched.last_tok, sched.positions, active)
+                except DispatchFailure as e:
+                    active = self._demote_decode(sched, finished, e)
+                    if not active.any():
+                        return finished
+                    continue
+                break
             nxt, new_pos = self._host_sync(nxt, new_pos)
             dt = time.monotonic() - t0
             self.tpot_samples.append(dt)
@@ -1111,26 +1748,39 @@ class ServingEngine:
             for i, r in enumerate(sched.req):
                 if r is None or sched.phase[i] != sched.DECODE:
                     continue
-                r.generated.append(int(nxt[i]))
+                self._emit_token(r, nxt[i])
+                # host-side budget mirror (the device manages it only in
+                # block mode) — keeps SwapState and the invariant checker
+                # uniform across T
+                sched.remaining[i] -= 1
                 r.note_emit(now)
                 if r.done:
-                    r.t_done = now
+                    self._finish(r, now)
                     finished.append(r)
                     sched.retire(i)              # freed → next boundary
-                    if ex.has_reset:
-                        ex.reset(i)
+                    self._safe_reset(sched, i)
         else:
-            # length-aware bucket: smallest compiled extent covering every
-            # live cursor for the whole block (short prompts start low)
-            if len(ex.buckets) > 1:
-                needed = int(sched.positions[active].max()) + T
-                sb = bucket_for(min(needed, s_max), ex.buckets)
-            else:
-                sb = ex.buckets[0]
-            t0 = time.monotonic()
-            out = ex.decode_block(params, sb, sched.last_tok,
-                                  sched.positions, active,
-                                  sched.remaining, sched.eos)
+            while True:
+                # length-aware bucket: smallest compiled extent covering
+                # every live cursor for the whole block (short prompts
+                # start low); recomputed if a shed victim shrank the mask
+                if len(ex.buckets) > 1:
+                    needed = int(sched.positions[active].max()) + T
+                    sb = bucket_for(min(needed, s_max), ex.buckets)
+                else:
+                    sb = ex.buckets[0]
+                t0 = time.monotonic()
+                try:
+                    out = self._dispatch(
+                        ex.program_prefix + "decode_block", ex.decode_block,
+                        params, sb, sched.last_tok, sched.positions, active,
+                        sched.remaining, sched.eos)
+                except DispatchFailure as e:
+                    active = self._demote_decode(sched, finished, e)
+                    if not active.any():
+                        return finished
+                    continue
+                break
             toks, emitted, last_d, pos_d, act_np, rem_d =\
                 self._host_sync(*out)
             dt = time.monotonic() - t0
@@ -1147,16 +1797,15 @@ class ServingEngine:
                 emitted_any = False
                 for t in range(T):
                     if emitted[t, i]:
-                        r.generated.append(int(toks[t, i]))
+                        self._emit_token(r, toks[t, i])
                         emitted_any = True
                 if emitted_any:
                     r.note_emit(now)
                 if not act_np[i]:                # budget/EOS halt on device
-                    r.t_done = now
+                    self._finish(r, now)
                     finished.append(r)
                     sched.retire(i)              # freed → next boundary
-                    if ex.has_reset:
-                        ex.reset(i)
+                    self._safe_reset(sched, i)
         self._decode_tokens += n_tok
         self._block_tokens.append(n_tok)
         self._macro_steps += 1
@@ -1207,9 +1856,9 @@ class ServingEngine:
                     if r is not None and not r.generated:
                         r.t_first_token = now
                         r.note_emit(now)
-                        r.generated.append(int(first[i]))
+                        self._emit_token(r, first[i])
                         if r.done:
-                            r.t_done = now
+                            self._finish(r, now)
                 last = jnp.asarray(first.astype(np.int32))
             t0 = time.monotonic()
             caches, nxt = ex.drain_decode(params, caches, last)
@@ -1225,11 +1874,11 @@ class ServingEngine:
             for i, r in enumerate(active_req):
                 if r is None or r.done:
                     continue
-                r.generated.append(int(nxt_np[i]))
+                self._emit_token(r, nxt_np[i])
                 r.note_emit(now)
                 n_tok += 1
                 if r.done:
-                    r.t_done = now
+                    self._finish(r, now)
             self._decode_tokens += n_tok
             self._block_tokens.append(n_tok)
             for i, r in enumerate(active_req):
@@ -1282,6 +1931,22 @@ class ServingEngine:
             "tokens_per_macro_step_mean": float(blk.mean()),
             "per_request": per_req,
             "runtime": self.rt.stats(),
+            # pressure / robustness counters (DESIGN.md §7 failure model):
+            # every submitted request is terminally accounted in exactly
+            # one of completed / rejected / deadline_missed
+            "preemptions": self._preemptions,
+            "restores": self._restores,
+            "rejections": len(self._rejected),
+            "deadline_misses": len(self._deadline_missed),
+            "retries": self._retries,
+            "watchdog_timeouts": self._watchdog_timeouts,
+            "quarantined_slots": sorted(self._quarantined),
+            "swap_time_ms": float(self._swap_time * 1e3),
+            "rejected": [
+                {"rid": r.rid, "status": r.status, "priority": r.priority,
+                 "reason": r.reject_reason}
+                for r in sorted(self._rejected + self._deadline_missed,
+                                key=lambda r: r.rid)],
         }
         if self.backend == "wa" and self._ex is not None:
             # measured W↔A traffic — the paper's "only embeddings move"

@@ -27,6 +27,15 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 
 
+class DispatchError(RuntimeError):
+    """A program dispatch failed before the compiled call ran (transient
+    driver hiccup, injected fault). Raised by dispatch interceptors BEFORE
+    ``Compiled.__call__`` touches its operands, so donated buffers are
+    still valid and the caller may retry the dispatch verbatim. The serving
+    engine's retry/quarantine path (DESIGN.md §7) catches exactly this
+    type — anything else is a real bug and propagates."""
+
+
 @dataclass
 class CompiledStep:
     name: str
@@ -41,8 +50,15 @@ class CompiledStep:
     abstract_args: Optional[Tuple] = None
     donate_argnums: Tuple[int, ...] = ()
     static_argnums: Tuple[int, ...] = ()
+    # dispatch interceptor (fault injection / tracing). Runs BEFORE the
+    # compiled call: raising DispatchError here models a dispatch that
+    # never reached the device — donated operands stay valid, the dispatch
+    # is retryable. Installed fleet-wide via StaticRuntime.set_interceptor.
+    interceptor: Optional[Callable[[str], None]] = None
 
     def __call__(self, *args):
+        if self.interceptor is not None:
+            self.interceptor(self.name)
         self.calls += 1
         return self.compiled(*args)
 
@@ -70,6 +86,18 @@ class StaticRuntime:
     def __init__(self, mesh=None):
         self.mesh = mesh
         self._cache: Dict[Tuple, CompiledStep] = {}
+        self._interceptor: Optional[Callable[[str], None]] = None
+
+    def set_interceptor(self, fn: Optional[Callable[[str], None]]):
+        """Install (or clear, with None) a dispatch interceptor on every
+        compiled step — existing and future. The hook runs at the top of
+        each dispatch with the program name; raising ``DispatchError``
+        models a failed dispatch (operands untouched, retry-safe), sleeping
+        models a stalled one. This is the single injection point the chaos
+        harness (``repro.runtime.faults``) uses."""
+        self._interceptor = fn
+        for step in self._cache.values():
+            step.interceptor = fn
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -103,7 +131,8 @@ class StaticRuntime:
                             compile_s=time.monotonic() - t0,
                             fn=fn, abstract_args=abstract_args,
                             donate_argnums=tuple(donate_argnums),
-                            static_argnums=tuple(static_argnums))
+                            static_argnums=tuple(static_argnums),
+                            interceptor=self._interceptor)
         self._cache[key] = step
         return step
 

@@ -1,0 +1,365 @@
+"""Preemptible serving tests (DESIGN.md §7, failure model).
+
+Covers the invariants the preemption ISSUE demands:
+- ``export_slot_kv`` / ``import_slot_kv`` round-trip one slot's stored
+  bytes VERBATIM up to the true length (dense and int8+scales),
+- a preempt-then-restore serve is token-byte-identical to an
+  uninterrupted serve — colocated and WA backends, dense and int8 KV,
+  split-KV (a_shards=2) included — with ``compiles == 1`` per program
+  (the swap pair joins the compile-once set),
+- slot retirement/reuse races: a mid-block EOS retirement followed at the
+  next admission point by re-admission of a PREEMPTED request into the
+  same slot, both backends × T ∈ {1, 8} (stale victim KV beyond the
+  restored length must stay masked out),
+- enqueue rejections are ``RequestRejected`` carrying rid / offending
+  length / per-mode limit as fields (actionable from a fleet log),
+- SLO policies: expired-TTFT queued requests shed as deadline misses;
+  ``max_queue`` sheds lowest-priority work as structured rejections,
+- dispatch hardening: an injected persistent dispatch failure demotes to
+  a structured rejection + slot quarantine WITHOUT corrupting surviving
+  slots; a failed swap-out leaves the victim decoding; retries are
+  counted and transient faults are absorbed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED
+from repro.kv.cache import KVCache, export_slot_kv, import_slot_kv
+from repro.models import NULL_CTX, build_model
+from repro.runtime.serving import (Request, RequestRejected, ServingEngine)
+from repro.runtime.static_runtime import DispatchError
+
+PROMPT_LEN = 8
+CAP = 32
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def dense_int8():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32",
+                                                   kv_dtype="int8")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+def _preempt_plan(cfg, seed=3):
+    """Two low-priority long decoders + one HIGH-priority late arrival:
+    with 2 slots the arrival must preempt a victim; with 3 slots nothing
+    preempts (the uninterrupted reference)."""
+    rng = np.random.default_rng(seed)
+    rs = [Request(rid=i,
+                  prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                      dtype=np.int32),
+                  max_new_tokens=20, arrival_step=0, priority=0)
+          for i in range(2)]
+    rs.append(Request(rid=2,
+                      prompt=rng.integers(0, cfg.vocab_size, 6,
+                                          dtype=np.int32),
+                      max_new_tokens=6, arrival_step=8, priority=5))
+    return rs
+
+
+def _engine(api, slots, *, T=8, chunk=4, backend="colocated", a_shards=1,
+            **kw):
+    return ServingEngine(api, NULL_CTX, slots, PROMPT_LEN,
+                         mode="continuous", max_new_cap=CAP,
+                         block_size=T, kv_bucket_chunk=16 if T > 1 else 0,
+                         prefill_chunk=chunk, backend=backend,
+                         a_shards=a_shards, **kw)
+
+
+# ---------------------------------------------------------------------------
+# KV-level: export/import round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture", ["dense", "dense_int8"])
+def test_export_import_roundtrip_bytes(fixture, request):
+    """One slot's stored bytes survive export → zero → import VERBATIM up
+    to the true length; positions past it keep whatever the cache held
+    (masked out by cursors, exactly the chunk lane's contract)."""
+    _, api, _ = request.getfixturevalue(fixture)
+    caches = api.init_caches(3, 24)
+    rng = np.random.default_rng(0)
+
+    def fill(a):
+        if a is None:
+            return None
+        if a.dtype == jnp.int8:
+            return jnp.asarray(rng.integers(-127, 127, a.shape), jnp.int8)
+        return jnp.asarray(rng.normal(size=a.shape), a.dtype)
+
+    caches = caches._replace(k=fill(caches.k), v=fill(caches.v),
+                             k_scale=fill(caches.k_scale),
+                             v_scale=fill(caches.v_scale))
+    slot, valid = 1, 11
+    saved = export_slot_kv(caches, jnp.asarray(slot, jnp.int32))
+    assert (saved[2] is None) == (caches.k_scale is None)
+    zeroed = api.reset_slot(caches, jnp.asarray(slot, jnp.int32))
+    back = import_slot_kv(zeroed, saved, jnp.asarray(slot, jnp.int32),
+                          jnp.asarray(valid, jnp.int32))
+
+    for name in ("k", "v", "k_scale", "v_scale"):
+        want, got = getattr(caches, name), getattr(back, name)
+        if want is None:
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(want[:, slot, :, :valid]),
+            np.asarray(got[:, slot, :, :valid]),
+            err_msg=f"{name}: restored bytes differ within valid length")
+        assert not np.asarray(got[:, slot, :, valid:]).any(), \
+            f"{name}: import wrote past the true length"
+        # untouched slots must stay untouched
+        other = [s for s in range(3) if s != slot]
+        np.testing.assert_array_equal(np.asarray(want[:, other]),
+                                      np.asarray(got[:, other]))
+
+
+# ---------------------------------------------------------------------------
+# Serve-level: preempt-then-restore == uninterrupted, both backends
+# ---------------------------------------------------------------------------
+
+CELLS = [
+    ("dense", "colocated", 1, 1),
+    ("dense", "colocated", 8, 1),
+    ("dense_int8", "colocated", 8, 1),
+    ("dense", "wa", 8, 1),
+    ("dense_int8", "wa", 8, 2),          # split-KV shard layout covered
+]
+
+
+@pytest.mark.parametrize("fixture,backend,T,a_shards", CELLS)
+def test_preempt_restore_token_identical(fixture, backend, T, a_shards,
+                                         request):
+    cfg, api, params = request.getfixturevalue(fixture)
+    base = _preempt_plan(cfg)
+    _engine(api, 3, T=T, backend=backend, a_shards=a_shards)\
+        .run(params, base, max_steps=600)
+    ref = {r.rid: list(r.generated) for r in base}
+    assert all(ref.values())
+
+    test = _preempt_plan(cfg)
+    eng = _engine(api, 2, T=T, backend=backend, a_shards=a_shards,
+                  preemptible=True, strict_invariants=True)
+    stats = eng.run(params, test, max_steps=600)
+    got = {r.rid: list(r.generated) for r in test}
+
+    assert stats["preemptions"] >= 1, "the high-priority arrival must preempt"
+    assert stats["restores"] >= 1, "the victim must be restored"
+    assert got == ref, "preempt-then-restore diverged from uninterrupted"
+    for name, rec in stats["runtime"].items():
+        assert rec["compiles"] == 1, (name, rec)
+    prefix = "serve_wa_" if backend == "wa" else "serve_"
+    assert f"{prefix}swap_out" in stats["runtime"]
+    assert f"{prefix}swap_in" in stats["runtime"]
+    assert all(r.status == "completed" for r in test)
+    assert all(r.preemptions >= 1 for r in test if r.rid == 0 or r.rid == 1)\
+        or stats["preemptions"] >= 1
+
+
+@pytest.mark.parametrize("backend", ["colocated", "wa"])
+@pytest.mark.parametrize("T", [1, 8])
+def test_midblock_eos_then_preempted_readmission_race(dense, backend, T):
+    """The retirement/reuse race: victim A is preempted for high-priority
+    B; B halts MID-BLOCK (budget 5 with T=8 stops inside the block); the
+    freed slot is reused at the very next admission point to RESTORE A.
+    A's restored decode must mask out B's stale KV beyond A's true
+    length — token equality against the uninterrupted serve proves it."""
+    cfg, api, params = dense
+    rng = np.random.default_rng(7)
+    mk = lambda: [
+        Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                           dtype=np.int32).copy(),
+                max_new_tokens=18, arrival_step=0, priority=0),
+        Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 5,
+                                           dtype=np.int32).copy(),
+                max_new_tokens=5, arrival_step=6, priority=3)]
+    rng = np.random.default_rng(7)
+    base = mk()
+    rng = np.random.default_rng(7)
+    test = mk()
+
+    _engine(api, 2, T=T, backend=backend).run(params, base, max_steps=600)
+    ref = {r.rid: list(r.generated) for r in base}
+
+    eng = _engine(api, 1, T=T, backend=backend, preemptible=True,
+                  strict_invariants=True)
+    stats = eng.run(params, test, max_steps=600)
+    assert stats["preemptions"] == 1 and stats["restores"] == 1
+    assert {r.rid: list(r.generated) for r in test} == ref
+    assert all(r.status == "completed" for r in test)
+
+
+# ---------------------------------------------------------------------------
+# Structured rejections / SLO policies
+# ---------------------------------------------------------------------------
+
+def test_rejection_fields_name_rid_length_and_limit(dense):
+    _, api, _ = dense
+    eng = _engine(api, 2, chunk=0)
+    long = Request(rid=77, prompt=np.arange(PROMPT_LEN + 1, dtype=np.int32),
+                   max_new_tokens=4)
+    with pytest.raises(RequestRejected) as ei:
+        eng.submit(long)
+    e = ei.value
+    assert isinstance(e, ValueError)                 # backwards compatible
+    assert (e.rid, e.length, e.limit, e.limit_name)\
+        == (77, PROMPT_LEN + 1, PROMPT_LEN, "prompt_len")
+    assert "request 77" in str(e) and "truncat" in str(e)
+
+    chunked = _engine(api, 2, chunk=4)
+    big = Request(rid=5, prompt=np.zeros(PROMPT_LEN + CAP, dtype=np.int32),
+                  max_new_tokens=4)
+    with pytest.raises(RequestRejected) as ei:
+        chunked.submit(big)
+    assert ei.value.limit_name == "kv_extent"
+    assert ei.value.limit == PROMPT_LEN + CAP
+
+    with pytest.raises(RequestRejected) as ei:
+        chunked.submit(Request(rid=9, prompt=np.zeros(4, dtype=np.int32),
+                               max_new_tokens=0))
+    assert ei.value.rid == 9 and ei.value.limit_name == "min max_new_tokens"
+
+
+def test_expired_ttft_deadline_sheds_as_deadline_missed(dense):
+    cfg, api, params = dense
+    rng = np.random.default_rng(0)
+    slow = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                              dtype=np.int32),
+                   max_new_tokens=10, arrival_step=0)
+    doomed = Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 4,
+                                                dtype=np.int32),
+                     max_new_tokens=4, arrival_step=0,
+                     ttft_deadline_ms=1e-4)          # expires instantly
+    eng = _engine(api, 1)
+    stats = eng.run(params, [slow, doomed], max_steps=400)
+    assert slow.status == "completed" and len(slow.generated) == 10
+    assert doomed.status == "deadline_missed"
+    assert "ttft_deadline_ms" in doomed.reject_reason
+    assert stats["deadline_misses"] == 1
+    assert [e["rid"] for e in stats["rejected"]] == [1]
+
+
+def test_bounded_queue_sheds_lowest_priority(dense):
+    cfg, api, params = dense
+    rng = np.random.default_rng(1)
+    mk = lambda rid, arr, pri, new=6: Request(
+        rid=rid, prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                     dtype=np.int32),
+        max_new_tokens=new, arrival_step=arr, priority=pri)
+    first = mk(0, 0, 0, new=16)
+    late = [mk(1, 4, 2), mk(2, 4, 1), mk(3, 4, 0)]
+    eng = _engine(api, 1, max_queue=1)
+    stats = eng.run(params, [first] + late, max_steps=400)
+    assert first.status == "completed"
+    assert late[0].status == "completed"             # highest priority kept
+    assert {r.status for r in late[1:]} == {"rejected"}
+    assert all("queue_full" in r.reject_reason for r in late[1:])
+    assert stats["rejections"] == 2
+    assert stats["completed"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Dispatch hardening
+# ---------------------------------------------------------------------------
+
+class _ScriptedInjector:
+    """Deterministically fail the [start, stop) window of dispatches whose
+    name contains one of ``targets`` (counting MATCHING dispatches only,
+    so the window always lands on the target program)."""
+
+    def __init__(self, targets, start, stop):
+        self.targets, self.start, self.stop = targets, start, stop
+        self.matches = 0
+
+    def on_dispatch(self, name):
+        if not any(t in name for t in self.targets):
+            return
+        self.matches += 1
+        if self.start <= self.matches - 1 < self.stop:
+            raise DispatchError(f"scripted failure #{self.matches} "
+                                f"for {name}")
+
+
+def test_transient_dispatch_fault_absorbed_by_retry(dense):
+    """A fault window shorter than the retry budget is invisible except
+    in the retry counter — every request still completes, tokens exact."""
+    cfg, api, params = dense
+    rng = np.random.default_rng(2)
+    mk = lambda: [Request(rid=i,
+                          prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                              dtype=np.int32),
+                          max_new_tokens=8, arrival_step=0)
+                  for i in range(2)]
+    rng = np.random.default_rng(2)
+    base = mk()
+    rng = np.random.default_rng(2)
+    test = mk()
+    _engine(api, 2).run(params, base, max_steps=400)
+    inj = _ScriptedInjector(["decode"], start=1, stop=2)   # ONE failure
+    eng = _engine(api, 2, max_retries=2, fault_injector=inj)
+    stats = eng.run(params, test, max_steps=400)
+    assert stats["retries"] == 1 and stats["rejections"] == 0
+    assert {r.rid: r.generated for r in test}\
+        == {r.rid: r.generated for r in base}
+
+
+def test_persistent_dispatch_failure_demotes_not_hangs(dense):
+    """A persistently failing decode dispatch must shed ONE victim as a
+    structured rejection (slot quarantined) and keep serving the
+    survivor — whose tokens stay byte-identical to a clean run."""
+    cfg, api, params = dense
+    rng = np.random.default_rng(4)
+    mk = lambda: [Request(rid=i,
+                          prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                              dtype=np.int32),
+                          max_new_tokens=10, arrival_step=0, priority=i)
+                  for i in range(2)]
+    rng = np.random.default_rng(4)
+    base = mk()
+    rng = np.random.default_rng(4)
+    test = mk()
+    _engine(api, 2).run(params, base, max_steps=400)
+    ref = {r.rid: list(r.generated) for r in base}
+
+    # fail 4 consecutive decode dispatches: the retry budget (2) exhausts
+    # mid-window, whichever request is decoding when the window lands is
+    # shed (pop_queue admits the HIGHER-priority rid 1 first, so it is the
+    # sole decoder and the only possible victim), and the window's tail is
+    # absorbed by the survivor's own retry
+    inj = _ScriptedInjector(["decode"], start=1, stop=5)
+    eng = _engine(api, 2, max_retries=2, fault_injector=inj,
+                  strict_invariants=True)
+    stats = eng.run(params, test, max_steps=400)
+
+    victim = next(r for r in test if r.status == "rejected")
+    survivor = next(r for r in test if r.status == "completed")
+    assert "dispatch_failed" in victim.reject_reason
+    assert stats["rejections"] == 1 and stats["quarantined_slots"]
+    assert survivor.generated == ref[survivor.rid], \
+        "survivor tokens corrupted by the demotion"
+
+
+def test_failed_swap_out_leaves_victim_decoding(dense):
+    """Swap-out is read-only: when ITS dispatch fails, the preemption is
+    abandoned and the victim keeps decoding — nobody loses tokens."""
+    cfg, api, params = dense
+    base = _preempt_plan(cfg)
+    _engine(api, 3).run(params, base, max_steps=600)
+    ref = {r.rid: list(r.generated) for r in base}
+
+    test = _preempt_plan(cfg)
+    inj = _ScriptedInjector(["swap_out"], start=0, stop=10_000)
+    eng = _engine(api, 2, preemptible=True, max_retries=1,
+                  fault_injector=inj, strict_invariants=True)
+    stats = eng.run(params, test, max_steps=600)
+    assert stats["preemptions"] == 0 and stats["restores"] == 0
+    assert all(r.status == "completed" for r in test)
+    assert {r.rid: list(r.generated) for r in test} == ref
