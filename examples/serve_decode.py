@@ -39,6 +39,12 @@ ap.add_argument("--a-shards", type=int, default=1,
                      "LSE merge — token-exact, and the long-context "
                      "attention walk scales with the A-domain width "
                      "(prompt_len + decode slack must divide by N)")
+ap.add_argument("--overlap", type=int, default=1,
+                help="sub-operator micro-batch pipelining depth across the "
+                     "W/A boundary (backend wa only; 1, 2 or 4): while A "
+                     "attends one micro-batch, W runs QKV/FFN for the "
+                     "next — token-exact at every depth, same compiled "
+                     "program names (DESIGN.md §3)")
 ap.add_argument("--preemptible", action="store_true",
                 help="compile the token-exact KV swap pair and allow "
                      "priority/pressure preemption at block boundaries "
@@ -59,8 +65,8 @@ stats = serve(args.arch, args.requests, args.batch_slots, args.prompt_len,
               block_size=args.block_size,
               kv_bucket_chunk=args.kv_bucket_chunk,
               prefill_chunk=args.prefill_chunk, backend=args.backend,
-              a_shards=args.a_shards, preemptible=args.preemptible,
-              max_queue=args.max_queue)
+              a_shards=args.a_shards, overlap=args.overlap,
+              preemptible=args.preemptible, max_queue=args.max_queue)
 print(f"\nmode:        {stats['mode']} (backend={stats['backend']})")
 print(f"completed:   {stats['completed']} "
       f"({stats['admissions']} admissions, "
@@ -90,3 +96,10 @@ if "wa" in stats:
     print(f"W<->A route: {wa['routing_bytes_per_token'] / 1024:.1f} KiB/token "
           f"({wa['routing_total_bytes'] / 1e6:.2f} MB total — "
           "'only embeddings move', DESIGN.md §3)")
+    print(f"overlap:     depth={wa['overlap']} "
+          f"efficiency={wa['overlap_efficiency']:.3f} "
+          f"(W busy {wa['w_busy_ticks']}/{wa['schedule_ticks']} ticks, "
+          f"A busy {wa['a_busy_ticks']}/{wa['schedule_ticks']}); "
+          f"W-idle {wa['w_idle_ms_per_macro_step']:.2f} ms / "
+          f"A-idle {wa['a_idle_ms_per_macro_step']:.2f} ms per macro-step; "
+          f"micro-batch occupancy {wa['micro_batch_occupancy']:.2f}")

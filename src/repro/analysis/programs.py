@@ -56,6 +56,7 @@ class CellSpec:
     backend: str = "colocated"
     kv_dtype: Optional[str] = None          # None = dense, "int8" = quantized
     a_shards: int = 1
+    overlap: int = 1                        # W/A micro-batch pipelining depth
     block_size: int = 4
     prefill_chunk: int = 4                  # 0 → monolithic admission
     slots: int = 2
@@ -71,7 +72,8 @@ class CellSpec:
         adm = f"chunk{self.prefill_chunk}" if self.prefill_chunk \
             else "monolithic"
         return (f"{self.label}: {self.arch} backend={self.backend} kv={kv} "
-                f"a_shards={self.a_shards} T={self.block_size} adm={adm}")
+                f"a_shards={self.a_shards} overlap={self.overlap} "
+                f"T={self.block_size} adm={adm}")
 
 
 @dataclass
@@ -161,6 +163,7 @@ def build_cell(spec: CellSpec, mesh) -> Cell:
                         kv_bucket_chunk=spec.kv_bucket_chunk,
                         prefill_chunk=spec.prefill_chunk,
                         backend=spec.backend, a_shards=spec.a_shards,
+                        overlap=spec.overlap,
                         preemptible=spec.preemptible)
     eng._prepare(params_aval)               # compiles; runs nothing
     caches_aval = eng._caches_aval
@@ -187,7 +190,10 @@ def make_mesh(data: int, model: int):
 # ---------------------------------------------------------------------------
 
 def ci_matrix() -> List[CellSpec]:
-    """Both backends × {dense, int8} × a_shards {1, 4} (the CI job)."""
+    """Both backends × {dense, int8} × a_shards {1, 4}, plus the
+    sub-operator overlap cells (depth 2 and 4; slots=4 so the batch splits
+    into equal micro-batches) — residency / compile-once / host-sync /
+    routing gate the pipelined programs too (the CI job)."""
     out = []
     for backend in ("colocated", "wa"):
         for kv in (None, "int8"):
@@ -196,12 +202,16 @@ def ci_matrix() -> List[CellSpec]:
                 out.append(CellSpec(
                     label=f"{backend}-{kvs}-a{sh}",
                     backend=backend, kv_dtype=kv, a_shards=sh))
+    out.append(CellSpec(label="wa-dense-a1-ov2", backend="wa",
+                        overlap=2, slots=4))
+    out.append(CellSpec(label="wa-int8-a4-ov4", backend="wa",
+                        kv_dtype="int8", a_shards=4, overlap=4, slots=4))
     return out
 
 
 def full_matrix() -> List[CellSpec]:
-    """The acceptance matrix: CI cells + monolithic admission, a_shards=2
-    and the per-step (T=1) decode program."""
+    """The acceptance matrix: CI cells + monolithic admission, a_shards=2,
+    the per-step (T=1) decode program and a T=1 overlap cell."""
     out = ci_matrix()
     for backend in ("colocated", "wa"):
         out.append(CellSpec(label=f"{backend}-dense-a1-mono",
@@ -209,6 +219,8 @@ def full_matrix() -> List[CellSpec]:
         out.append(CellSpec(label=f"{backend}-dense-a2",
                             backend=backend, a_shards=2))
     out.append(CellSpec(label="wa-dense-a1-T1", backend="wa", block_size=1))
+    out.append(CellSpec(label="wa-dense-a1-T1-ov2", backend="wa",
+                        block_size=1, overlap=2, slots=4))
     return out
 
 

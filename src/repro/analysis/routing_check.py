@@ -10,14 +10,22 @@ walks the jaxpr for the tagged hop markers (``wa_hop_to_a`` /
 a dropped hop (a layer silently bypassing the A domain), an extra hop, or
 a meter constant that no longer matches what the compiled program moves.
 
+Sub-operator overlap (``overlap`` = D > 1) scales the hop COUNT of the
+slotted decode programs, not the bytes: the pipelined layer loop routes
+each micro-batch separately, so a decode micro-step carries ``D × 3L``
+W→A and ``D × L`` A→W hops of ``rows / D`` rows each. Chunk/admission
+programs are batch-1 and never pipeline (D = 1 for them regardless of the
+knob).
+
 The bytes identity: per micro-step the A→W hops carry
-``L × rows × n_heads × head_dim × el`` bytes while the analytic meter
-claims ``2 × L × rows × d_model × el`` total, so
+``L × rows × n_heads × head_dim × el`` bytes IN TOTAL across micro-batches
+(depth-invariant) while the analytic meter claims
+``2 × L × rows × d_model × el``, so
 
     2 × d_model × Σ(A→W hop bytes)  ==  (n_heads × head_dim) × analytic
 
-holds exactly in integers for every current program — checked per program
-with no tolerance.
+holds exactly in integers for every current program at every overlap
+depth — checked per program with no tolerance.
 """
 from __future__ import annotations
 
@@ -83,11 +91,16 @@ def check_routing(cell: Cell, report: Report):
         to_a_n, _to_a_b, _ = stats[WA_HOP_TO_A]
         to_w_n, to_w_b, to_w_dt = stats[WA_HOP_TO_W]
         L = cfg.n_layers
-        if to_a_n != 3 * L * trips or to_w_n != L * trips:
+        # overlap depth D multiplies the hop COUNT of the slotted decode
+        # programs (one routed chain per micro-batch); chunk/admission
+        # programs are batch-1 and stay sequential at any depth
+        depth = backend.overlap if rec.kind in ("decode", "block") else 1
+        if to_a_n != 3 * L * trips * depth or to_w_n != L * trips * depth:
             report.error(
                 PASS, rec.name, "hop count",
-                f"expected 3·L·T={3 * L * trips} W→A and L·T={L * trips} "
-                f"A→W routed hops (L={L} layers, T={trips} micro-steps) "
+                f"expected 3·L·T·D={3 * L * trips * depth} W→A and "
+                f"L·T·D={L * trips * depth} A→W routed hops (L={L} "
+                f"layers, T={trips} micro-steps, overlap D={depth}) "
                 f"but the compiled program routes {to_a_n} W→A / {to_w_n} "
                 "A→W — a W↔A boundary was dropped or duplicated in "
                 "core/wa.py's layer loop")

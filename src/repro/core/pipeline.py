@@ -75,6 +75,52 @@ def stage_params(params: Dict[str, Any], n_stages: int) -> Dict[str, Any]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Stage-skew schedule machinery
+# ---------------------------------------------------------------------------
+# The skew pattern of this module's token pipeline — participant m runs work
+# item (t - m) at tick t — generalized so ``core/wa.py`` can software-
+# pipeline its W/A layer loop over micro-batches (sub-operator overlap,
+# DESIGN.md §3): the schedule is STATIC (pure python ints), so the unrolled
+# trace compiles into one program per cell regardless of depth.
+
+def skewed_schedule(n_ops: int, depth: int):
+    """Static software-pipeline schedule: ``depth`` participants each run
+    the same chain of ``n_ops`` ops, participant ``m`` skewed ``m`` ticks
+    behind participant 0. Returns ``[(tick, [(m, op), ...]), ...]`` covering
+    ``n_ops + depth - 1`` ticks; at each tick the live participants hold
+    CONSECUTIVE op indices (op = tick - m), so for an alternating two-domain
+    op chain adjacent participants always occupy opposite domains."""
+    if n_ops < 1 or depth < 1:
+        raise ValueError(f"need n_ops >= 1 and depth >= 1, got "
+                         f"({n_ops}, {depth})")
+    return [(t, [(m, t - m) for m in range(depth) if 0 <= t - m < n_ops])
+            for t in range(n_ops + depth - 1)]
+
+
+def wa_schedule_occupancy(n_layers: int, depth: int) -> Dict[str, Any]:
+    """Per-domain occupancy of the skewed WA decode schedule: the op chain
+    is 2L+1 alternating ops (even = W: QKV/FFN, odd = A: attention), so a
+    tick is W-busy (A-busy) when any live micro-batch holds an even (odd)
+    op. Depth 1 degenerates to the sequential loop — every tick runs
+    exactly one domain and ``overlap_efficiency`` is ~0.5; depth >= 2 keeps
+    both domains busy on every interior tick (efficiency → 1). Pure
+    schedule arithmetic: the SAME numbers for the compiled program and for
+    ``stats()['wa']``'s stall accounting, with no wall-clock noise."""
+    sched = skewed_schedule(2 * n_layers + 1, depth)
+    w_busy = sum(1 for _t, live in sched if any(op % 2 == 0 for _m, op in live))
+    a_busy = sum(1 for _t, live in sched if any(op % 2 == 1 for _m, op in live))
+    total = len(sched)
+    return {
+        "total_ticks": total,
+        "w_busy_ticks": w_busy,
+        "a_busy_ticks": a_busy,
+        "w_idle_frac": (total - w_busy) / total,
+        "a_idle_frac": (total - a_busy) / total,
+        "overlap_efficiency": (w_busy + a_busy) / (2 * total),
+    }
+
+
 def make_pp_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                  executor: str = "sub_operator", lr: float = 3e-4):
     from repro.core.execution import StepBundle

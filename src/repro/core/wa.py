@@ -60,6 +60,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig
+from repro.core.pipeline import skewed_schedule
 from repro.core.residency import plan as residency_plan
 from repro.models import common
 from repro.models.attention import chunk_attention, decode_attention,\
@@ -114,8 +115,26 @@ def wa_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> WAPlan:
 
 def routing_bytes(cfg: ModelConfig, batch: int, bytes_per_el: int = 2) -> int:
     """Per-decoded-token W↔A activation traffic: 2 hops per layer of the
-    (B, d_model) embedding — the paper's 'only embeddings move'."""
+    (B, d_model) embedding — the paper's 'only embeddings move'. Invariant
+    under ``overlap``: depth D routes D× as many hops each carrying B/D
+    rows, so the analytic total is the same at every depth."""
     return 2 * cfg.n_layers * batch * cfg.d_model * bytes_per_el
+
+
+def micro_batch_slices(batch: int, depth: int) -> Tuple[slice, ...]:
+    """Contiguous per-micro-batch row slices for overlap depth ``depth`` —
+    the SINGLE source of truth for per-micro-batch slot membership, shared
+    by the pipelined layer loop below and the ``SlotScheduler``'s occupancy
+    view (``runtime/serving.py``), so the overlap path cannot drift from
+    the scheduler's idea of which slots ride which micro-batch."""
+    if depth < 1:
+        raise ValueError(f"overlap depth must be >= 1, got {depth}")
+    if batch % depth:
+        raise ValueError(
+            f"batch {batch} does not divide into overlap depth {depth} "
+            "equal micro-batches (pick slots divisible by overlap)")
+    m = batch // depth
+    return tuple(slice(i * m, (i + 1) * m) for i in range(depth))
 
 
 # ---------------------------------------------------------------------------
@@ -174,7 +193,8 @@ class WADisaggregated:
 
     def __init__(self, cfg: ModelConfig, mesh: Optional[Mesh],
                  plan: Optional[WAPlan] = None, *,
-                 routing: str = "device_put", a_shards: int = 1):
+                 routing: str = "device_put", a_shards: int = 1,
+                 overlap: int = 1):
         if routing not in ("device_put", "sharding"):
             raise ValueError(routing)
         if a_shards < 1:
@@ -183,6 +203,13 @@ class WADisaggregated:
             raise ValueError(
                 "split-KV decode (a_shards > 1) is an AOT sharded read — "
                 "build WADisaggregated(routing='sharding')")
+        if overlap < 1:
+            raise ValueError(f"overlap must be >= 1, got {overlap}")
+        if overlap > 1 and routing != "sharding":
+            raise ValueError(
+                "sub-operator overlap (overlap > 1) software-pipelines the "
+                "layer loop inside ONE compiled program — build "
+                "WADisaggregated(routing='sharding')")
         self.cfg = cfg
         self.plan = plan
         self.routing = routing
@@ -191,6 +218,12 @@ class WADisaggregated:
         # "kv_shard" logical axis, mapped onto the A submesh), with the
         # LSE merge combining the per-shard partial softmax statistics
         self.a_shards = a_shards
+        # overlap > 1: sub-operator pipelining — the slotted decode step
+        # splits its batch into `overlap` micro-batches and runs the
+        # skewed two-domain schedule (_layer_loop_pipelined) so W and A
+        # are concurrently busy on DIFFERENT micro-batches. Depth 1 keeps
+        # the sequential _layer_loop verbatim (today's exact programs).
+        self.overlap = overlap
         if routing == "device_put":
             if plan is None:
                 raise ValueError("device_put routing needs a WAPlan (submesh "
@@ -387,6 +420,104 @@ class WADisaggregated:
                                        self.w_ctx)
         return (k_st, v_st, ks_st, vs_st), logits
 
+    def _layer_loop_pipelined(self, params, cache: KVCache, tokens,
+                              positions, attend):
+        """Software-pipelined W→A→W layer loop (``overlap`` > 1, the
+        paper's §3.2 sub-operator dependency relaxation applied to the WA
+        boundary). The batch splits into ``overlap`` contiguous
+        micro-batches; each runs the SAME chain of 2L+1 alternating ops
+        (even = W: embed/QKV/FFN/unembed, odd = A: attention), skewed one
+        tick per micro-batch (``core.pipeline.skewed_schedule``). At any
+        tick the live micro-batches hold consecutive op indices — adjacent
+        micro-batches always occupy OPPOSITE domains, so while A attends
+        micro-batch m at layer l, W already runs QKV/FFN for micro-batch
+        m+1 at the same layer, and m's layer l+1 W work starts the tick
+        its A result lands. The routed q/k/v and attention outputs are
+        held in per-micro-batch double buffers (``routed``/``backed``)
+        whose producers and consumers sit one tick apart, so XLA's latency
+        hiding can overlap the W-regime and A-regime collectives instead
+        of serializing them at a per-layer barrier. The schedule is STATIC
+        (python ints only): one compiled program per cell, same program
+        names as depth 1.
+
+        Token-exact by construction: every op is row-wise over the batch
+        (per-slot KV, per-row cursors/masks), so splitting rows into
+        micro-batches reorders no per-row reduction. ``attend(kv_slices,
+        q, k, v, sl)`` must run the A-side program on micro-batch rows
+        ``sl``. Returns (new k/v/scale stacks, logits) like
+        ``_layer_loop``."""
+        cfg, D = self.cfg, self.overlap
+        L = cfg.n_layers
+        from repro.models.transformer import unembed_table
+        slices = micro_batch_slices(tokens.shape[0], D)
+        k_st, v_st, ks_st, vs_st = self._pin_cache_stacks(
+            cache.k, cache.v, cache.k_scale, cache.v_scale)
+        lps = [jax.tree.map(lambda a, _i=i: a[_i], params["blocks"])
+               for i in range(L)]
+        xs = [None] * D          # per-micro-batch residual stream (W side)
+        routed = [None] * D      # in-flight W→A (q,k,v) double buffers
+        backed = [None] * D      # in-flight A→W attention-output buffers
+        logits = [None] * D
+        # per-(layer, micro-batch) updated KV pieces. The micro-batch
+        # chains must stay INDEPENDENT dataflow: threading the stacks
+        # through per-micro-batch scatter updates would version the whole
+        # cache through every A op — a serial chain re-coupling the very
+        # chains the schedule decoupled (and a full-stack copy per scatter
+        # wherever XLA cannot prove slice disjointness). So all reads are
+        # gathers from the ENTRY stacks (each micro-batch reads only its
+        # own rows, no other micro-batch writes them — value-identical to
+        # the sequential loop) and the updated stacks are assembled ONCE
+        # at the end, concat over micro-batches, stack over layers.
+        new_kv = [[None] * D for _ in range(L)]
+        for _t, live in skewed_schedule(2 * L + 1, D):
+            for m, op in live:
+                sl = slices[m]
+                j = op // 2
+                if op % 2:
+                    # -- A-domain op: attend layer j for micro-batch m ----
+                    q, k, v = routed[m]
+                    routed[m] = None
+                    kv_i = tuple(None if c is None else c[j, sl]
+                                 for c in (k_st, v_st, ks_st, vs_st))
+                    new_kv[j][m], o = attend(kv_i, q, k, v, sl)
+                    # route toward W the tick it lands (A's send side)
+                    backed[m] = self._to_w(o[:, None])
+                    continue
+                # -- W-domain op j: finish layer j-1, start layer j -------
+                if j == 0:
+                    x = common.embed(params["embed"], tokens[sl][:, None],
+                                     self.w_ctx)
+                    if cfg.pos == "learned":
+                        x = x + jnp.take(params["pos_embed"],
+                                         positions[sl, 0],
+                                         axis=0)[:, None].astype(x.dtype)
+                else:
+                    o, backed[m] = backed[m], None
+                    x = self._w_post(lps[j - 1], xs[m], o)
+                if j < L:
+                    q, k, v = self._w_qkv(lps[j], x, positions[sl])
+                    routed[m] = (self._to_a(q), self._to_a(k), self._to_a(v))
+                    xs[m] = x
+                else:
+                    xs[m] = None
+                    x = common.apply_norm(cfg.norm, params["ln_f"], x,
+                                          cfg.norm_eps)
+                    logits[m] = common.unembed_logits(
+                        unembed_table(params, cfg), x, self.w_ctx)
+
+        def assemble(idx):
+            if new_kv[0][0][idx] is None:
+                return None
+            return jnp.stack([jnp.concatenate([new_kv[j][m][idx]
+                                               for m in range(D)], axis=0)
+                              for j in range(L)])
+
+        # re-pin: the assembled stacks are NEW buffers and must land on the
+        # same A-domain layout the entry pin promised the donation chain
+        stacks = self._pin_cache_stacks(assemble(0), assemble(1),
+                                        assemble(2), assemble(3))
+        return stacks, jnp.concatenate(logits, axis=0)
+
     def decode_step(self, params, cache: KVCache, tokens):
         """Python-orchestrated per-layer routing. params live on W (weights
         resident, no KV there); KV lives on A. Used for correctness and
@@ -407,12 +538,20 @@ class WADisaggregated:
         same ``write_slot_kv`` the colocated engine uses — the A node owns
         the KV, so admission touches only A-side state. ``kv_bucket``
         (static) caps the attended extent — the serving engine's
-        length-aware walk, applied at the A-side read."""
-        (k, v, ks, vs), logits = self._layer_loop(
-            params, cache, tokens, positions[:, None],
-            lambda kv_i, q, kk, vv: self._a_attend_slotted(
-                kv_i, q, kk, vv, positions, active, window=cache.window,
-                kv_bucket=kv_bucket))
+        length-aware walk, applied at the A-side read. ``overlap`` > 1
+        runs the software-pipelined schedule over micro-batch row slices
+        (every A-side op is row-wise, so the split is token-exact)."""
+        def attend(kv_i, q, kk, vv, sl=slice(None)):
+            pos, act = (positions, active) if sl == slice(None)\
+                else (positions[sl], active[sl])
+            return self._a_attend_slotted(kv_i, q, kk, vv, pos, act,
+                                          window=cache.window,
+                                          kv_bucket=kv_bucket)
+
+        loop = self._layer_loop_pipelined if self.overlap > 1\
+            else self._layer_loop
+        (k, v, ks, vs), logits = loop(
+            params, cache, tokens, positions[:, None], attend)
         new_len = jnp.maximum(
             cache.length, jnp.max(jnp.where(active, positions, 0)) + 1)
         return cache._replace(k=k, v=v, k_scale=ks, v_scale=vs,

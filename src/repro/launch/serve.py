@@ -43,7 +43,7 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
           executor: str = "sub_operator", mode: str = "auto",
           arrival_every: int = 0, block_size: int = 1,
           kv_bucket_chunk: int = 0, prefill_chunk: int = 0,
-          backend: str = "colocated", a_shards: int = 1,
+          backend: str = "colocated", a_shards: int = 1, overlap: int = 1,
           preemptible: bool = False, max_queue: int = 0):
     cfg = get_config(arch)
     if reduced:
@@ -62,8 +62,8 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
                         block_size=block_size,
                         kv_bucket_chunk=kv_bucket_chunk,
                         prefill_chunk=prefill_chunk, backend=backend,
-                        a_shards=a_shards, preemptible=preemptible,
-                        max_queue=max_queue)
+                        a_shards=a_shards, overlap=overlap,
+                        preemptible=preemptible, max_queue=max_queue)
     stats = eng.run(params, reqs)
     return stats
 
@@ -103,6 +103,12 @@ def main(argv=None):
                          "the KV extent must divide by N; under --backend "
                          "wa on a mesh the shards ride the A-domain model "
                          "axis)")
+    ap.add_argument("--overlap", type=int, default=1,
+                    help="sub-operator micro-batch pipelining depth for "
+                         "the W/A boundary (backend wa only; 1, 2 or 4 — "
+                         "batch must divide evenly): W runs QKV/FFN for "
+                         "one micro-batch while A attends another, "
+                         "token-exact at every depth (DESIGN.md §3)")
     ap.add_argument("--preemptible", action="store_true",
                     help="compile the token-exact KV swap pair and allow "
                          "priority/pressure preemption at block boundaries "
@@ -119,11 +125,23 @@ def main(argv=None):
                   kv_bucket_chunk=args.kv_bucket_chunk,
                   prefill_chunk=args.prefill_chunk,
                   backend=args.backend, a_shards=args.a_shards,
-                  preemptible=args.preemptible, max_queue=args.max_queue)
+                  overlap=args.overlap, preemptible=args.preemptible,
+                  max_queue=args.max_queue)
     per_req = stats.pop("per_request")
     rt = stats.pop("runtime")
     rejected = stats.pop("rejected")
     print("serve stats:", stats)
+    if "wa" in stats:
+        # per-domain stall accounting of the W/A schedule (DESIGN.md §3):
+        # overlap efficiency = busy ticks / total over both domains
+        wa = stats["wa"]
+        print(f"wa overlap: depth={wa['overlap']} "
+              f"efficiency={wa['overlap_efficiency']:.3f} "
+              f"(W busy {wa['w_busy_ticks']}/{wa['schedule_ticks']}, "
+              f"A busy {wa['a_busy_ticks']}/{wa['schedule_ticks']} ticks); "
+              f"per macro-step W-idle {wa['w_idle_ms_per_macro_step']:.2f} "
+              f"ms / A-idle {wa['a_idle_ms_per_macro_step']:.2f} ms; "
+              f"micro-batch occupancy {wa['micro_batch_occupancy']:.2f}")
     # pressure / robustness counters (DESIGN.md §7): every submitted
     # request is terminally accounted completed / rejected / deadline-missed
     print(f"pressure: preemptions={stats['preemptions']} "

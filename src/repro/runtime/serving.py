@@ -82,7 +82,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.wa import WADisaggregated, routing_bytes
+from repro.core.pipeline import wa_schedule_occupancy
+from repro.core.wa import WADisaggregated, micro_batch_slices, routing_bytes
 from repro.kv.cache import KVCache, export_slot_kv, import_slot_kv
 from repro.models.attention import bucket_for, kv_buckets
 from repro.models.common import dtype_of
@@ -278,6 +279,16 @@ class SlotScheduler:
 
     def decode_active(self) -> np.ndarray:
         return np.array([p == self.DECODE for p in self.phase])
+
+    def micro_batch_view(self, depth: int, active=None):
+        """Per-micro-batch (slot indices, active-mask rows) under overlap
+        depth ``depth`` — routed through ``core.wa.micro_batch_slices``,
+        the SAME helper the pipelined layer loop slices its rows with, so
+        the scheduler's occupancy view and the backend's micro-batch split
+        share one source of truth and cannot drift."""
+        act = self.decode_active() if active is None else np.asarray(active)
+        return [(list(range(sl.start, sl.stop)), act[sl])
+                for sl in micro_batch_slices(self.n, depth)]
 
     # -- priority queue / quarantine --------------------------------------
     def usable_free(self) -> Optional[int]:
@@ -481,13 +492,16 @@ class ExecutorBackend:
                  prompt_len: int, max_new_cap: int, block_size: int,
                  kv_bucket_chunk: int, prefill_chunk: int,
                  debug_reset_slots: bool, a_shards: int = 1,
-                 preemptible: bool = False):
+                 overlap: int = 1, preemptible: bool = False):
         self.api, self.ctx, self.rt = api, ctx, rt
         self.slots, self.prompt_len = slots, prompt_len
         self.max_new_cap = max_new_cap
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
         self.a_shards = a_shards
+        # sub-operator overlap depth (micro-batch software pipelining of
+        # the W/A boundary — WA backend only; the engine validated it)
+        self.overlap = overlap
         self.preemptible = preemptible
         self.caches = None
         self.buckets: Tuple[int, ...] = ()
@@ -588,6 +602,10 @@ class ExecutorBackend:
         pos0 = jnp.zeros((B,), jnp.int32)
         act0 = jnp.zeros((B,), bool)
         tok0 = jnp.zeros((B,), jnp.int32)
+        # overlap depth is a build-time static baked into the SAME program
+        # names (depth 1 compiles today's exact program set); record it as
+        # program metadata so stats()/logs can say which variant serves
+        meta = {"overlap": self.overlap} if self.overlap > 1 else None
         if T > 1:
             # -- macro-step block programs, one per KV bucket --------------
             self.buckets = self._bucket_set(caches_aval, kv_bucket_chunk)
@@ -603,7 +621,7 @@ class ExecutorBackend:
                 self._decode_blocks[sb] = self.rt.compile_step(
                     name, block_step,
                     (params, caches_aval, tok0, pos0, act0, rem0, eos0),
-                    donate_argnums=(1,))
+                    donate_argnums=(1,), meta=meta)
             return
 
         def decode_fn(p, caches, tokens, positions, active):
@@ -613,7 +631,7 @@ class ExecutorBackend:
         self._decode = self.rt.compile_step(
             f"{prefix}decode", decode_fn,
             (params, caches_aval, tok0, pos0, act0),
-            donate_argnums=(1,))
+            donate_argnums=(1,), meta=meta)
 
     def _build_continuous(self, params, caches_aval, kv_bucket_chunk,
                           prefill_chunk, debug_reset_slots):
@@ -816,7 +834,8 @@ class WABackend(ExecutorBackend):
         api, ctx = self.api, self.ctx
         B, P, T = self.slots, self.prompt_len, self.block_size
         self.wa = WADisaggregated(api.config, ctx.mesh, routing="sharding",
-                                  a_shards=self.a_shards)
+                                  a_shards=self.a_shards,
+                                  overlap=self.overlap)
         self._el = jnp.dtype(dtype_of(api.config)).itemsize
         self.routed_bytes = 0
         scalar = jnp.zeros((), jnp.int32)
@@ -904,13 +923,40 @@ class WABackend(ExecutorBackend):
     def routing_stats(self, decode_tokens: int) -> Dict[str, Any]:
         """The measured 'only embeddings move' numbers for ``run()`` stats:
         the per-token claim (2 hops × L × d_model for one row) plus the
-        metered total across every dispatched program this run."""
+        metered total across every dispatched program this run. Both are
+        overlap-invariant: depth D routes D× as many hops each carrying
+        B/D rows."""
         return {
             "routing_bytes_per_token": routing_bytes(self.api.config, 1,
                                                      self._el),
             "routing_total_bytes": int(self.routed_bytes),
             "routing_bytes_per_decode_token":
                 float(self.routed_bytes / max(decode_tokens, 1)),
+        }
+
+    def overlap_stats(self, decode_time_s: float, macro_steps: int,
+                      mb_live: int, mb_total: int) -> Dict[str, Any]:
+        """Per-domain stall accounting for the sub-operator overlap
+        schedule (DESIGN.md §3). The skewed schedule is STATIC, so each
+        domain's idle ticks are exact schedule arithmetic
+        (``core.pipeline.wa_schedule_occupancy``) — the measured decode
+        wall-time per macro-step splits by those fractions into W-idle vs
+        A-idle time, and ``overlap_efficiency`` is busy ticks over total
+        (both domains): ~0.5 sequential, → 1 as depth grows.
+        ``micro_batch_occupancy`` is the scheduler-view fraction of
+        dispatched micro-batches that carried a live slot (a fully-idle
+        micro-batch still executes — static programs dispatch all rows)."""
+        occ = wa_schedule_occupancy(self.api.config.n_layers, self.overlap)
+        step_ms = decode_time_s * 1e3 / max(macro_steps, 1)
+        return {
+            "overlap": self.overlap,
+            "overlap_efficiency": occ["overlap_efficiency"],
+            "schedule_ticks": occ["total_ticks"],
+            "w_busy_ticks": occ["w_busy_ticks"],
+            "a_busy_ticks": occ["a_busy_ticks"],
+            "w_idle_ms_per_macro_step": step_ms * occ["w_idle_frac"],
+            "a_idle_ms_per_macro_step": step_ms * occ["a_idle_frac"],
+            "micro_batch_occupancy": float(mb_live / max(mb_total, 1)),
         }
 
 
@@ -978,6 +1024,22 @@ class ServingEngine:
     Program names do not change — the shard count is a build-time static
     baked into the same programs, so compiles == 1 still holds per bucket.
 
+    ``overlap``: sub-operator micro-batch pipelining of the W/A boundary
+    (WA backend only, DESIGN.md §3). > 1 splits each decode dispatch's
+    batch into that many equal micro-batches and software-pipelines them
+    through the routed layer loop with skewed layer indices
+    (``core/wa.py::_layer_loop_pipelined``): W runs QKV/FFN for one
+    micro-batch while A attends another — true sub-operator dependencies
+    instead of a per-layer W→A→W barrier. Token-exact at every depth,
+    program names unchanged (the depth is a build-time static; depth 1
+    compiles today's exact sequential programs), composes with macro-step
+    blocks, KV buckets, split-KV ``a_shards``, chunked prefill and the
+    preemption swap pair (the swap programs are cache-only — no layer
+    loop, nothing to pipeline). ``batch_slots`` must divide by
+    ``overlap``. ``stats()['wa']`` reports the schedule's per-domain
+    stall accounting (W-idle / A-idle per macro-step, overlap
+    efficiency).
+
     ``preemptible``: compile the token-exact swap pair
     (``serve_[wa_]swap_out`` / ``serve_[wa_]swap_in``) and allow the
     boundary loop to preempt a decoding slot — swap its true-length KV to
@@ -1024,6 +1086,7 @@ class ServingEngine:
                  prefill_chunk: int = 0,
                  debug_reset_slots: bool = False,
                  backend: str = "colocated", a_shards: int = 1,
+                 overlap: int = 1,
                  preemptible: bool = False, max_queue: int = 0,
                  max_retries: int = 2, retry_backoff_s: float = 0.0,
                  watchdog_s: float = 0.0,
@@ -1040,6 +1103,21 @@ class ServingEngine:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         if prefill_chunk < 0:
             raise ValueError(f"prefill_chunk must be >= 0, got {prefill_chunk}")
+        if overlap < 1:
+            raise ValueError(f"overlap must be >= 1, got {overlap}")
+        if overlap > 1:
+            # sub-operator pipelining splits the decode batch into overlap
+            # micro-batches and skews them across the W/A boundary — it
+            # needs that boundary (the WA backend) and equal micro-batches
+            if backend != "wa":
+                raise ValueError(
+                    f"overlap={overlap} pipelines the W/A boundary; the "
+                    f"{backend} backend has no W↔A hops to overlap "
+                    "(use backend='wa', DESIGN.md §3)")
+            if batch_slots % overlap:
+                raise ValueError(
+                    f"batch_slots={batch_slots} does not divide into "
+                    f"overlap={overlap} equal micro-batches")
         if backend == "wa":
             # the WA backend carries its own decode/admission programs
             # (core/wa.py) — it needs the continuous scheduler and a family
@@ -1098,6 +1176,7 @@ class ServingEngine:
         self.kv_bucket_chunk = kv_bucket_chunk
         self.prefill_chunk = prefill_chunk
         self.a_shards = a_shards
+        self.overlap = overlap
         self.debug_reset_slots = debug_reset_slots
         self.preemptible = preemptible
         self.max_queue = max_queue
@@ -1183,6 +1262,9 @@ class ServingEngine:
         self._prefill_chunks = 0
         self._block_tokens: List[int] = []
         self._macro_steps = 0
+        # micro-batch occupancy under overlap > 1 (scheduler view)
+        self._micro_batches_live = 0
+        self._micro_batches_total = 0
         self.queue = []
         # pressure/robustness accounting (DESIGN.md §7 failure model)
         self._rejected: List[Request] = []
@@ -1328,7 +1410,7 @@ class ServingEngine:
                 kv_bucket_chunk=self.kv_bucket_chunk,
                 prefill_chunk=self.prefill_chunk,
                 debug_reset_slots=self.debug_reset_slots,
-                a_shards=self.a_shards,
+                a_shards=self.a_shards, overlap=self.overlap,
                 preemptible=self.preemptible)
 
     def run(self, params, requests: List[Request],
@@ -1724,6 +1806,14 @@ class ServingEngine:
         T = self.block_size
         ex = self._ex
         finished: List[Request] = []
+        if ex.overlap > 1:
+            # scheduler-view micro-batch occupancy (single source of truth
+            # with the layer loop's row split: micro_batch_slices) — a
+            # fully-idle micro-batch still dispatches, so this measures
+            # how much of the pipelined work carried live slots
+            for _slots, act in sched.micro_batch_view(ex.overlap, active):
+                self._micro_batches_total += 1
+                self._micro_batches_live += bool(act.any())
         if T == 1:
             while True:
                 t0 = time.monotonic()
@@ -1950,6 +2040,10 @@ class ServingEngine:
         }
         if self.backend == "wa" and self._ex is not None:
             # measured W↔A traffic — the paper's "only embeddings move"
-            # claim as a number in every run's output
+            # claim as a number in every run's output — plus the
+            # per-domain stall accounting of the overlap schedule
             out["wa"] = self._ex.routing_stats(n_dec)
+            out["wa"].update(self._ex.overlap_stats(
+                self._decode_time, self._macro_steps,
+                self._micro_batches_live, self._micro_batches_total))
         return out

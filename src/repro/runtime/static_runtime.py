@@ -50,6 +50,11 @@ class CompiledStep:
     abstract_args: Optional[Tuple] = None
     donate_argnums: Tuple[int, ...] = ()
     static_argnums: Tuple[int, ...] = ()
+    # build-time statics baked into this program that do NOT show in the
+    # name or signature (e.g. the WA backend's sub-operator overlap depth)
+    # — surfaced through StaticRuntime.stats() so a serve log can say
+    # WHICH variant of a program it dispatched
+    meta: Optional[Dict[str, Any]] = None
     # dispatch interceptor (fault injection / tracing). Runs BEFORE the
     # compiled call: raising DispatchError here models a dispatch that
     # never reached the device — donated operands stay valid, the dispatch
@@ -115,7 +120,8 @@ class StaticRuntime:
     def compile_step(self, name: str, fn: Callable, abstract_args: Tuple,
                      in_shardings=None, out_shardings=None,
                      donate_argnums: Tuple[int, ...] = (),
-                     static_argnums: Tuple[int, ...] = ()) -> CompiledStep:
+                     static_argnums: Tuple[int, ...] = (),
+                     meta: Optional[Dict[str, Any]] = None) -> CompiledStep:
         key = (name, id(self.mesh), self._sig(abstract_args))
         if key in self._cache:
             return self._cache[key]
@@ -132,6 +138,7 @@ class StaticRuntime:
                             fn=fn, abstract_args=abstract_args,
                             donate_argnums=tuple(donate_argnums),
                             static_argnums=tuple(static_argnums),
+                            meta=dict(meta) if meta else None,
                             interceptor=self._interceptor)
         self._cache[key] = step
         return step
@@ -159,4 +166,6 @@ class StaticRuntime:
             rec["compiles"] += 1
             rec["compile_s"] += s.compile_s
             rec["calls"] += s.calls
+            if s.meta:
+                rec.update(s.meta)
         return out

@@ -93,13 +93,18 @@ def test_routing_confirms_analytic_meter(wa_cell):
 
 def test_matrices_cover_acceptance_grid():
     ci = ci_matrix()
-    assert len(ci) == 8
+    assert len(ci) == 10
     assert {s.backend for s in ci} == {"colocated", "wa"}
     assert {s.a_shards for s in ci} == {1, 4}
+    # sub-operator overlap cells gate the pipelined decode programs; their
+    # slot count must split into equal micro-batches
+    ov = [s for s in ci if s.overlap > 1]
+    assert {s.overlap for s in ov} == {2, 4}
+    assert all(s.backend == "wa" and s.slots % s.overlap == 0 for s in ov)
     full = full_matrix()
     labels = {s.label for s in full}
     assert {"colocated-dense-a1-mono", "wa-dense-a2",
-            "wa-dense-a1-T1"} <= labels
+            "wa-dense-a1-T1", "wa-dense-a1-T1-ov2"} <= labels
 
 
 def test_classify_kinds():
@@ -228,6 +233,7 @@ def test_routing_flags_meter_drift(wa_cell):
         records=wa_cell.records,
         backend=SimpleNamespace(
             _el=wa_cell.backend._el,
+            overlap=wa_cell.backend.overlap,
             expected_routing=lambda name: (
                 10 * wa_cell.backend.expected_routing(name)[0],
                 wa_cell.backend.expected_routing(name)[1])))

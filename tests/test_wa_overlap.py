@@ -1,0 +1,318 @@
+"""Sub-operator W/A overlap tests (DESIGN.md §3, overlapped micro-batch
+decode).
+
+The pipelined layer loop (``core/wa.py::_layer_loop_pipelined``) splits
+each decode dispatch's batch into ``overlap`` micro-batches and runs them
+skewed across the W/A boundary — W computes QKV/FFN for one micro-batch
+while A attends another. Every op is row-wise over the batch, so the split
+must be TOKEN-EXACT, and the schedule is static, so the program set and
+the compiles == 1 invariant must not change. Covered here:
+
+- token-exactness matrix: overlapped vs sequential WA vs colocated,
+  dense/int8 × T ∈ {1, 8} × overlap ∈ {1, 2, 4} × a_shards ∈ {1, 2},
+  chunked AND monolithic admission,
+- compiles == 1 per program across engine reuse at depth > 1, with the
+  depth surfaced as program metadata and the SAME program names as
+  depth 1,
+- preempt-then-restore at overlap=2 matches the uninterrupted streams,
+- schedule/occupancy arithmetic (``core.pipeline``): depth 1 degenerates
+  to the sequential loop (efficiency 0.5), adjacent micro-batches always
+  occupy opposite domains at depth >= 2,
+- the scheduler's micro-batch occupancy view and the layer loop's row
+  split share ONE helper (``core.wa.micro_batch_slices``),
+- validation: overlap needs the WA backend, an evenly-dividing slot
+  count, and AOT sharding routing.
+
+Float32 fixtures for the same reason as test_wa_backend.py: token equality
+must test the schedule's semantics, not bf16 accumulation-order luck.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED
+from repro.core.pipeline import skewed_schedule, wa_schedule_occupancy
+from repro.core.wa import WADisaggregated, micro_batch_slices
+from repro.models import NULL_CTX, build_model
+from repro.runtime.serving import Request, ServingEngine, SlotScheduler
+from repro.runtime.static_runtime import StaticRuntime
+
+PROMPT_LEN = 8
+SLOTS = 4                       # divides by every overlap depth under test
+CAP = 32
+
+# staggered plan: mid-serve admissions + retirements so micro-batches see
+# mixed active masks (idle rows MUST still be token-exact pass-throughs)
+PLAN = [(9, 0), (13, 0), (5, 2), (9, 6), (7, 9), (6, 12)]
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def dense_int8():
+    cfg = ASSIGNED["qwen2-0.5b"].reduced().replace(dtype="float32",
+                                                   kv_dtype="int8")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.key(0))
+
+
+def _requests(cfg, plan, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                        dtype=np.int32),
+                    max_new_tokens=new, arrival_step=arr)
+            for i, (new, arr) in enumerate(plan)]
+
+
+def _serve(api, params, backend, T, chunk, overlap=1, a_shards=1, rt=None,
+           slots=SLOTS):
+    reqs = _requests(api.config, PLAN)
+    eng = ServingEngine(api, NULL_CTX, slots, PROMPT_LEN,
+                        runtime=rt or StaticRuntime(), mode="continuous",
+                        max_new_cap=CAP, block_size=T,
+                        kv_bucket_chunk=16 if T > 1 else 0,
+                        prefill_chunk=chunk, backend=backend,
+                        a_shards=a_shards, overlap=overlap)
+    stats = eng.run(params, reqs, max_steps=400)
+    assert stats["completed"] == len(PLAN)
+    return [list(r.generated) for r in reqs], stats, eng
+
+
+# one serve per distinct config across the whole matrix (the baselines are
+# shared by many cells) — keyed streams, module-lifetime
+_STREAMS = {}
+
+
+def _streams(request, kv, backend, T, chunk, overlap=1, a_shards=1):
+    key = (kv, backend, T, chunk, overlap, a_shards)
+    if key not in _STREAMS:
+        _, api, params = request.getfixturevalue(
+            "dense" if kv == "dense" else "dense_int8")
+        _STREAMS[key] = _serve(api, params, backend, T, chunk,
+                               overlap=overlap, a_shards=a_shards)[0]
+    return _STREAMS[key]
+
+
+# ---------------------------------------------------------------------------
+# schedule arithmetic (core.pipeline stage-skew machinery)
+# ---------------------------------------------------------------------------
+
+def test_micro_batch_slices_partition_the_batch():
+    for batch, depth in [(4, 1), (4, 2), (4, 4), (8, 2), (2, 2)]:
+        sls = micro_batch_slices(batch, depth)
+        assert len(sls) == depth
+        rows = [i for sl in sls for i in range(batch)[sl]]
+        assert rows == list(range(batch)), "slices must tile the batch"
+    with pytest.raises(ValueError, match="not divide|does not divide"):
+        micro_batch_slices(4, 3)
+    with pytest.raises(ValueError, match=">= 1"):
+        micro_batch_slices(4, 0)
+
+
+def test_skewed_schedule_shape_and_parity():
+    """At any tick the live micro-batches hold CONSECUTIVE op indices, so
+    for the alternating W/A chain adjacent micro-batches sit in opposite
+    domains — the property the overlap win rests on."""
+    for n_ops, depth in [(7, 1), (7, 2), (7, 4), (9, 2)]:
+        sched = skewed_schedule(n_ops, depth)
+        assert len(sched) == n_ops + depth - 1
+        done = {m: [] for m in range(depth)}
+        for _t, live in sched:
+            ops = [op for _m, op in live]
+            assert ops == sorted(ops, reverse=True) or \
+                sorted(ops) == list(range(min(ops), min(ops) + len(ops)))
+            if len(ops) >= 2:
+                assert {op % 2 for op in ops} == {0, 1}
+            for m, op in live:
+                done[m].append(op)
+        # every micro-batch runs its FULL chain in order
+        assert all(done[m] == list(range(n_ops)) for m in range(depth))
+    with pytest.raises(ValueError):
+        skewed_schedule(0, 2)
+
+
+def test_wa_schedule_occupancy_depth_one_is_sequential():
+    L = 3
+    occ = wa_schedule_occupancy(L, 1)
+    assert occ["total_ticks"] == 2 * L + 1
+    assert occ["w_busy_ticks"] == L + 1 and occ["a_busy_ticks"] == L
+    assert occ["overlap_efficiency"] == pytest.approx(0.5)
+    # efficiency grows strictly with depth toward 1
+    effs = [wa_schedule_occupancy(L, d)["overlap_efficiency"]
+            for d in (1, 2, 4)]
+    assert effs == sorted(effs) and effs[0] < effs[1] < effs[2] < 1.0
+    # depth >= 2: only the fill/drain edge ticks leave a domain idle
+    occ2 = wa_schedule_occupancy(L, 2)
+    assert occ2["w_busy_ticks"] == occ2["total_ticks"]
+    assert occ2["a_busy_ticks"] == occ2["total_ticks"] - 2
+
+
+# ---------------------------------------------------------------------------
+# token-exactness matrix: overlapped vs sequential WA vs colocated
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("a_shards", [1, 2])
+@pytest.mark.parametrize("overlap", [1, 2, 4])
+@pytest.mark.parametrize("T", [1, 8])
+@pytest.mark.parametrize("kv", ["dense", "int8"])
+def test_overlap_token_exact_chunked(request, kv, T, overlap, a_shards):
+    """Chunked admission: every overlap depth must reproduce the
+    sequential WA streams (bit-exact — same row-wise math on row slices)
+    and the colocated streams (token-exact) on the staggered workload."""
+    got = _streams(request, kv, "wa", T, 3, overlap, a_shards)
+    seq = _streams(request, kv, "wa", T, 3, 1, a_shards)
+    co = _streams(request, kv, "colocated", T, 3)
+    assert got == seq, f"overlap={overlap} diverged from sequential WA"
+    assert got == co, f"overlap={overlap} diverged from colocated"
+
+
+@pytest.mark.parametrize("overlap", [2, 4])
+def test_overlap_token_exact_monolithic(request, overlap):
+    """Monolithic admission (serve_wa_admit full-width chunk) composes
+    with the pipelined decode blocks."""
+    got = _streams(request, "dense", "wa", 8, 0, overlap)
+    seq = _streams(request, "dense", "wa", 8, 0, 1)
+    co = _streams(request, "dense", "colocated", 8, 0)
+    assert got == seq and got == co
+
+
+# ---------------------------------------------------------------------------
+# compiles == 1 and the unchanged program set
+# ---------------------------------------------------------------------------
+
+def test_overlap_compiles_once_same_program_names(dense):
+    """Depth is a build-time static: the pipelined engine compiles
+    EXACTLY the sequential program names, once each, across engine reuse;
+    the depth shows up only as program metadata in stats()."""
+    cfg, api, params = dense
+    rt = StaticRuntime()
+    _, stats, eng = _serve(api, params, "wa", 8, 3, overlap=2, rt=rt)
+    assert set(stats["runtime"]) == {
+        "serve_wa_prefill_chunk", "serve_wa_decode_block_s16",
+        "serve_wa_decode_block_s32", "serve_wa_decode_block_s40"}
+    for name, rec in stats["runtime"].items():
+        assert rec["compiles"] == 1, (name, rec)
+        if "decode_block" in name:
+            assert rec["overlap"] == 2     # static_runtime meta plumbing
+        else:
+            assert "overlap" not in rec    # chunk lane never pipelines
+    # engine reuse: a second run recompiles nothing
+    stats2 = eng.run(params, _requests(cfg, PLAN), max_steps=400)
+    assert stats2["completed"] == len(PLAN)
+    assert all(r["compiles"] == 1 for r in stats2["runtime"].values())
+
+
+def test_depth_one_has_no_meta_key(dense):
+    """overlap=1 must compile to today's exact program set — stats records
+    carry no overlap annotation at depth 1."""
+    _, api, params = dense
+    _, stats, _ = _serve(api, params, "wa", 8, 3, overlap=1)
+    assert all("overlap" not in rec for rec in stats["runtime"].values())
+
+
+# ---------------------------------------------------------------------------
+# preempt-then-restore at overlap=2
+# ---------------------------------------------------------------------------
+
+def test_overlap_preempt_restore_token_identical(dense):
+    """The swap pair is cache-only (no layer loop → nothing to pipeline):
+    preempt + restore under overlap=2 reproduces the uninterrupted
+    streams, and the swap programs join the compile-once set unchanged."""
+    cfg, api, params = dense
+
+    def plan(seed=3):
+        rng = np.random.default_rng(seed)
+        rs = [Request(rid=i,
+                      prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                          dtype=np.int32),
+                      max_new_tokens=20, arrival_step=0, priority=0)
+              for i in range(2)]
+        rs.append(Request(rid=2,
+                          prompt=rng.integers(0, cfg.vocab_size, 6,
+                                              dtype=np.int32),
+                          max_new_tokens=6, arrival_step=8, priority=5))
+        return rs
+
+    def engine(slots, **kw):
+        return ServingEngine(api, NULL_CTX, slots, PROMPT_LEN,
+                             mode="continuous", max_new_cap=CAP,
+                             block_size=8, kv_bucket_chunk=16,
+                             prefill_chunk=4, backend="wa", overlap=2, **kw)
+
+    base = plan()
+    engine(4).run(params, base, max_steps=600)      # roomy: no preemption
+    ref = {r.rid: list(r.generated) for r in base}
+    assert all(ref.values())
+
+    test = plan()
+    stats = engine(2, preemptible=True, strict_invariants=True)\
+        .run(params, test, max_steps=600)
+    assert stats["preemptions"] >= 1 and stats["restores"] >= 1
+    assert {r.rid: list(r.generated) for r in test} == ref
+    assert {"serve_wa_swap_out", "serve_wa_swap_in"} <= set(stats["runtime"])
+    assert all(r["compiles"] == 1 for r in stats["runtime"].values())
+
+
+# ---------------------------------------------------------------------------
+# stall accounting + the scheduler's micro-batch view
+# ---------------------------------------------------------------------------
+
+def test_overlap_stats_report_stall_accounting(dense):
+    _, api, params = dense
+    _, s2, _ = _serve(api, params, "wa", 8, 3, overlap=2)
+    wa = s2["wa"]
+    L = api.config.n_layers
+    occ = wa_schedule_occupancy(L, 2)
+    assert wa["overlap"] == 2
+    assert wa["overlap_efficiency"] == pytest.approx(
+        occ["overlap_efficiency"])
+    assert wa["schedule_ticks"] == occ["total_ticks"]
+    assert wa["w_idle_ms_per_macro_step"] >= 0.0
+    assert wa["a_idle_ms_per_macro_step"] > 0.0   # drain edge ticks
+    assert 0.0 < wa["micro_batch_occupancy"] <= 1.0
+    # sequential engine reports the degenerate schedule, same keys
+    _, s1, _ = _serve(api, params, "wa", 8, 3, overlap=1)
+    assert s1["wa"]["overlap"] == 1
+    assert s1["wa"]["overlap_efficiency"] == pytest.approx(0.5)
+    # routing bytes are depth-invariant: D× hops of B/D rows each
+    assert s1["wa"]["routing_total_bytes"] == wa["routing_total_bytes"]
+
+
+def test_scheduler_micro_batch_view_single_source_of_truth():
+    """The scheduler's per-micro-batch membership must be EXACTLY the
+    layer loop's row split — both route through micro_batch_slices."""
+    sched = SlotScheduler(4, [], [])
+    sched.phase = [sched.DECODE, sched.FREE, sched.DECODE, sched.DECODE]
+    view = sched.micro_batch_view(2)
+    sls = micro_batch_slices(4, 2)
+    assert [slots for slots, _ in view] == \
+        [list(range(sl.start, sl.stop)) for sl in sls]
+    acts = [a.tolist() for _, a in view]
+    assert acts == [[True, False], [True, True]]
+    # explicit mask override (the dispatch-time mask, not phase-derived)
+    view2 = sched.micro_batch_view(4, np.array([False, False, True, False]))
+    assert [a.tolist() for _, a in view2] == [[False], [False], [True],
+                                              [False]]
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_overlap_validation(dense):
+    _, api, _ = dense
+    with pytest.raises(ValueError, match="no W↔A hops"):
+        ServingEngine(api, NULL_CTX, 4, PROMPT_LEN, backend="colocated",
+                      overlap=2)
+    with pytest.raises(ValueError, match="does not divide"):
+        ServingEngine(api, NULL_CTX, 3, PROMPT_LEN, backend="wa", overlap=2)
+    with pytest.raises(ValueError, match=">= 1"):
+        ServingEngine(api, NULL_CTX, 4, PROMPT_LEN, backend="wa", overlap=0)
+    with pytest.raises(ValueError, match="sharding"):
+        WADisaggregated(api.config, None, routing="device_put", overlap=2)
