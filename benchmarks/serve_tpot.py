@@ -67,7 +67,23 @@ Three claims are measured on the CPU dry-run config:
    tentpole claims; the win condition is projected depth {2,4} beating
    the measured depth-1 TPOT.
 
-6. Split-KV flash decode (ISSUE 6 / DESIGN.md §3): at 8k–32k context the
+6. Tiered KV cache (DESIGN.md §7): every slot's KV splits into a hot ring
+   at the resident dtype and a quantized cold prefix demoted in fixed
+   blocks inside the compiled programs. Two measurements: (a) the
+   ALLOCATION model at the full qwen2-0.5b geometry and a 32k-token slot —
+   exact byte accounting via ``jax.eval_shape`` of the real
+   ``init_kv_cache`` for flat bf16 vs tiering with each cold dtype
+   {bf16, int8, int4}, reported as slots-at-equal-bytes and
+   context-at-equal-bytes multipliers (the acceptance claim: ≥ 2× for the
+   packed-int4 cold tier); (b) a LIVE serve sweep on the reduced config
+   proving each swept lane actually serves — bf16-cold streams must equal
+   the flat cache bit-for-bit, the arbiter must observe in-program
+   demotions, and compiles must stay 1. Every other scenario additionally
+   records its engine's allocated ``kv_bytes_per_slot`` / total cache
+   bytes so each committed latency is priced against the KV bytes it was
+   achieved with.
+
+7. Split-KV flash decode (ISSUE 6 / DESIGN.md §3): at 8k–32k context the
    per-token attention walk dominates decode, and sharding one slot's KV
    along the sequence axis over the A submesh divides it by the A-width.
    Measured as the per-device critical path (one C/w shard-local partial
@@ -121,6 +137,19 @@ def _workload(cfg, seed=0):
             for i, (new, arr) in enumerate(plan)]
 
 
+def _cache_footprint(eng):
+    """Allocated KV bytes of the engine's slot caches, computed exactly
+    from the cache aval (every leaf: k/v stores, quantization scales, the
+    tiered hot ring, cursors). ``cache_bytes_total`` is also the peak — the
+    slot caches are allocated once per run at full extent."""
+    import jax
+    leaves = jax.tree_util.tree_leaves(eng._caches_aval)
+    total = int(sum(int(np.prod(leaf.shape, dtype=np.int64))
+                    * np.dtype(leaf.dtype).itemsize for leaf in leaves))
+    return {"cache_bytes_total": total,
+            "kv_bytes_per_slot": total // max(eng.slots, 1)}
+
+
 def _long_prompt_workload(cfg, seed=0):
     # two short requests decoding when a LONG-prompt request lands mid-serve:
     # its admission prefill is the decode-stall the chunked lane bounds
@@ -169,6 +198,7 @@ def _long_prompt_scenario(api, params, ctx):
             "throughput_tok_s": st["throughput_tok_s"],
             "max_compiles_per_step": max(compiles.values()),
             "compiles": compiles,
+            **_cache_footprint(eng),
         }
         emit(f"serving/long_prompt/{name}/inflight_max_gap",
              max(short_gaps) * 1e3,
@@ -256,6 +286,7 @@ def _pressure_scenario(api, params, ctx):
             "deadline_met_fraction": frac,
             "max_compiles_per_step": max(compiles.values()),
             "compiles": compiles,
+            **_cache_footprint(eng),
         }
         emit(f"serving/pressure/{name}/goodput_under_deadline",
              goodput,
@@ -338,6 +369,7 @@ def _overlap_sweep_scenario(api, params, ctx):
             "routing_total_bytes": wa["routing_total_bytes"],
             "max_compiles_per_step": max(compiles.values()),
             "compiles": compiles,
+            **_cache_footprint(eng),
         }
         emit(f"serving/wa_overlap/depth{depth}/tpot",
              st["tpot_mean_ms"] * 1e3,
@@ -374,6 +406,148 @@ def _overlap_sweep_scenario(api, params, ctx):
              f"{out[f'depth{d}']['tpot_mean_ms']:.3f};"
              "measured_is_single_stream_serialization="
              f"{out['config']['single_execution_stream']}")
+    return out
+
+
+# -- tiered-KV 32k scenario ------------------------------------------------
+TK_CONTEXT = 32768           # one slot's KV extent at the full geometry
+TK_HOT_WINDOW = 1024         # resident-dtype hot ring
+TK_COLD_BLOCK = 128          # demotion granularity (build-time static)
+TK_COLD_DTYPES = ("bfloat16", "int8", "int4")
+TK_LIVE_HOT = 8              # live sweep on the reduced config
+TK_LIVE_BLOCK = 8
+
+
+def _tiered_kv_32k_scenario(ctx):
+    """Tiered KV cache at 32k context (DESIGN.md §7). The allocation model
+    prices one slot's KV at the FULL qwen2-0.5b geometry — flat bf16 vs a
+    hot ring + quantized cold prefix per cold dtype — with exact byte
+    accounting via ``jax.eval_shape`` of the real ``init_kv_cache`` (the
+    same constructor serving allocates through; scales, packed int4 lanes
+    and the hot ring all priced). The committed claim is the equal-bytes
+    win: how many tiered slots fit in one flat slot's bytes, and how far
+    one slot's context stretches on the flat byte budget. A live serve
+    sweep on the reduced config then proves each swept lane SERVES:
+    bf16-cold streams equal the flat cache bit-for-bit, the arbiter
+    observes in-program demotions, compiles stay 1."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_config
+    from repro.kv.cache import init_kv_cache
+    from repro.models import build_model
+    from repro.runtime.serving import ServingEngine
+
+    def nbytes(tree):
+        return int(sum(int(np.prod(leaf.shape, dtype=np.int64))
+                       * np.dtype(leaf.dtype).itemsize
+                       for leaf in jax.tree_util.tree_leaves(tree)))
+
+    full = get_config("qwen2-0.5b")
+    L, n_kv, hd = full.n_layers, full.n_kv_heads, full.head_dim
+    out = {"config": {"arch": "qwen2-0.5b (full geometry)",
+                      "n_layers": L, "n_kv_heads": n_kv, "head_dim": hd,
+                      "context": TK_CONTEXT, "hot_window": TK_HOT_WINDOW,
+                      "cold_block": TK_COLD_BLOCK,
+                      "cold_dtypes": list(TK_COLD_DTYPES)}}
+    flat_aval = jax.eval_shape(lambda: init_kv_cache(
+        L, 1, n_kv, TK_CONTEXT, hd, dtype=jnp.bfloat16))
+    flat_bytes = nbytes(flat_aval)
+    out["flat_bf16"] = {"kv_bytes_per_slot": flat_bytes}
+    for cold in TK_COLD_DTYPES:
+        aval = jax.eval_shape(lambda c=cold: init_kv_cache(
+            L, 1, n_kv, TK_CONTEXT, hd, dtype=jnp.bfloat16,
+            hot_window=TK_HOT_WINDOW, cold_block=TK_COLD_BLOCK,
+            cold_dtype=c))
+        tb = nbytes(aval)
+        hot_bytes = nbytes((aval.hot_k, aval.hot_v))
+        cold_per_tok = (tb - hot_bytes) / TK_CONTEXT
+        rec = {
+            "kv_bytes_per_slot": tb,
+            "hot_ring_bytes": hot_bytes,
+            "cold_bytes_per_token": cold_per_tok,
+            "slots_at_equal_bytes": flat_bytes / tb,
+            "context_at_equal_bytes": int((flat_bytes - hot_bytes)
+                                          / cold_per_tok),
+        }
+        rec["context_multiplier"] =\
+            rec["context_at_equal_bytes"] / TK_CONTEXT
+        out[cold] = rec
+        emit(f"serving/tiered_kv_32k/{cold}/kv_bytes_per_slot", float(tb),
+             f"slots_at_equal_bytes={rec['slots_at_equal_bytes']:.2f};"
+             f"context_at_equal_bytes={rec['context_at_equal_bytes']};"
+             f"flat_bf16_bytes={flat_bytes}")
+    best = max(out[c]["slots_at_equal_bytes"] for c in TK_COLD_DTYPES)
+    out["best_slots_at_equal_bytes"] = best
+    out["best_context_multiplier"] = max(
+        out[c]["context_multiplier"] for c in TK_COLD_DTYPES)
+
+    # -- live sweep: the swept lane must actually serve --------------------
+    rcfg = get_config("qwen2-0.5b").reduced()
+    live = {"config": {"arch": "qwen2-0.5b (reduced)",
+                       "prompt_len": PROMPT_LEN, "batch_slots": SLOTS,
+                       "hot_window": TK_LIVE_HOT,
+                       "cold_block": TK_LIVE_BLOCK,
+                       "prefill_chunk": WA_PREFILL_CHUNK,
+                       "block_size": BLOCK_SIZE,
+                       "kv_bucket_chunk": KV_BUCKET_CHUNK}}
+    api0 = build_model(rcfg)
+    params0 = api0.init(jax.random.key(0))
+    eng0 = ServingEngine(api0, ctx, SLOTS, PROMPT_LEN, mode="continuous",
+                         max_new_cap=MAX_NEW_CAP, block_size=BLOCK_SIZE,
+                         kv_bucket_chunk=KV_BUCKET_CHUNK,
+                         prefill_chunk=WA_PREFILL_CHUNK)
+    eng0.run(params0, _workload(rcfg), max_steps=1000)           # warm
+    flat_reqs = _workload(rcfg)
+    st0 = eng0.run(params0, flat_reqs, max_steps=1000)
+    flat_streams = [list(r.generated) for r in flat_reqs]
+    live["flat_bf16"] = {"tpot_mean_ms": st0["tpot_mean_ms"],
+                         "completed": st0["completed"],
+                         **_cache_footprint(eng0)}
+    for cold in TK_COLD_DTYPES:
+        tcfg = rcfg.replace(hot_window=TK_LIVE_HOT, kv_cold_dtype=cold,
+                            kv_cold_block=TK_LIVE_BLOCK)
+        tapi = build_model(tcfg)
+        tparams = tapi.init(jax.random.key(0))
+        eng = ServingEngine(tapi, ctx, SLOTS, PROMPT_LEN,
+                            mode="continuous", max_new_cap=MAX_NEW_CAP,
+                            block_size=BLOCK_SIZE,
+                            kv_bucket_chunk=KV_BUCKET_CHUNK,
+                            prefill_chunk=WA_PREFILL_CHUNK)
+        eng.run(tparams, _workload(rcfg), max_steps=1000)        # warm
+        reqs = _workload(rcfg)
+        st = eng.run(tparams, reqs, max_steps=1000)
+        compiles = {k: v["compiles"] for k, v in st["runtime"].items()}
+        t = st["tiered"]
+        rec = {
+            "completed": st["completed"],
+            "tpot_mean_ms": st["tpot_mean_ms"],
+            "throughput_tok_s": st["throughput_tok_s"],
+            "demotions": t["demotions"],
+            "peak_kv_bytes": t["peak_kv_bytes"],
+            "cold_bytes_saved": t["cold_bytes_saved"],
+            "max_compiles_per_step": max(compiles.values()),
+            "compiles": compiles,
+            **_cache_footprint(eng),
+        }
+        if cold == "bfloat16":
+            # the bf16 cold tier is a pure relayout — streams must equal
+            # the flat cache exactly before any quantized point is trusted
+            rec["streams_match_flat"] =\
+                [list(r.generated) for r in reqs] == flat_streams
+            assert rec["streams_match_flat"],\
+                "bf16-cold tiered serve diverged from the flat cache"
+        live[cold] = rec
+        emit(f"serving/tiered_kv_32k/live/{cold}/tpot",
+             st["tpot_mean_ms"] * 1e3,
+             f"demotions={t['demotions']};"
+             f"kv_bytes_per_slot={rec['kv_bytes_per_slot']};"
+             f"max_compiles_per_step={max(compiles.values())}")
+    out["live"] = live
+    emit("serving/tiered_kv_32k/best_slots_at_equal_bytes", best,
+         f"best_context_multiplier={out['best_context_multiplier']:.2f};"
+         f"int8_slots={out['int8']['slots_at_equal_bytes']:.2f};"
+         f"int4_slots={out['int4']['slots_at_equal_bytes']:.2f}")
     return out
 
 
@@ -507,6 +681,7 @@ def _wa_backend_scenario(api, params, ctx):
             "syncs_per_token": st["syncs_per_token"],
             "max_compiles_per_step": max(compiles.values()),
             "compiles": compiles,
+            **_cache_footprint(eng),
         }
         if backend == "wa":
             rec["routing_bytes_per_token"] = st["wa"]["routing_bytes_per_token"]
@@ -577,6 +752,7 @@ def run():
             "tokens_per_macro_step_mean": st["tokens_per_macro_step_mean"],
             "max_compiles_per_step": max(compiles.values()),
             "compiles": compiles,
+            **_cache_footprint(eng),
         }
         emit(f"serving/{name}/tpot", st["tpot_mean_ms"] * 1e3,
              f"p50_ms={st['tpot_p50_ms']:.3f};p99_ms={st['tpot_p99_ms']:.3f};"
@@ -602,6 +778,7 @@ def run():
     report["wa_backend"] = _wa_backend_scenario(api, params, ctx)
     report["wa_overlap"] = _overlap_sweep_scenario(api, params, ctx)
     report["pressure"] = _pressure_scenario(api, params, ctx)
+    report["tiered_kv_32k"] = _tiered_kv_32k_scenario(ctx)
     report["split_kv_long_context"] = _split_kv_long_context_scenario()
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

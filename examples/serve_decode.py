@@ -52,6 +52,19 @@ ap.add_argument("--preemptible", action="store_true",
 ap.add_argument("--max-queue", type=int, default=0,
                 help="bounded-queue backpressure: shed lowest-priority "
                      "queued work beyond N (0 = unbounded)")
+ap.add_argument("--hot-window", type=int, default=0,
+                help="tiered KV cache: most recent N tokens per slot stay "
+                     "at the resident dtype, older tokens demote to the "
+                     "quantized cold tier inside the compiled programs "
+                     "(0 = flat cache)")
+ap.add_argument("--kv-cold-dtype", default="int8",
+                choices=("bfloat16", "int8", "int4"),
+                help="cold-tier storage dtype (int4 packs two lanes per "
+                     "byte with per-block scales)")
+ap.add_argument("--kv-cold-block", type=int, default=16,
+                help="demotion granularity in tokens (build-time static)")
+ap.add_argument("--kv-budget-bytes", type=int, default=0,
+                help="tiered-KV arbiter byte budget (0 = unbounded)")
 args = ap.parse_args()
 
 print(f"serving {args.requests} requests on {args.arch} "
@@ -66,7 +79,10 @@ stats = serve(args.arch, args.requests, args.batch_slots, args.prompt_len,
               kv_bucket_chunk=args.kv_bucket_chunk,
               prefill_chunk=args.prefill_chunk, backend=args.backend,
               a_shards=args.a_shards, overlap=args.overlap,
-              preemptible=args.preemptible, max_queue=args.max_queue)
+              preemptible=args.preemptible, max_queue=args.max_queue,
+              hot_window=args.hot_window, kv_cold_dtype=args.kv_cold_dtype,
+              kv_cold_block=args.kv_cold_block,
+              kv_budget_bytes=args.kv_budget_bytes)
 print(f"\nmode:        {stats['mode']} (backend={stats['backend']})")
 print(f"completed:   {stats['completed']} "
       f"({stats['admissions']} admissions, "
@@ -91,6 +107,18 @@ print(f"pressure:    {stats['preemptions']} preemptions / "
 for e in stats["rejected"]:
     print(f"  shed rid={e['rid']:3d} [{e['status']}] "
           f"priority={e['priority']} reason={e['reason']}")
+if "tiered" in stats:
+    t = stats["tiered"]
+    print(f"tiered KV:   hot_window={t['hot_window']} "
+          f"cold={t['cold_dtype']}/block{t['cold_block']}; "
+          f"{t['demotions']} in-program demotions, "
+          f"{t['kv_bytes_per_slot'] / 1024:.1f} KiB/slot allocated, "
+          f"peak live {t['peak_kv_bytes'] / 1024:.1f} KiB, "
+          f"cold tier saved {t['cold_bytes_saved'] / 1024:.1f} KiB")
+    for s in t["per_slot"]:
+        print(f"  slot {s['slot']}: {s['tokens']} tokens "
+              f"({s['hot_tokens']} hot / {s['cold_tokens']} cold)")
+    print(f"  arbiter: {t['recommendation']}")
 if "wa" in stats:
     wa = stats["wa"]
     print(f"W<->A route: {wa['routing_bytes_per_token'] / 1024:.1f} KiB/token "

@@ -180,6 +180,15 @@ def check_kernel_library(cell: Cell, report: Report):
     _L, B, n_kv, _S, hd = caches.k.shape
     Hq = cell.cfg.n_heads
     quant = caches.k_scale is not None
+    kv_dtype = caches.k.dtype
+    if caches.is_tiered:
+        # the tiered read dequantizes the cold prefix and merges it with
+        # the hot ring BEFORE attention — the kernel sees the compute-dtype
+        # image at the full head_dim (int4's packed hd/2 and the cold
+        # scales never reach it)
+        hd = caches.hot_k.shape[4]
+        kv_dtype = caches.hot_k.dtype
+        quant = False
     for label, S in _flash_shapes(cell):
         for bs in {S, max(S // 2, 1)}:
             if S % bs:
@@ -190,7 +199,7 @@ def check_kernel_library(cell: Cell, report: Report):
                                            block_s=_bs, kv_limit=lim)
 
             q = jax.ShapeDtypeStruct((B, Hq, hd), np.float32)
-            kv = jax.ShapeDtypeStruct((B, n_kv, S, hd), caches.k.dtype)
+            kv = jax.ShapeDtypeStruct((B, n_kv, S, hd), kv_dtype)
             sc = jax.ShapeDtypeStruct((B, n_kv, S, 1), np.float32)\
                 if quant else None
             mask = jax.ShapeDtypeStruct((B, S), np.bool_)
@@ -216,7 +225,13 @@ def check_kernel_library(cell: Cell, report: Report):
 
 def check_chunk_writes(cell: Cell, rec: ProgramRecord, report: Report):
     caches = cell.caches_aval
-    if not isinstance(caches, KVCache) or rec.kind != "chunk":
+    if not isinstance(caches, KVCache):
+        return
+    # tiered colocated monolithic admission compiles a chunk BODY under the
+    # "serve_admit" name (kind "admit") — its traced-offset DUS writes get
+    # the same slot-isolation audit as the chunked lane
+    tiered_admit = rec.kind == "admit" and caches.is_tiered
+    if rec.kind != "chunk" and not tiered_admit:
         return
     try:
         jaxpr = rec.step.jaxpr()

@@ -55,6 +55,11 @@ class CellSpec:
     arch: str = "qwen2-0.5b"
     backend: str = "colocated"
     kv_dtype: Optional[str] = None          # None = dense, "int8" = quantized
+    # tiered KV cache (0 → flat): hot ring window, cold-tier storage dtype
+    # and demotion block — build-time statics baked into the program set
+    hot_window: int = 0
+    kv_cold_dtype: str = "int8"
+    kv_cold_block: int = 16
     a_shards: int = 1
     overlap: int = 1                        # W/A micro-batch pipelining depth
     block_size: int = 4
@@ -69,6 +74,8 @@ class CellSpec:
 
     def describe(self) -> str:
         kv = self.kv_dtype or "dense"
+        if self.hot_window:
+            kv += f"+tiered(hot{self.hot_window}/{self.kv_cold_dtype})"
         adm = f"chunk{self.prefill_chunk}" if self.prefill_chunk \
             else "monolithic"
         return (f"{self.label}: {self.arch} backend={self.backend} kv={kv} "
@@ -153,6 +160,10 @@ def build_cell(spec: CellSpec, mesh) -> Cell:
     cfg = ASSIGNED[spec.arch].reduced().replace(dtype="float32")
     if spec.kv_dtype:
         cfg = cfg.replace(kv_dtype=spec.kv_dtype)
+    if spec.hot_window:
+        cfg = cfg.replace(hot_window=spec.hot_window,
+                          kv_cold_dtype=spec.kv_cold_dtype,
+                          kv_cold_block=spec.kv_cold_block)
     api = build_model(cfg)
     params_aval = jax.eval_shape(lambda: api.init(jax.random.key(0)))
     ctx = ShardingCtx(mesh, sub_operator()) if mesh is not None else NULL_CTX
@@ -206,6 +217,16 @@ def ci_matrix() -> List[CellSpec]:
                         overlap=2, slots=4))
     out.append(CellSpec(label="wa-int8-a4-ov4", backend="wa",
                         kv_dtype="int8", a_shards=4, overlap=4, slots=4))
+    # tiered-KV cells: the colocated one admits MONOLITHICALLY so the
+    # degenerate full-width serve_admit chunk program is linted (tier
+    # residency, donation, slot-isolated DUS writes); the WA one runs the
+    # packed-int4 cold store under split-KV sequence sharding
+    out.append(CellSpec(label="colocated-int8cold-mono",
+                        hot_window=4, kv_cold_dtype="int8", kv_cold_block=4,
+                        prefill_chunk=0))
+    out.append(CellSpec(label="wa-int4cold-a2", backend="wa",
+                        hot_window=4, kv_cold_dtype="int4", kv_cold_block=4,
+                        a_shards=2))
     return out
 
 

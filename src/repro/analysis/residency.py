@@ -42,14 +42,15 @@ from repro.analysis.programs import Cell, ProgramRecord
 PASS = "residency"
 
 
-_KV_FIELDS = ("k", "v", "k_scale", "v_scale", "length")
+_KV_FIELDS = ("k", "v", "k_scale", "v_scale", "hot_k", "hot_v", "length")
 
 
 def _leaf_paths(tree) -> List[str]:
     # KVCache registers flat children (no keypaths) — keystr would print
     # "<flat index N>"; name its fields so diagnostics are actionable
     if isinstance(tree, KVCache):
-        kids = (tree.k, tree.v, tree.k_scale, tree.v_scale, tree.length)
+        kids = (tree.k, tree.v, tree.k_scale, tree.v_scale,
+                tree.hot_k, tree.hot_v, tree.length)
         return [f".{name}" for name, kid in zip(_KV_FIELDS, kids)
                 if kid is not None]
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -186,6 +187,14 @@ def _check_cache_collectives(cell: Cell, rec: ProgramRecord, caches_aval,
         return
     k = caches_aval.k                     # (L, B, n_kv, S, hd)
     slice_bytes = int(np.prod(k.shape[1:], dtype=np.int64)) * k.dtype.itemsize
+    # one per-layer K slice spans every store a read touches: the packed
+    # cold bytes alone would undercut ordinary activation-sized collectives
+    # (an int4 cold store can be SMALLER than one d_model hop) — price the
+    # scales and the tiered hot ring into the threshold too
+    for extra in (caches_aval.k_scale, caches_aval.hot_k):
+        if extra is not None:
+            slice_bytes += int(np.prod(extra.shape[1:], dtype=np.int64))\
+                * extra.dtype.itemsize
     mesh_shape = tuple(cell.mesh.devices.shape)
     axes = tuple(cell.mesh.axis_names)
     summary = parse_collectives(rec.step.compiled.as_text(), mesh_shape, axes)

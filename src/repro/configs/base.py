@@ -94,6 +94,14 @@ class ModelConfig:
     dtype: str = "bfloat16"         # activation/weight compute dtype
     kv_dtype: str = "bfloat16"      # "int8" enables quantized KV (paper default)
     weight_int8: bool = False       # int8 weight storage (paper default INT8)
+    # --- tiered KV cache (DESIGN.md §7): hot_window > 0 splits each slot's
+    # KV into a hot ring (most recent tokens, compute dtype, exact) and a
+    # cold tier (older tokens, kv_cold_dtype, demoted in kv_cold_block
+    # chunks). Geometry is a build-time static — like a_shards, it is baked
+    # into the compiled programs and never retraces.
+    hot_window: int = 0             # 0 → flat (untiered) KV cache
+    kv_cold_dtype: str = "int8"     # cold tier storage: bfloat16 | int8 | int4
+    kv_cold_block: int = 16         # demotion granularity (tokens)
     # --- long-context capability flag (sub-quadratic decoding) ---
     subquadratic: bool = False
     # --- source provenance: [source; verified-tier] from the assignment ---

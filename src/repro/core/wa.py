@@ -63,16 +63,23 @@ from repro.configs.shapes import ShapeConfig
 from repro.core.pipeline import skewed_schedule
 from repro.core.residency import plan as residency_plan
 from repro.models import common
-from repro.models.attention import chunk_attention, decode_attention,\
-    decode_attention_split, qkv_project
+from repro.models.attention import chunk_attention, chunk_attention_tiered,\
+    decode_attention, decode_attention_split, qkv_project
 from repro.models.registry import make_decode_block
 from repro.models.sharding import ShardingCtx, seq_sharded_kv, sub_operator
-from repro.kv.cache import (KVCache, batch_valid_mask, export_slot_kv,
-                            import_slot_kv, layer_append,
-                            layer_append_slotted, layer_read,
+from repro.kv.cache import (KVCache, batch_valid_mask, chunk_hot_image,
+                            cold_boundary, export_slot_kv, import_slot_kv,
+                            layer_append, layer_append_slotted,
+                            layer_append_tiered, layer_read,
                             layer_read_bucket, layer_read_shards,
-                            layer_read_slot, layer_write_chunk,
+                            layer_read_slot, layer_read_slot_cold,
+                            layer_read_tiered, layer_read_tiered_shards,
+                            layer_write_chunk, layer_write_chunk_tiered,
                             slot_valid_mask)
+
+# canonical order of a WA program's per-layer cache stacks; scale and hot
+# entries are None for flat/unquantized caches and flow through untouched
+_STACK_FIELDS = ("k", "v", "k_scale", "v_scale", "hot_k", "hot_v")
 
 
 # ---------------------------------------------------------------------------
@@ -269,13 +276,13 @@ class WADisaggregated:
 
     # -- attention side ---------------------------------------------------
     def _a_attend(self, kv_slices, q, k, v, pos, window=0):
-        k_l, v_l, ks_l, vs_l = kv_slices
+        k_l, v_l, ks_l, vs_l = kv_slices[:4]
         k_l, v_l, ks_l, vs_l = layer_append(k_l, v_l, ks_l, vs_l,
                                             k[:, 0], v[:, 0], pos, window)
         kc, vc = layer_read(k_l, v_l, ks_l, vs_l, dtype=q.dtype)
         mask = slot_valid_mask(k_l.shape[2], window, pos)
         o = decode_attention(q[:, 0], kc, vc, mask, self.a_ctx)
-        return (k_l, v_l, ks_l, vs_l), o
+        return (k_l, v_l, ks_l, vs_l) + tuple(kv_slices[4:]), o
 
     def _a_attend_slotted(self, kv_slices, q, k, v, positions, active,
                           window=0, kv_bucket=0):
@@ -284,12 +291,25 @@ class WADisaggregated:
         A-side state change, matching the paper's ownership split).
         ``kv_bucket`` > 0: the length-aware walk — read and attend only the
         first ``kv_bucket`` STORED positions (int8 caches dequantize just
-        the bucket), exactly ``transformer.block_decode_slotted``'s slice."""
-        k_l, v_l, ks_l, vs_l = kv_slices
-        k_l, v_l, ks_l, vs_l = layer_append_slotted(
-            k_l, v_l, ks_l, vs_l, k[:, 0], v[:, 0], positions, window, active)
+        the bucket), exactly ``transformer.block_decode_slotted``'s slice.
+        Tiered caches (6-entry ``kv_slices``) stage the append into both
+        tiers and read the hot/cold-resolved image — the demotion boundary
+        lives entirely in this A-side read (DESIGN.md §7)."""
+        cfg = self.cfg
+        k_l, v_l, ks_l, vs_l, hk_l, hv_l = kv_slices
+        tiered = hk_l is not None
+        if tiered:
+            k_l, v_l, ks_l, vs_l, hk_l, hv_l = layer_append_tiered(
+                k_l, v_l, ks_l, vs_l, hk_l, hv_l, k[:, 0], v[:, 0],
+                positions, cfg.kv_cold_dtype, active)
+            counts = positions + 1
+        else:
+            k_l, v_l, ks_l, vs_l = layer_append_slotted(
+                k_l, v_l, ks_l, vs_l, k[:, 0], v[:, 0], positions, window,
+                active)
         if window:
             kv_bucket = 0                   # ring order has no prefix to cut
+        out = (k_l, v_l, ks_l, vs_l, hk_l, hv_l)
         if self.a_shards > 1 and not window:
             # split-KV flash decode: shard-major bucketed read (same stored
             # prefix, reshaped to a_shards contiguous blocks); the per-shard
@@ -305,19 +325,34 @@ class WADisaggregated:
             if ks_l is not None:
                 ks_l = ann(ks_l, "batch", "kv_heads", "kv_seq", None)
                 vs_l = ann(vs_l, "batch", "kv_heads", "kv_seq", None)
-            kc, vc = layer_read_shards(k_l, v_l, ks_l, vs_l, kv_bucket,
-                                       self.a_shards, dtype=q.dtype)
+            if tiered:
+                hk_l = ann(hk_l, "batch", "kv_heads", None, "head_dim")
+                hv_l = ann(hv_l, "batch", "kv_heads", None, "head_dim")
+                kc, vc = layer_read_tiered_shards(
+                    k_l, v_l, ks_l, vs_l, hk_l, hv_l, counts, kv_bucket,
+                    self.a_shards, cfg.hot_window, cfg.kv_cold_block,
+                    cfg.kv_cold_dtype, dtype=q.dtype)
+            else:
+                kc, vc = layer_read_shards(k_l, v_l, ks_l, vs_l, kv_bucket,
+                                           self.a_shards, dtype=q.dtype)
             mask = batch_valid_mask(kc.shape[2] * kc.shape[3], window,
                                     positions)
             o = decode_attention_split(q[:, 0], kc, vc, mask, self.a_ctx)
-            return (k_l, v_l, ks_l, vs_l), o
-        kc, vc = layer_read_bucket(k_l, v_l, ks_l, vs_l, kv_bucket,
-                                   dtype=q.dtype)
+            return (k_l, v_l, ks_l, vs_l, hk_l, hv_l), o
+        if tiered:
+            kc, vc = layer_read_tiered(
+                k_l, v_l, ks_l, vs_l, hk_l, hv_l, counts, kv_bucket,
+                cfg.hot_window, cfg.kv_cold_block, cfg.kv_cold_dtype,
+                dtype=q.dtype)
+        else:
+            kc, vc = layer_read_bucket(k_l, v_l, ks_l, vs_l, kv_bucket,
+                                       dtype=q.dtype)
         mask = batch_valid_mask(kc.shape[2], window, positions)
         o = decode_attention(q[:, 0], kc, vc, mask, self.a_ctx)
-        return (k_l, v_l, ks_l, vs_l), o
+        return out, o
 
-    def _pin_cache_stacks(self, k_st, v_st, ks_st, vs_st):
+    def _pin_cache_stacks(self, k_st, v_st, ks_st, vs_st,
+                          hk_st=None, hv_st=None):
         """Pin the resident KV stacks to the A-domain layout at program
         ENTRY. GSPMD infers each program's cache placement independently —
         on a data-sharded mesh the chunk program used to compile its cache
@@ -325,16 +360,21 @@ class WADisaggregated:
         batch-sharded, so the donated buffer resharded at every admission
         boundary (found by the repro.analysis residency pass; invisible on
         data=1 test meshes). The entry pin makes every WA program agree on
-        the planned A-domain layout."""
+        the planned A-domain layout. Hot rings carry no kv_seq axis (the
+        ring extent is H, not the shard-cut cache extent) — they pin
+        batch/kv_heads only and replicate along the ring."""
         if self.routing != "sharding":
-            return k_st, v_st, ks_st, vs_st
+            return k_st, v_st, ks_st, vs_st, hk_st, hv_st
         ann = self.a_ctx.ann
         k_st = ann(k_st, None, "batch", "kv_heads", "kv_seq", "head_dim")
         v_st = ann(v_st, None, "batch", "kv_heads", "kv_seq", "head_dim")
         if ks_st is not None:
             ks_st = ann(ks_st, None, "batch", "kv_heads", "kv_seq", None)
             vs_st = ann(vs_st, None, "batch", "kv_heads", "kv_seq", None)
-        return k_st, v_st, ks_st, vs_st
+        if hk_st is not None:
+            hk_st = ann(hk_st, None, "batch", "kv_heads", None, "head_dim")
+            hv_st = ann(hv_st, None, "batch", "kv_heads", None, "head_dim")
+        return k_st, v_st, ks_st, vs_st, hk_st, hv_st
 
     # -- preemption swap (A-domain slot state ops) -------------------------
     def swap_out_slot(self, cache: KVCache, slot):
@@ -345,24 +385,29 @@ class WADisaggregated:
         extent stays CONTIGUOUS under split-KV (a_shards > 1 is a read-time
         view, DESIGN.md §3), so the exported host buffer is shard-agnostic:
         it restores bit-identically under any shard width."""
-        k, v, ks, vs = self._pin_cache_stacks(cache.k, cache.v,
-                                              cache.k_scale, cache.v_scale)
+        k, v, ks, vs, hk, hv = self._pin_cache_stacks(
+            cache.k, cache.v, cache.k_scale, cache.v_scale,
+            cache.hot_k, cache.hot_v)
         return export_slot_kv(
-            cache._replace(k=k, v=v, k_scale=ks, v_scale=vs), slot)
+            cache._replace(k=k, v=v, k_scale=ks, v_scale=vs,
+                           hot_k=hk, hot_v=hv), slot)
 
     def swap_in_slot(self, cache: KVCache, saved, slot, valid_len):
         """Preemption restore on the A domain: masked true-length write of
         an exported slot image (``import_slot_kv`` — the chunk lane's
         keep-past-valid semantics at full width), entry- and exit-pinned so
         the donated cache keeps the agreed A layout."""
-        k, v, ks, vs = self._pin_cache_stacks(cache.k, cache.v,
-                                              cache.k_scale, cache.v_scale)
+        k, v, ks, vs, hk, hv = self._pin_cache_stacks(
+            cache.k, cache.v, cache.k_scale, cache.v_scale,
+            cache.hot_k, cache.hot_v)
         cache = import_slot_kv(
-            cache._replace(k=k, v=v, k_scale=ks, v_scale=vs), saved, slot,
-            valid_len)
-        k, v, ks, vs = self._pin_cache_stacks(cache.k, cache.v,
-                                              cache.k_scale, cache.v_scale)
-        return cache._replace(k=k, v=v, k_scale=ks, v_scale=vs)
+            cache._replace(k=k, v=v, k_scale=ks, v_scale=vs,
+                           hot_k=hk, hot_v=hv), saved, slot, valid_len)
+        k, v, ks, vs, hk, hv = self._pin_cache_stacks(
+            cache.k, cache.v, cache.k_scale, cache.v_scale,
+            cache.hot_k, cache.hot_v)
+        return cache._replace(k=k, v=v, k_scale=ks, v_scale=vs,
+                              hot_k=hk, hot_v=hv)
 
     # -- route helpers ------------------------------------------------------
     def _to_a(self, x):
@@ -396,21 +441,19 @@ class WADisaggregated:
         if cfg.pos == "learned":
             x = x + jnp.take(params["pos_embed"], positions[:, 0],
                              axis=0)[:, None].astype(x.dtype)
-        k_st, v_st, ks_st, vs_st = self._pin_cache_stacks(
-            cache.k, cache.v, cache.k_scale, cache.v_scale)
+        stacks = list(self._pin_cache_stacks(
+            cache.k, cache.v, cache.k_scale, cache.v_scale,
+            cache.hot_k, cache.hot_v))
         for i in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[i], params["blocks"])
             q, k, v = self._w_qkv(lp, x, positions)
             # W → A : route per-head activations (the "embeddings move" hop)
             q, k, v = self._to_a(q), self._to_a(k), self._to_a(v)
-            kv_i = tuple(None if c is None else c[i]
-                         for c in (k_st, v_st, ks_st, vs_st))
+            kv_i = tuple(None if c is None else c[i] for c in stacks)
             kv_i, o = attend(kv_i, q, k, v)
-            k_st = k_st.at[i].set(kv_i[0])
-            v_st = v_st.at[i].set(kv_i[1])
-            if kv_i[2] is not None:
-                ks_st = ks_st.at[i].set(kv_i[2])
-                vs_st = vs_st.at[i].set(kv_i[3])
+            for n, piece in enumerate(kv_i):
+                if piece is not None:
+                    stacks[n] = stacks[n].at[i].set(piece)
             # A → W
             o = self._to_w(o[:, None])
             x = self._w_post(lp, x, o)
@@ -418,7 +461,7 @@ class WADisaggregated:
         from repro.models.transformer import unembed_table
         logits = common.unembed_logits(unembed_table(params, cfg), x,
                                        self.w_ctx)
-        return (k_st, v_st, ks_st, vs_st), logits
+        return tuple(stacks), logits
 
     def _layer_loop_pipelined(self, params, cache: KVCache, tokens,
                               positions, attend):
@@ -450,8 +493,9 @@ class WADisaggregated:
         L = cfg.n_layers
         from repro.models.transformer import unembed_table
         slices = micro_batch_slices(tokens.shape[0], D)
-        k_st, v_st, ks_st, vs_st = self._pin_cache_stacks(
-            cache.k, cache.v, cache.k_scale, cache.v_scale)
+        stacks = self._pin_cache_stacks(
+            cache.k, cache.v, cache.k_scale, cache.v_scale,
+            cache.hot_k, cache.hot_v)
         lps = [jax.tree.map(lambda a, _i=i: a[_i], params["blocks"])
                for i in range(L)]
         xs = [None] * D          # per-micro-batch residual stream (W side)
@@ -478,7 +522,7 @@ class WADisaggregated:
                     q, k, v = routed[m]
                     routed[m] = None
                     kv_i = tuple(None if c is None else c[j, sl]
-                                 for c in (k_st, v_st, ks_st, vs_st))
+                                 for c in stacks)
                     new_kv[j][m], o = attend(kv_i, q, k, v, sl)
                     # route toward W the tick it lands (A's send side)
                     backed[m] = self._to_w(o[:, None])
@@ -514,17 +558,21 @@ class WADisaggregated:
 
         # re-pin: the assembled stacks are NEW buffers and must land on the
         # same A-domain layout the entry pin promised the donation chain
-        stacks = self._pin_cache_stacks(assemble(0), assemble(1),
-                                        assemble(2), assemble(3))
-        return stacks, jnp.concatenate(logits, axis=0)
+        out = self._pin_cache_stacks(*[assemble(i)
+                                       for i in range(len(_STACK_FIELDS))])
+        return out, jnp.concatenate(logits, axis=0)
 
     def decode_step(self, params, cache: KVCache, tokens):
         """Python-orchestrated per-layer routing. params live on W (weights
         resident, no KV there); KV lives on A. Used for correctness and
         for the Fig 11 breakdown; the analytical model covers scaling."""
+        if cache.is_tiered:
+            raise ValueError(
+                "eager WA decode_step does not support tiered caches — the "
+                "tiered read is a serving-lane (slotted) program")
         pos = cache.length
         B = tokens.shape[0]
-        (k, v, ks, vs), logits = self._layer_loop(
+        (k, v, ks, vs, _, _), logits = self._layer_loop(
             params, cache, tokens, jnp.full((B, 1), pos, jnp.int32),
             lambda kv_i, q, kk, vv: self._a_attend(kv_i, q, kk, vv, pos,
                                                    window=cache.window))
@@ -550,12 +598,12 @@ class WADisaggregated:
 
         loop = self._layer_loop_pipelined if self.overlap > 1\
             else self._layer_loop
-        (k, v, ks, vs), logits = loop(
+        (k, v, ks, vs, hk, hv), logits = loop(
             params, cache, tokens, positions[:, None], attend)
         new_len = jnp.maximum(
             cache.length, jnp.max(jnp.where(active, positions, 0)) + 1)
         return cache._replace(k=k, v=v, k_scale=ks, v_scale=vs,
-                              length=new_len), logits
+                              hot_k=hk, hot_v=hv, length=new_len), logits
 
     def _decode_slotted_api(self, params, caches, tokens, positions, active,
                             ctx, kv_bucket: int = 0):
@@ -596,32 +644,53 @@ class WADisaggregated:
         elif cfg.pos == "sinusoidal":
             table = common.sinusoidal_pos(cache.k.shape[3], cfg.d_model)
             x = x + jnp.take(table, positions, axis=0)[None].astype(x.dtype)
-        k_st, v_st, ks_st, vs_st = self._pin_cache_stacks(
-            cache.k, cache.v, cache.k_scale, cache.v_scale)
+        stacks = list(self._pin_cache_stacks(
+            cache.k, cache.v, cache.k_scale, cache.v_scale,
+            cache.hot_k, cache.hot_v))
+        tiered = cache.is_tiered
         S = cache.k.shape[3]
         # causal over absolute positions: query i attends cache slots
         # <= start+i (padding queries i >= valid_len attend zeros/stale
         # slots — their outputs are discarded)
         mask = jnp.arange(S, dtype=jnp.int32)[None, :]\
             <= positions[:, None]                                      # (C,S)
+        if tiered:
+            # per-QUERY demotion boundary: query i has start+i+1 tokens
+            hot_mask = (jnp.arange(S, dtype=jnp.int32)[None, :] >=
+                        cold_boundary(positions + 1, cfg.hot_window,
+                                      cfg.kv_cold_block)[:, None])[None]
         for i in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[i], params["blocks"])
             q, k, v = self._w_qkv(lp, x, positions[None])
             q, k, v = self._to_a(q), self._to_a(k), self._to_a(v)
-            kv_i = tuple(None if c is None else c[i]
-                         for c in (k_st, v_st, ks_st, vs_st))
-            k_l, v_l, ks_l, vs_l = layer_write_chunk(
-                kv_i[0], kv_i[1], kv_i[2], kv_i[3],
-                jnp.swapaxes(k[0], 0, 1), jnp.swapaxes(v[0], 0, 1),
-                slot, start, valid_len)
-            kc, vc = layer_read_slot(k_l, v_l, ks_l, vs_l, slot,
-                                     dtype=x.dtype)
-            o = chunk_attention(q, kc, vc, mask, self.a_ctx)
-            k_st = k_st.at[i].set(k_l)
-            v_st = v_st.at[i].set(v_l)
-            if ks_l is not None:
-                ks_st = ks_st.at[i].set(ks_l)
-                vs_st = vs_st.at[i].set(vs_l)
+            kv_i = tuple(None if c is None else c[i] for c in stacks)
+            k_ch = jnp.swapaxes(k[0], 0, 1)
+            v_ch = jnp.swapaxes(v[0], 0, 1)
+            if tiered:
+                # exact hot image from the PRE-write ring + incoming chunk
+                # (the write below may overwrite exactly the ring slots
+                # early queries' hot tails live in)
+                kh, vh = chunk_hot_image(kv_i[4], kv_i[5], k_ch, v_ch,
+                                         slot, start, valid_len, S,
+                                         dtype=x.dtype)
+                kv_i = layer_write_chunk_tiered(
+                    kv_i[0], kv_i[1], kv_i[2], kv_i[3], kv_i[4], kv_i[5],
+                    k_ch, v_ch, slot, start, valid_len, cfg.kv_cold_dtype)
+                kc, vc = layer_read_slot_cold(
+                    kv_i[0], kv_i[1], kv_i[2], kv_i[3], slot,
+                    cfg.kv_cold_dtype, dtype=x.dtype)
+                o = chunk_attention_tiered(q, kh, vh, kc, vc, hot_mask,
+                                           mask, self.a_ctx)
+            else:
+                kv_i = layer_write_chunk(
+                    kv_i[0], kv_i[1], kv_i[2], kv_i[3], k_ch, v_ch,
+                    slot, start, valid_len) + (None, None)
+                kc, vc = layer_read_slot(kv_i[0], kv_i[1], kv_i[2],
+                                         kv_i[3], slot, dtype=x.dtype)
+                o = chunk_attention(q, kc, vc, mask, self.a_ctx)
+            for n, piece in enumerate(kv_i):
+                if piece is not None:
+                    stacks[n] = stacks[n].at[i].set(piece)
             o = self._to_w(o)
             x = self._w_post(lp, x, o)
         x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
@@ -630,5 +699,6 @@ class WADisaggregated:
         logits = common.unembed_logits(unembed_table(params, cfg), last,
                                        self.w_ctx)
         new_len = jnp.maximum(cache.length, start + valid_len)
-        return cache._replace(k=k_st, v=v_st, k_scale=ks_st, v_scale=vs_st,
-                              length=new_len), logits
+        return cache._replace(k=stacks[0], v=stacks[1], k_scale=stacks[2],
+                              v_scale=stacks[3], hot_k=stacks[4],
+                              hot_v=stacks[5], length=new_len), logits

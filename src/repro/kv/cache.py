@@ -8,7 +8,14 @@ separation / sequence sharding), not by virtual-memory tricks.
 Supports:
 - full-context caches (global attention),
 - ring-buffer sliding-window caches (recurrentgemma local attention),
-- INT8-quantized storage with per-(b, head, pos) scales (paper runs fully INT8).
+- INT8-quantized storage with per-(b, head, pos) scales (paper runs fully INT8),
+- TIERED storage (DESIGN.md §7): a hot ring of the most recent
+  ``hot_window`` tokens at the compute dtype plus a cold tier holding every
+  position quantized at ``cold_dtype`` (bf16 passthrough, int8, or packed
+  int4). The hot→cold boundary advances in ``cold_block`` steps inside the
+  compiled programs — per-QUERY, from traced cursors — so chunked prefill,
+  monolithic admission and macro-step decode all attend the identical
+  hot/cold image for every (key, query) pair.
 
 The cache is a pytree; decode steps donate it (buffer reuse — no double
 allocation of the GB-scale KV in steady state).
@@ -20,32 +27,60 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.quant.int4 import dequantize_kv_int4, quantize_kv_int4
 from repro.quant.int8 import dequantize_kv, quantize_kv
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 class KVCache:
-    """Pytree: (k, v, k_scale, v_scale, length) children; ``window`` static."""
+    """Pytree: (k, v, k_scale, v_scale, hot_k, hot_v, length) children;
+    ``window`` / tier geometry (hot_window, cold_block, cold_dtype) static.
+    Untiered caches carry ``hot_k = hot_v = None`` — k/v are then the one
+    flat tier; tiered caches store the cold image in k/v (+scales for
+    int8/int4) and the exact recents in the hot ring."""
 
-    def __init__(self, k, v, k_scale, v_scale, length, window: int = 0):
-        self.k = k                       # (L,B,n_kv,S,hd)  kv_dtype
+    _FIELDS = ("k", "v", "k_scale", "v_scale", "hot_k", "hot_v", "length")
+
+    def __init__(self, k, v, k_scale, v_scale, length, window: int = 0,
+                 hot_k=None, hot_v=None, hot_window: int = 0,
+                 cold_block: int = 0, cold_dtype: str = "bfloat16"):
+        self.k = k                       # (L,B,n_kv,S,hd_c)  cold/flat tier
         self.v = v
-        self.k_scale = k_scale           # (L,B,n_kv,S,1) f32 — int8 only
+        self.k_scale = k_scale           # (L,B,n_kv,S,1) f32 — int8/int4 only
         self.v_scale = v_scale
+        self.hot_k = hot_k               # (L,B,n_kv,H,hd) compute dtype ring
+        self.hot_v = hot_v               # H = hot_window + cold_block
         self.length = length             # () int32 — tokens appended so far
         self.window = window             # 0 → full ctx; >0 → ring buffer
+        self.hot_window = hot_window     # 0 → flat (untiered)
+        self.cold_block = cold_block     # demotion granularity (tokens)
+        self.cold_dtype = cold_dtype     # bfloat16 | int8 | int4
+
+    def tree_flatten_with_keys(self):
+        kids = tuple((jax.tree_util.GetAttrKey(f), getattr(self, f))
+                     for f in self._FIELDS)
+        return kids, (self.window, self.hot_window, self.cold_block,
+                      self.cold_dtype)
 
     def tree_flatten(self):
-        return ((self.k, self.v, self.k_scale, self.v_scale, self.length),
-                self.window)
+        return (tuple(getattr(self, f) for f in self._FIELDS),
+                (self.window, self.hot_window, self.cold_block,
+                 self.cold_dtype))
 
     @classmethod
-    def tree_unflatten(cls, window, children):
-        return cls(*children, window=window)
+    def tree_unflatten(cls, aux, children):
+        k, v, k_scale, v_scale, hot_k, hot_v, length = children
+        window, hot_window, cold_block, cold_dtype = aux
+        return cls(k, v, k_scale, v_scale, length, window=window,
+                   hot_k=hot_k, hot_v=hot_v, hot_window=hot_window,
+                   cold_block=cold_block, cold_dtype=cold_dtype)
 
     def _replace(self, **kw):
         d = dict(k=self.k, v=self.v, k_scale=self.k_scale,
-                 v_scale=self.v_scale, length=self.length, window=self.window)
+                 v_scale=self.v_scale, length=self.length, window=self.window,
+                 hot_k=self.hot_k, hot_v=self.hot_v,
+                 hot_window=self.hot_window, cold_block=self.cold_block,
+                 cold_dtype=self.cold_dtype)
         d.update(kw)
         return KVCache(**d)
 
@@ -57,18 +92,101 @@ class KVCache:
     def is_quantized(self) -> bool:
         return self.k_scale is not None
 
+    @property
+    def is_tiered(self) -> bool:
+        return self.hot_k is not None
+
+
+def hot_extent(hot_window: int, cold_block: int) -> int:
+    """Hot-ring size: the live hot region spans [cold_boundary, cursor] whose
+    length is at most hot_window + cold_block − 1 (the boundary advances in
+    cold_block jumps), so a ring of hot_window + cold_block slots always
+    holds every hot position distinctly."""
+    return hot_window + cold_block
+
+
+def cold_boundary(counts, hot_window: int, cold_block: int):
+    """First position still HOT for a row holding ``counts`` tokens —
+    positions < boundary resolve to the cold tier, positions >= boundary to
+    the exact hot ring. The boundary only moves at cold_block multiples:
+    floor((counts − hot_window) / cold_block) · cold_block, clamped at 0.
+    Depends only on the row's token count, never on chunk/block geometry, so
+    every serving lane computes the identical per-query image."""
+    over = jnp.maximum(jnp.asarray(counts, jnp.int32) - hot_window, 0)
+    return (over // cold_block) * cold_block
+
+
+def cold_pack_dim(head_dim: int, cold_dtype: str) -> int:
+    """Stored head_dim of the cold tier (int4 packs two nibbles per byte)."""
+    if cold_dtype == "int4":
+        if head_dim % 2:
+            raise ValueError(f"int4 cold tier needs even head_dim, "
+                             f"got {head_dim}")
+        return head_dim // 2
+    return head_dim
+
+
+def quantize_cold(x, cold_dtype: str):
+    """(values, scale) at the cold dtype; bf16 cold stores verbatim."""
+    if cold_dtype == "int4":
+        return quantize_kv_int4(x)
+    if cold_dtype == "int8":
+        return quantize_kv(x)
+    return x, None
+
+
+def cold_read(k_l, v_l, k_scale_l, v_scale_l, cold_dtype: str,
+              dtype=jnp.bfloat16):
+    """Dequantize a cold-tier slice to the compute dtype (format-aware
+    ``layer_read``: int4 unpacks, int8 rescales, bf16 casts)."""
+    if k_scale_l is None:
+        return k_l.astype(dtype), v_l.astype(dtype)
+    if cold_dtype == "int4":
+        return (dequantize_kv_int4(k_l, k_scale_l, dtype),
+                dequantize_kv_int4(v_l, v_scale_l, dtype))
+    return (dequantize_kv(k_l, k_scale_l, dtype),
+            dequantize_kv(v_l, v_scale_l, dtype))
+
 
 def init_kv_cache(n_layers: int, batch: int, n_kv: int, max_len: int,
                   head_dim: int, dtype=jnp.bfloat16, quantized: bool = False,
-                  window: int = 0) -> KVCache:
+                  window: int = 0, hot_window: int = 0, cold_block: int = 0,
+                  cold_dtype: str = "bfloat16") -> KVCache:
     size = min(window, max_len) if window else max_len
-    store = jnp.int8 if quantized else dtype
-    shape = (n_layers, batch, n_kv, size, head_dim)
     # k/v (and the scales) must be DISTINCT buffers: the serving engine
     # donates the whole cache pytree per step, and XLA rejects donating one
     # buffer twice
     def mk(s, dt):
         return jnp.zeros(s, dt)
+
+    if hot_window:
+        if quantized:
+            raise ValueError("tiered KV (hot_window > 0) subsumes the flat "
+                             "int8 cache; use kv_cold_dtype instead of "
+                             "kv_dtype='int8'")
+        if window:
+            raise ValueError("tiered KV does not compose with sliding-window "
+                             "(ring) caches")
+        if cold_block < 1:
+            raise ValueError(f"cold_block must be >= 1, got {cold_block}")
+        if cold_dtype not in ("bfloat16", "int8", "int4"):
+            raise ValueError(f"unknown kv_cold_dtype {cold_dtype!r}")
+        cold_scaled = cold_dtype in ("int8", "int4")
+        cshape = (n_layers, batch, n_kv, size,
+                  cold_pack_dim(head_dim, cold_dtype))
+        sshape = cshape[:-1] + (1,)
+        hshape = (n_layers, batch, n_kv, hot_extent(hot_window, cold_block),
+                  head_dim)
+        return KVCache(mk(cshape, jnp.int8 if cold_scaled else dtype),
+                       mk(cshape, jnp.int8 if cold_scaled else dtype),
+                       mk(sshape, jnp.float32) if cold_scaled else None,
+                       mk(sshape, jnp.float32) if cold_scaled else None,
+                       jnp.zeros((), jnp.int32), window=0,
+                       hot_k=mk(hshape, dtype), hot_v=mk(hshape, dtype),
+                       hot_window=hot_window, cold_block=cold_block,
+                       cold_dtype=cold_dtype)
+    store = jnp.int8 if quantized else dtype
+    shape = (n_layers, batch, n_kv, size, head_dim)
     sshape = shape[:-1] + (1,)
     return KVCache(mk(shape, store), mk(shape, store),
                    mk(sshape, jnp.float32) if quantized else None,
@@ -308,6 +426,177 @@ def layer_read_slot(k_l, v_l, k_scale_l, v_scale_l, slot,
                       take(v_scale_l), dtype)
 
 
+# ---------------------------------------------------------------------------
+# Tiered (hot ring + quantized cold) per-layer API — DESIGN.md §7.
+#
+# Every position is STAGED into the cold tier at write time (quantization of
+# a given bf16 vector is deterministic, so staging eagerly at append is
+# byte-identical to lazily re-quantizing the aging block at the demotion
+# boundary — with uniform per-step cost and no gather). The hot ring holds
+# the exact values of the most recent positions; "demotion" is the read-side
+# boundary ``cold_boundary(count)`` advancing by cold_block inside the
+# compiled program. Both writes are slot-extent-1 dynamic_update_slices, the
+# same isolation contract the kernel-bounds pass audits for flat caches.
+# ---------------------------------------------------------------------------
+
+def layer_append_tiered(k_l, v_l, k_scale_l, v_scale_l, hot_k_l, hot_v_l,
+                        k_new, v_new, positions: jax.Array,
+                        cold_dtype: str, active: Optional[jax.Array] = None):
+    """Decode append for a tiered layer: stage the new position into the
+    cold tier (quantized at ``cold_dtype``) AND write it exactly into the
+    hot ring at slot position % H. k_l/v_l: (B,n_kv,S,hd_c); hot rings
+    (B,n_kv,H,hd); k_new/v_new: (B,n_kv,hd); positions: (B,) int32."""
+    H = hot_k_l.shape[2]
+    ring = jax.lax.rem(positions, H)
+    if active is None:
+        active = jnp.ones(positions.shape, bool)
+
+    def row(dst, new, slot, act):
+        upd = jax.lax.dynamic_update_slice(
+            dst, new[:, None, :].astype(dst.dtype), (0, slot, 0))
+        return jnp.where(act, upd, dst)
+
+    kq, ks = quantize_cold(k_new, cold_dtype)
+    vq, vs = quantize_cold(v_new, cold_dtype)
+    k_l = jax.vmap(row)(k_l, kq, positions, active)
+    v_l = jax.vmap(row)(v_l, vq, positions, active)
+    if k_scale_l is not None:
+        k_scale_l = jax.vmap(row)(k_scale_l, ks, positions, active)
+        v_scale_l = jax.vmap(row)(v_scale_l, vs, positions, active)
+    hot_k_l = jax.vmap(row)(hot_k_l, k_new, ring, active)
+    hot_v_l = jax.vmap(row)(hot_v_l, v_new, ring, active)
+    return k_l, v_l, k_scale_l, v_scale_l, hot_k_l, hot_v_l
+
+
+def layer_read_tiered(k_l, v_l, k_scale_l, v_scale_l, hot_k_l, hot_v_l,
+                      counts: jax.Array, bucket: int, hot_window: int,
+                      cold_block: int, cold_dtype: str, dtype=jnp.bfloat16):
+    """Tiered bucketed read: (B,n_kv,Se,hd) image where position j of row b
+    resolves to the exact hot-ring value when j >= cold_boundary(counts[b])
+    and to the dequantized cold bytes otherwise. The bucket prefix is cut
+    from the STORED buffers first — only the touched prefix of each tier is
+    ever dequantized/tiled. ``counts``: (B,) tokens stored per row (cursors
+    + 1, post-append)."""
+    S = k_l.shape[2]
+    Se = bucket if (bucket and bucket < S) else S
+
+    def cut(a):
+        if a is None or Se == S:
+            return a
+        return jax.lax.slice_in_dim(a, 0, Se, axis=2)
+    kc, vc = cold_read(cut(k_l), cut(v_l), cut(k_scale_l), cut(v_scale_l),
+                       cold_dtype, dtype)
+    H = hot_k_l.shape[2]
+    idx = jnp.arange(Se, dtype=jnp.int32)
+    kh = jnp.take(hot_k_l, jax.lax.rem(idx, H), axis=2).astype(dtype)
+    vh = jnp.take(hot_v_l, jax.lax.rem(idx, H), axis=2).astype(dtype)
+    cb = cold_boundary(counts, hot_window, cold_block)          # (B,)
+    hot = (idx[None, :] >= cb[:, None])[:, None, :, None]       # (B,1,Se,1)
+    return jnp.where(hot, kh, kc), jnp.where(hot, vh, vc)
+
+
+def layer_read_tiered_shards(k_l, v_l, k_scale_l, v_scale_l, hot_k_l,
+                             hot_v_l, counts, bucket: int, n_shards: int,
+                             hot_window: int, cold_block: int,
+                             cold_dtype: str, dtype=jnp.bfloat16):
+    """Shard-major tiered read: the tiered image select is positionwise, so
+    the split-KV layout is the same contiguous reshape as
+    ``layer_read_shards`` applied AFTER the hot/cold resolve — shard s owns
+    absolute positions [s·Sb, (s+1)·Sb) of the concatenated image."""
+    k, v = layer_read_tiered(k_l, v_l, k_scale_l, v_scale_l, hot_k_l,
+                             hot_v_l, counts, bucket, hot_window, cold_block,
+                             cold_dtype, dtype)
+    B, n_kv, Se, hd = k.shape
+    Sb = shard_extent(Se, n_shards)
+    return (k.reshape(B, n_kv, n_shards, Sb, hd),
+            v.reshape(B, n_kv, n_shards, Sb, hd))
+
+
+def layer_write_chunk_tiered(k_l, v_l, k_scale_l, v_scale_l, hot_k_l,
+                             hot_v_l, k_new, v_new, slot, start, valid_len,
+                             cold_dtype: str):
+    """Chunked-prefill write into BOTH tiers: the chunk's positions are
+    staged into the cold container (quantized at the cold dtype, with
+    ``layer_write_chunk``'s keep-past-valid masking) and the hot ring takes
+    a residue write — ring slot s receives the LAST valid chunk position
+    ≡ s (mod H); ring slots the chunk does not cover keep their bytes (they
+    hold still-hot positions of earlier chunks). k_new/v_new: (n_kv,C,hd)."""
+    C = k_new.shape[1]
+    keep = (jnp.arange(C, dtype=jnp.int32) < valid_len)[None, :, None]
+
+    def put(dst, new):
+        if dst is None:
+            return None
+        cur = jax.lax.dynamic_slice(
+            dst, (slot, 0, start, 0), (1,) + new.shape)
+        new = jnp.where(keep, new.astype(dst.dtype), cur[0])
+        return jax.lax.dynamic_update_slice(dst, new[None],
+                                            (slot, 0, start, 0))
+
+    kq, ks = quantize_cold(k_new, cold_dtype)
+    vq, vs = quantize_cold(v_new, cold_dtype)
+    k_l, v_l = put(k_l, kq), put(v_l, vq)
+    k_scale_l, v_scale_l = put(k_scale_l, ks), put(v_scale_l, vs)
+
+    H = hot_k_l.shape[2]
+    s_idx = jnp.arange(H, dtype=jnp.int32)
+    # r = (ring slot − start) mod H: chunk index of the FIRST position that
+    # lands in ring slot s; the last valid one is r + H·⌊(valid−1−r)/H⌋
+    r = jax.lax.rem(s_idx - jax.lax.rem(start, H) + H, H)
+    i_star = jnp.clip(r + H * ((valid_len - 1 - r) // H), 0, C - 1)
+    keep_h = (r < valid_len)[None, :, None]
+
+    def put_hot(dst, new):
+        g = jnp.take(new, i_star, axis=1)                   # (n_kv,H,hd)
+        cur = jax.lax.dynamic_slice(dst, (slot, 0, 0, 0), (1,) + g.shape)
+        g = jnp.where(keep_h, g.astype(dst.dtype), cur[0])
+        return jax.lax.dynamic_update_slice(dst, g[None], (slot, 0, 0, 0))
+
+    return (k_l, v_l, k_scale_l, v_scale_l,
+            put_hot(hot_k_l, k_new), put_hot(hot_v_l, v_new))
+
+
+def layer_read_slot_cold(k_l, v_l, k_scale_l, v_scale_l, slot,
+                         cold_dtype: str, dtype=jnp.bfloat16):
+    """``layer_read_slot`` for the COLD tier: one slot's (1,n_kv,S,hd)
+    dequantized cold image, format-aware (int4 unpacks, int8 rescales,
+    bf16 casts). The chunk program attends this against the per-query
+    ``chunk_hot_image`` under the ``cold_boundary`` select."""
+    def take(a):
+        if a is None:
+            return None
+        return jax.lax.dynamic_slice(
+            a, (slot,) + (0,) * (a.ndim - 1), (1,) + a.shape[1:])
+
+    return cold_read(take(k_l), take(v_l), take(k_scale_l),
+                     take(v_scale_l), cold_dtype, dtype)
+
+
+def chunk_hot_image(hot_k_l, hot_v_l, k_new, v_new, slot, start, valid_len,
+                    extent: int, dtype=jnp.bfloat16):
+    """(1,n_kv,S,hd) exact-value image for the chunk program's per-query hot
+    reads, built from the PRE-write ring: positions < start tile from the
+    ring (the incoming chunk may overwrite exactly those ring slots), and
+    positions in [start, start+valid) come from the incoming chunk itself.
+    The pre-write ring holds every position >= cold_boundary(start) — a
+    superset of every query's hot tail — because the hot region never
+    exceeds H − 1 positions."""
+    idx = jnp.arange(extent, dtype=jnp.int32)
+    in_chunk = ((idx >= start) & (idx < start + valid_len))[None, None, :,
+                                                            None]
+
+    def one(h_l, new):
+        H = h_l.shape[2]
+        row = jax.lax.dynamic_slice(
+            h_l, (slot, 0, 0, 0), (1,) + h_l.shape[1:])     # (1,n_kv,H,hd)
+        tiled = jnp.take(row, jax.lax.rem(idx, H), axis=2).astype(dtype)
+        placed = jax.lax.dynamic_update_slice(
+            jnp.zeros_like(tiled), new[None].astype(dtype), (0, 0, start, 0))
+        return jnp.where(in_chunk, placed, tiled)
+
+    return one(hot_k_l, k_new), one(hot_v_l, v_new)
+
+
 def batch_valid_mask(size: int, window: int, positions: jax.Array) -> jax.Array:
     """(B,S) bool — per-row ``slot_valid_mask`` (decode order: append→attend);
     row b attends exactly the positions its own cursor has written."""
@@ -324,23 +613,32 @@ def write_slot_kv(dst: KVCache, src: KVCache, slot) -> KVCache:
     explicitly — so it is kept as max() purely as an upper bound."""
     n = min(src.k.shape[3], dst.k.shape[3])
 
-    def put(d, s):
+    def put(d, s, m=None):
         if d is None:
             return None
-        s = jax.lax.slice_in_dim(s, 0, n, axis=3).astype(d.dtype)
+        s = jax.lax.slice_in_dim(s, 0, m or n, axis=3).astype(d.dtype)
         return jax.lax.dynamic_update_slice(d, s, (0, slot, 0, 0, 0))
 
+    nh = None if dst.hot_k is None \
+        else min(src.hot_k.shape[3], dst.hot_k.shape[3])
     return dst._replace(k=put(dst.k, src.k), v=put(dst.v, src.v),
                         k_scale=put(dst.k_scale, src.k_scale),
                         v_scale=put(dst.v_scale, src.v_scale),
+                        hot_k=put(dst.hot_k, src.hot_k, nh)
+                        if dst.hot_k is not None else None,
+                        hot_v=put(dst.hot_v, src.hot_v, nh)
+                        if dst.hot_v is not None else None,
                         length=jnp.maximum(dst.length, src.length))
 
 
 def export_slot_kv(cache: KVCache, slot):
     """Preemption swap-out: ONE batch slot's full-extent stored K/V stacks
-    as a ``(k, v, k_scale, v_scale)`` tuple of (L,1,n_kv,S,hd) slices
-    (scales (L,1,n_kv,S,1); ``None`` entries for dense caches). ``slot`` is
-    a traced scalar — one compiled program swaps out every slot.
+    as a ``(k, v, k_scale, v_scale, hot_k, hot_v)`` tuple of (L,1,n_kv,S,hd)
+    slices (scales (L,1,n_kv,S,1); hot rings (L,1,n_kv,H,hd); ``None``
+    entries for dense/untiered caches). ``slot`` is a traced scalar — one
+    compiled program swaps out every slot. Tiered victims export BOTH
+    tiers: the quantized cold bytes + scales verbatim and the exact hot
+    ring, so restore reproduces the tier state bit-for-bit.
 
     The slices are the STORED bytes — int8 caches export the quantized
     values and their per-(b,head,pos) scales verbatim, never a dequantized
@@ -356,7 +654,8 @@ def export_slot_kv(cache: KVCache, slot):
             a, (0, slot, 0, 0, 0), (a.shape[0], 1) + a.shape[2:])
 
     return (take(cache.k), take(cache.v),
-            take(cache.k_scale), take(cache.v_scale))
+            take(cache.k_scale), take(cache.v_scale),
+            take(cache.hot_k), take(cache.hot_v))
 
 
 def import_slot_kv(cache: KVCache, saved, slot, valid_len) -> KVCache:
@@ -366,33 +665,42 @@ def import_slot_kv(cache: KVCache, saved, slot, valid_len) -> KVCache:
     ``layer_write_chunk``'s keep-past-valid semantics (the restore is the
     chunk lane's masked write at full width). ``slot``/``valid_len`` are
     traced scalars; the saved bytes land verbatim (stored dtype, scales
-    included), so restore ∘ export is byte-identical below the cursor."""
-    k_s, v_s, ks_s, vs_s = saved
+    included), so restore ∘ export is byte-identical below the cursor.
+    The hot ring restores VERBATIM at full ring width: ring slots are only
+    ever read for positions inside the restored row's hot region, and the
+    export captured exactly the victim's pre-swap ring state."""
+    k_s, v_s, ks_s, vs_s, hk_s, hv_s = saved
     S = cache.k.shape[3]
     keep = (jnp.arange(S, dtype=jnp.int32) < valid_len)\
         .reshape(1, 1, 1, S, 1)
 
-    def put(dst, new):
+    def put(dst, new, masked=True):
         if dst is None:
             return None
         cur = jax.lax.dynamic_slice(
             dst, (0, slot, 0, 0, 0), new.shape)
-        merged = jnp.where(keep, new.astype(dst.dtype), cur)
+        merged = jnp.where(keep, new.astype(dst.dtype), cur) if masked \
+            else new.astype(dst.dtype)
         return jax.lax.dynamic_update_slice(dst, merged, (0, slot, 0, 0, 0))
 
     return cache._replace(k=put(cache.k, k_s), v=put(cache.v, v_s),
                           k_scale=put(cache.k_scale, ks_s),
                           v_scale=put(cache.v_scale, vs_s),
+                          hot_k=put(cache.hot_k, hk_s, masked=False)
+                          if hk_s is not None else cache.hot_k,
+                          hot_v=put(cache.hot_v, hv_s, masked=False)
+                          if hv_s is not None else cache.hot_v,
                           length=jnp.maximum(cache.length,
                                              jnp.asarray(valid_len,
                                                          jnp.int32)))
 
 
 def reset_slot(cache: KVCache, slot) -> KVCache:
-    """Zero one batch slot's K/V (retire). Not required for correctness —
-    masked attention never reads past a slot's cursor and admission
-    overwrites the prompt region — but keeps retired garbage out of cache
-    dumps and makes slot-state invariants checkable."""
+    """Zero one batch slot's K/V (retire) — both tiers for tiered caches.
+    Not required for correctness — masked attention never reads past a
+    slot's cursor and admission overwrites the prompt region — but keeps
+    retired garbage out of cache dumps and makes slot-state invariants
+    checkable."""
     def zero(d):
         if d is None:
             return None
@@ -401,7 +709,8 @@ def reset_slot(cache: KVCache, slot) -> KVCache:
 
     return cache._replace(k=zero(cache.k), v=zero(cache.v),
                           k_scale=zero(cache.k_scale),
-                          v_scale=zero(cache.v_scale))
+                          v_scale=zero(cache.v_scale),
+                          hot_k=zero(cache.hot_k), hot_v=zero(cache.hot_v))
 
 
 def slot_valid_mask(size: int, window: int, query_pos: jax.Array) -> jax.Array:

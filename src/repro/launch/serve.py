@@ -44,10 +44,18 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
           arrival_every: int = 0, block_size: int = 1,
           kv_bucket_chunk: int = 0, prefill_chunk: int = 0,
           backend: str = "colocated", a_shards: int = 1, overlap: int = 1,
-          preemptible: bool = False, max_queue: int = 0):
+          preemptible: bool = False, max_queue: int = 0,
+          hot_window: int = 0, kv_cold_dtype: str = "int8",
+          kv_cold_block: int = 16, kv_budget_bytes: int = 0):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
+    if hot_window:
+        # tiered KV cache: hot ring at the resident dtype, cold prefix
+        # quantized in fixed blocks (build-time statics — DESIGN.md §7)
+        cfg = cfg.replace(hot_window=hot_window,
+                          kv_cold_dtype=kv_cold_dtype,
+                          kv_cold_block=kv_cold_block)
     if mode == "drain" and prefill_chunk:
         print("note: --prefill-chunk ignored (drain mode has no chunk lane)")
         prefill_chunk = 0
@@ -63,7 +71,8 @@ def serve(arch: str, n_requests: int, batch_slots: int, prompt_len: int,
                         kv_bucket_chunk=kv_bucket_chunk,
                         prefill_chunk=prefill_chunk, backend=backend,
                         a_shards=a_shards, overlap=overlap,
-                        preemptible=preemptible, max_queue=max_queue)
+                        preemptible=preemptible, max_queue=max_queue,
+                        kv_budget_bytes=kv_budget_bytes)
     stats = eng.run(params, reqs)
     return stats
 
@@ -117,6 +126,24 @@ def main(argv=None):
                     help="bounded-queue backpressure: shed lowest-priority "
                          "queued work beyond N as structured rejections "
                          "(0 = unbounded)")
+    ap.add_argument("--hot-window", type=int, default=0,
+                    help="tiered KV cache: keep the most recent N tokens "
+                         "per slot at the cache-resident dtype and demote "
+                         "older tokens to the quantized cold tier in "
+                         "fixed blocks, inside the compiled programs "
+                         "(0 = flat cache)")
+    ap.add_argument("--kv-cold-dtype", default="int8",
+                    choices=("bfloat16", "int8", "int4"),
+                    help="cold-tier storage dtype (int4 packs two lanes "
+                         "per byte with per-block scales)")
+    ap.add_argument("--kv-cold-block", type=int, default=16,
+                    help="demotion granularity: cold-boundary advances in "
+                         "blocks of N tokens (build-time static)")
+    ap.add_argument("--kv-budget-bytes", type=int, default=0,
+                    help="tiered-KV arbiter byte budget: preempt victims "
+                         "(with --preemptible) or hold admissions while "
+                         "occupancy-priced live KV bytes exceed N "
+                         "(0 = unbounded)")
     args = ap.parse_args(argv)
     stats = serve(args.arch, args.requests, args.batch, args.prompt_len,
                   args.max_new, mode=args.mode,
@@ -126,11 +153,29 @@ def main(argv=None):
                   prefill_chunk=args.prefill_chunk,
                   backend=args.backend, a_shards=args.a_shards,
                   overlap=args.overlap, preemptible=args.preemptible,
-                  max_queue=args.max_queue)
+                  max_queue=args.max_queue, hot_window=args.hot_window,
+                  kv_cold_dtype=args.kv_cold_dtype,
+                  kv_cold_block=args.kv_cold_block,
+                  kv_budget_bytes=args.kv_budget_bytes)
     per_req = stats.pop("per_request")
     rt = stats.pop("runtime")
     rejected = stats.pop("rejected")
+    tiered = stats.pop("tiered", None)
     print("serve stats:", stats)
+    if tiered:
+        # host-side placement arbiter view (KVArbiter): tier occupancy,
+        # in-program demotions counted off cursor watermarks, byte savings
+        print(f"tiered kv:  hot_window={tiered['hot_window']} "
+              f"cold={tiered['cold_dtype']}/block{tiered['cold_block']} "
+              f"demotions={tiered['demotions']} "
+              f"kv_bytes_per_slot={tiered['kv_bytes_per_slot']} "
+              f"peak_kv_bytes={tiered['peak_kv_bytes']} "
+              f"cold_bytes_saved={tiered['cold_bytes_saved']}")
+        for s in tiered["per_slot"]:
+            print(f"  slot {s['slot']}: {s['tokens']} tokens "
+                  f"({s['hot_tokens']} hot / {s['cold_tokens']} cold, "
+                  f"{s['kv_bytes']} B)")
+        print(f"  arbiter: {tiered['recommendation']}")
     if "wa" in stats:
         # per-domain stall accounting of the W/A schedule (DESIGN.md §3):
         # overlap efficiency = busy ticks / total over both domains

@@ -306,6 +306,52 @@ def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return o.reshape(B, C, Hq, hd).astype(q.dtype)
 
 
+def chunk_attention_tiered(q: jax.Array, k_hot: jax.Array, v_hot: jax.Array,
+                           k_cold: jax.Array, v_cold: jax.Array,
+                           hot_mask: jax.Array, mask: jax.Array,
+                           ctx: ShardingCtx,
+                           scale: Optional[float] = None) -> jax.Array:
+    """``chunk_attention`` over a TIERED cache image: key position j of
+    query i resolves to the exact hot value when ``hot_mask[b, i, j]`` and
+    to the quantize-roundtrip cold value otherwise. The demotion boundary is
+    per QUERY (it advances with each query's own count), so unlike the
+    decode path the hot/cold select cannot be folded into one pre-selected
+    (B,n_kv,S,hd) image — instead both tiers are scored and the (C,S)
+    selection happens on the score/weight planes. Each (i, j) entry of the
+    softmax sees exactly one tier, so the result equals ``chunk_attention``
+    run on the per-query where-selected image.
+
+    q: (B,C,Hq,hd); k/v tiers: (B,n_kv,S,hd) in compute dtype (cold already
+    dequantized); hot_mask: (B,C,S) bool; mask: (C,S) or (B,C,S) bool."""
+    B, C, Hq, hd = q.shape
+    n_kv = k_hot.shape[1]
+    G = Hq // n_kv
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, C, n_kv, G, hd)
+    s_hot = jnp.einsum("bqkgh,bksh->bkgqs", qg, k_hot,
+                       preferred_element_type=jnp.float32) * sc
+    s_cold = jnp.einsum("bqkgh,bksh->bkgqs", qg, k_cold,
+                        preferred_element_type=jnp.float32) * sc
+    hm = hot_mask[:, None, None]                         # (B,1,1,C,S)
+    s = jnp.where(hm, s_hot, s_cold)                     # (B,n_kv,G,C,S)
+    s = ctx.ann(s, "batch", "kv_heads", None, None, "kv_seq")
+    if mask.ndim == 2:
+        mask = mask[None]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    w = (p / jnp.maximum(l, 1e-30))
+    zero = jnp.zeros((), w.dtype)
+    o = jnp.einsum("bkgqs,bksh->bqkgh",
+                   jnp.where(hm, w, zero).astype(v_hot.dtype), v_hot,
+                   preferred_element_type=jnp.float32) \
+      + jnp.einsum("bkgqs,bksh->bqkgh",
+                   jnp.where(hm, zero, w).astype(v_cold.dtype), v_cold,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, C, Hq, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Length-aware (chunk-bucketed) decode attention
 #

@@ -118,6 +118,11 @@ def cache_specs(caches, ctx: ShardingCtx):
             return ctx.spec((None, "batch", "lru"), leaf.shape)
         if nd == 6:                             # quant scale (L,B,kv,S,1)+? n/a
             return P()
+        if "hot_k" in keys or "hot_v" in keys:
+            # tiered hot ring (L,B,n_kv,H,hd): dim 3 is the RING axis
+            # (position mod H), not kv_seq — never sequence-shard it
+            return ctx.spec((None, "batch", "kv_heads", None, None),
+                            leaf.shape)
         if nd == 5:                             # KV (L,B,n_kv,S,hd) or scales
             return ctx.spec((None, "batch", "kv_heads", "kv_seq", None),
                             leaf.shape)

@@ -183,21 +183,48 @@ def block_decode_slotted(p: dict, x: jax.Array, cfg: ModelConfig,
     decode_step == decode_step_slotted under a uniform cursor is enforced by
     tests/test_serving_scheduler.py."""
     from repro.kv.cache import (batch_valid_mask, layer_append_slotted,
-                                layer_read_bucket, layer_read_shards)
+                                layer_append_tiered, layer_read_bucket,
+                                layer_read_shards, layer_read_tiered,
+                                layer_read_tiered_shards)
     from repro.models.attention import decode_attention_split
     B = x.shape[0]
-    k_l, v_l, ks_l, vs_l = kv_slices
+    tiered = len(kv_slices) == 6
+    if tiered:
+        k_l, v_l, ks_l, vs_l, hk_l, hv_l = kv_slices
+    else:
+        k_l, v_l, ks_l, vs_l = kv_slices
+        hk_l = hv_l = None
     if window:
         kv_bucket = 0                       # ring buffers have no prefix order
         kv_shards = 1                       # ... and no contiguous shard cut
     h = common.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
     h = ctx.ann(h, "batch", "seq", "embed")
     q, k, v = qkv_project(p["attn"], h, cfg, ctx, positions[:, None])
-    k_l, v_l, ks_l, vs_l = layer_append_slotted(
-        k_l, v_l, ks_l, vs_l, k[:, 0], v[:, 0], positions, window, active)
+    if tiered:
+        k_l, v_l, ks_l, vs_l, hk_l, hv_l = layer_append_tiered(
+            k_l, v_l, ks_l, vs_l, hk_l, hv_l, k[:, 0], v[:, 0], positions,
+            cfg.kv_cold_dtype, active)
+        counts = positions + 1              # append→attend: row b has p+1 toks
+        if kv_shards > 1:
+            kc, vc = layer_read_tiered_shards(
+                k_l, v_l, ks_l, vs_l, hk_l, hv_l, counts, kv_bucket,
+                kv_shards, cfg.hot_window, cfg.kv_cold_block,
+                cfg.kv_cold_dtype, dtype=x.dtype)
+        else:
+            kc, vc = layer_read_tiered(
+                k_l, v_l, ks_l, vs_l, hk_l, hv_l, counts, kv_bucket,
+                cfg.hot_window, cfg.kv_cold_block, cfg.kv_cold_dtype,
+                dtype=x.dtype)
+    else:
+        k_l, v_l, ks_l, vs_l = layer_append_slotted(
+            k_l, v_l, ks_l, vs_l, k[:, 0], v[:, 0], positions, window, active)
+        if kv_shards > 1:
+            kc, vc = layer_read_shards(k_l, v_l, ks_l, vs_l, kv_bucket,
+                                       kv_shards, dtype=x.dtype)
+        else:
+            kc, vc = layer_read_bucket(k_l, v_l, ks_l, vs_l, kv_bucket,
+                                       dtype=x.dtype)
     if kv_shards > 1:
-        kc, vc = layer_read_shards(k_l, v_l, ks_l, vs_l, kv_bucket,
-                                   kv_shards, dtype=x.dtype)
         kc = ctx.ann(kc, "batch", "kv_heads", "kv_shard", "kv_seq",
                      "head_dim")
         vc = ctx.ann(vc, "batch", "kv_heads", "kv_shard", "kv_seq",
@@ -205,8 +232,6 @@ def block_decode_slotted(p: dict, x: jax.Array, cfg: ModelConfig,
         mask = batch_valid_mask(kc.shape[2] * kc.shape[3], window, positions)
         o = decode_attention_split(q[:, 0], kc, vc, mask, ctx)
     else:
-        kc, vc = layer_read_bucket(k_l, v_l, ks_l, vs_l, kv_bucket,
-                                   dtype=x.dtype)
         kc = ctx.ann(kc, "batch", "kv_heads", "kv_seq", "head_dim")
         vc = ctx.ann(vc, "batch", "kv_heads", "kv_seq", "head_dim")
         mask = batch_valid_mask(kc.shape[2], window, positions)    # (B,Sb)
@@ -217,6 +242,8 @@ def block_decode_slotted(p: dict, x: jax.Array, cfg: ModelConfig,
     h = ctx.ann(h, "batch", "seq", "embed")
     f, _ = _mix_ffn(p, h, cfg, ctx, train=False)
     x = ctx.ann(x + f, "batch", "seq", "embed_shard")
+    if tiered:
+        return x, (k_l, v_l, ks_l, vs_l, hk_l, hv_l)
     return x, (k_l, v_l, ks_l, vs_l)
 
 
@@ -234,32 +261,63 @@ def block_prefill_chunk(p: dict, x: jax.Array, cfg: ModelConfig,
     attention against it. slot/start/valid_len are traced: one compiled
     program serves every chunk of every prompt. Non-windowed caches only
     (ring order has no stable per-position offset to write at)."""
-    from repro.kv.cache import layer_read_slot, layer_write_chunk
-    from repro.models.attention import chunk_attention
+    from repro.kv.cache import (chunk_hot_image, cold_boundary,
+                                layer_read_slot, layer_read_slot_cold,
+                                layer_write_chunk, layer_write_chunk_tiered)
+    from repro.models.attention import chunk_attention, chunk_attention_tiered
     _, C, _ = x.shape
-    k_l, v_l, ks_l, vs_l = kv_slices
+    tiered = len(kv_slices) == 6
+    if tiered:
+        k_l, v_l, ks_l, vs_l, hk_l, hv_l = kv_slices
+    else:
+        k_l, v_l, ks_l, vs_l = kv_slices
     positions = start + jnp.arange(C, dtype=jnp.int32)[None]          # (1,C)
     h = common.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
     h = ctx.ann(h, "batch", "seq", "embed")
     q, k, v = qkv_project(p["attn"], h, cfg, ctx, positions)
-    k_l, v_l, ks_l, vs_l = layer_write_chunk(
-        k_l, v_l, ks_l, vs_l, jnp.swapaxes(k[0], 0, 1),
-        jnp.swapaxes(v[0], 0, 1), slot, start, valid_len)
-    kc, vc = layer_read_slot(k_l, v_l, ks_l, vs_l, slot, dtype=x.dtype)
-    kc = ctx.ann(kc, "batch", "kv_heads", "kv_seq", "head_dim")
-    vc = ctx.ann(vc, "batch", "kv_heads", "kv_seq", "head_dim")
+    S = k_l.shape[2]
+    k_ch = jnp.swapaxes(k[0], 0, 1)                              # (n_kv,C,hd)
+    v_ch = jnp.swapaxes(v[0], 0, 1)
     # causal over absolute positions: query i attends cache slots <= start+i
     # (padding queries i >= valid_len attend zeros/stale slots — their
     # outputs are discarded; valid queries only ever reach real positions)
-    mask = jnp.arange(k_l.shape[2], dtype=jnp.int32)[None, :] \
+    mask = jnp.arange(S, dtype=jnp.int32)[None, :] \
         <= positions[0][:, None]                                      # (C,S)
-    o = chunk_attention(q, kc, vc, mask, ctx)
+    if tiered:
+        # exact hot image from the PRE-write ring + the incoming chunk (the
+        # write below may overwrite exactly the ring slots early queries'
+        # hot tails live in), then stage the chunk into both tiers
+        kh, vh = chunk_hot_image(hk_l, hv_l, k_ch, v_ch, slot, start,
+                                 valid_len, S, dtype=x.dtype)
+        k_l, v_l, ks_l, vs_l, hk_l, hv_l = layer_write_chunk_tiered(
+            k_l, v_l, ks_l, vs_l, hk_l, hv_l, k_ch, v_ch, slot, start,
+            valid_len, cfg.kv_cold_dtype)
+        kc, vc = layer_read_slot_cold(k_l, v_l, ks_l, vs_l, slot,
+                                      cfg.kv_cold_dtype, dtype=x.dtype)
+        kh = ctx.ann(kh, "batch", "kv_heads", "kv_seq", "head_dim")
+        vh = ctx.ann(vh, "batch", "kv_heads", "kv_seq", "head_dim")
+        kc = ctx.ann(kc, "batch", "kv_heads", "kv_seq", "head_dim")
+        vc = ctx.ann(vc, "batch", "kv_heads", "kv_seq", "head_dim")
+        # per-QUERY demotion boundary: query i has count start+i+1 tokens
+        hot_mask = (jnp.arange(S, dtype=jnp.int32)[None, :] >=
+                    cold_boundary(positions[0] + 1, cfg.hot_window,
+                                  cfg.kv_cold_block)[:, None])[None]  # (1,C,S)
+        o = chunk_attention_tiered(q, kh, vh, kc, vc, hot_mask, mask, ctx)
+    else:
+        k_l, v_l, ks_l, vs_l = layer_write_chunk(
+            k_l, v_l, ks_l, vs_l, k_ch, v_ch, slot, start, valid_len)
+        kc, vc = layer_read_slot(k_l, v_l, ks_l, vs_l, slot, dtype=x.dtype)
+        kc = ctx.ann(kc, "batch", "kv_heads", "kv_seq", "head_dim")
+        vc = ctx.ann(vc, "batch", "kv_heads", "kv_seq", "head_dim")
+        o = chunk_attention(q, kc, vc, mask, ctx)
     o = common.linear(p["attn"]["wo"], o.reshape(1, C, -1))
     x = ctx.ann(x + o, "batch", "seq", "embed_shard")
     h = common.apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
     h = ctx.ann(h, "batch", "seq", "embed")
     f, _ = _mix_ffn(p, h, cfg, ctx, train=False)
     x = ctx.ann(x + f, "batch", "seq", "embed_shard")
+    if tiered:
+        return x, (k_l, v_l, ks_l, vs_l, hk_l, hv_l)
     return x, (k_l, v_l, ks_l, vs_l)
 
 
@@ -378,6 +436,11 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
 
 def write_prefill(cache: KVCache, k_all, v_all, S: int) -> KVCache:
     """Bulk-write a prefilled context into the cache (window-aware)."""
+    if cache.is_tiered:
+        raise ValueError(
+            "monolithic write_prefill does not support tiered caches — the "
+            "serving engine routes tiered admissions through the chunk "
+            "program (full-width), which stages both tiers")
     size = cache.k.shape[3]
     if cache.window and S > size:
         k_all = k_all[:, :, :, S - size:, :]
@@ -435,8 +498,8 @@ def decode_step(params, cache: KVCache, tokens: jax.Array, cfg: ModelConfig,
         k_new, v_new, ks_new, vs_new = ys
     else:
         (k_new, v_new), (ks_new, vs_new) = ys, (None, None)
-    cache = KVCache(k_new, v_new, ks_new, vs_new, pos + 1,
-                    window=cache.window)
+    cache = cache._replace(k=k_new, v=v_new, k_scale=ks_new, v_scale=vs_new,
+                           length=pos + 1)
     x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
     logits = common.unembed_logits(unembed_table(params, cfg), x, ctx)
     return cache, logits
@@ -458,31 +521,36 @@ def decode_step_slotted(params, cache: KVCache, tokens: jax.Array,
     if cfg.pos == "learned":
         x = x + jnp.take(params["pos_embed"], positions,
                          axis=0)[:, None].astype(x.dtype)
-    quant = cache.is_quantized
+    scales = cache.k_scale is not None
+    tiered = cache.is_tiered
 
     def body(h, xs):
-        if quant:
-            lp, k_l, v_l, ks_l, vs_l = xs
+        lp, k_l, v_l = xs[0], xs[1], xs[2]
+        rest = list(xs[3:])
+        ks_l, vs_l = (rest.pop(0), rest.pop(0)) if scales else (None, None)
+        if tiered:
+            hk_l, hv_l = rest
+            slices = (k_l, v_l, ks_l, vs_l, hk_l, hv_l)
         else:
-            lp, k_l, v_l = xs
-            ks_l = vs_l = None
-        h, (k_l, v_l, ks_l, vs_l) = block_decode_slotted(
-            lp, h, cfg, ctx, (k_l, v_l, ks_l, vs_l), positions, active,
+            slices = (k_l, v_l, ks_l, vs_l)
+        h, slices = block_decode_slotted(
+            lp, h, cfg, ctx, slices, positions, active,
             window=cache.window, kv_bucket=kv_bucket, kv_shards=kv_shards)
-        ys = (k_l, v_l, ks_l, vs_l) if quant else (k_l, v_l)
+        ys = tuple(s for s in slices if s is not None)
         return h, ys
 
     xs = (params["blocks"], cache.k, cache.v) + \
-        ((cache.k_scale, cache.v_scale) if quant else ())
+        ((cache.k_scale, cache.v_scale) if scales else ()) + \
+        ((cache.hot_k, cache.hot_v) if tiered else ())
     x, ys = jax.lax.scan(body, x, xs, unroll=common.scan_unroll())
-    if quant:
-        k_new, v_new, ks_new, vs_new = ys
-    else:
-        (k_new, v_new), (ks_new, vs_new) = ys, (None, None)
+    ys = list(ys)
+    k_new, v_new = ys.pop(0), ys.pop(0)
+    ks_new, vs_new = (ys.pop(0), ys.pop(0)) if scales else (None, None)
+    hk_new, hv_new = (ys.pop(0), ys.pop(0)) if tiered else (None, None)
     new_len = jnp.maximum(
         cache.length, jnp.max(jnp.where(active, positions, 0)) + 1)
-    cache = KVCache(k_new, v_new, ks_new, vs_new, new_len,
-                    window=cache.window)
+    cache = cache._replace(k=k_new, v=v_new, k_scale=ks_new, v_scale=vs_new,
+                           hot_k=hk_new, hot_v=hv_new, length=new_len)
     x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
     logits = common.unembed_logits(unembed_table(params, cfg), x, ctx)
     return cache, logits
@@ -512,17 +580,21 @@ def prefill_chunk(params, cache: KVCache, tokens: jax.Array, slot: jax.Array,
     elif cfg.pos == "sinusoidal":
         table = common.sinusoidal_pos(cache.k.shape[3], cfg.d_model)
         x = x + jnp.take(table, positions, axis=0)[None].astype(x.dtype)
-    quant = cache.is_quantized
+    scales = cache.k_scale is not None
+    tiered = cache.is_tiered
 
     def body(h, xs):
-        if quant:
-            lp, k_l, v_l, ks_l, vs_l = xs
+        lp, k_l, v_l = xs[0], xs[1], xs[2]
+        rest = list(xs[3:])
+        ks_l, vs_l = (rest.pop(0), rest.pop(0)) if scales else (None, None)
+        if tiered:
+            hk_l, hv_l = rest
+            slices = (k_l, v_l, ks_l, vs_l, hk_l, hv_l)
         else:
-            lp, k_l, v_l = xs
-            ks_l = vs_l = None
-        h, (k_l, v_l, ks_l, vs_l) = block_prefill_chunk(
-            lp, h, cfg, ctx, (k_l, v_l, ks_l, vs_l), slot, start, valid_len)
-        ys = (k_l, v_l, ks_l, vs_l) if quant else (k_l, v_l)
+            slices = (k_l, v_l, ks_l, vs_l)
+        h, slices = block_prefill_chunk(
+            lp, h, cfg, ctx, slices, slot, start, valid_len)
+        ys = tuple(s for s in slices if s is not None)
         return h, ys
 
     # pin the cache stacks to their planned layout at program ENTRY: GSPMD
@@ -536,15 +608,18 @@ def prefill_chunk(params, cache: KVCache, tokens: jax.Array, slot: jax.Array,
     xs = (params["blocks"], k_st, v_st) + \
         ((ctx.ann(cache.k_scale, None, "batch", "kv_heads", "kv_seq", None),
           ctx.ann(cache.v_scale, None, "batch", "kv_heads", "kv_seq", None))
-         if quant else ())
+         if scales else ()) + \
+        ((ctx.ann(cache.hot_k, None, "batch", "kv_heads", None, "head_dim"),
+          ctx.ann(cache.hot_v, None, "batch", "kv_heads", None, "head_dim"))
+         if tiered else ())
     x, ys = jax.lax.scan(body, x, xs, unroll=common.scan_unroll())
-    if quant:
-        k_new, v_new, ks_new, vs_new = ys
-    else:
-        (k_new, v_new), (ks_new, vs_new) = ys, (None, None)
+    ys = list(ys)
+    k_new, v_new = ys.pop(0), ys.pop(0)
+    ks_new, vs_new = (ys.pop(0), ys.pop(0)) if scales else (None, None)
+    hk_new, hv_new = (ys.pop(0), ys.pop(0)) if tiered else (None, None)
     new_len = jnp.maximum(cache.length, start + valid_len)
-    cache = KVCache(k_new, v_new, ks_new, vs_new, new_len,
-                    window=cache.window)
+    cache = cache._replace(k=k_new, v=v_new, k_scale=ks_new, v_scale=vs_new,
+                           hot_k=hk_new, hot_v=hv_new, length=new_len)
     x = common.apply_norm(cfg.norm, params["ln_f"], x, cfg.norm_eps)
     last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
     logits = common.unembed_logits(unembed_table(params, cfg), last, ctx)
@@ -553,6 +628,11 @@ def prefill_chunk(params, cache: KVCache, tokens: jax.Array, slot: jax.Array,
 
 def make_cache(cfg: ModelConfig, batch: int, max_len: int,
                window: int = 0) -> KVCache:
+    tiered = cfg.hot_window > 0
     return init_kv_cache(cfg.n_layers, batch, cfg.n_kv_heads, max_len,
                          cfg.head_dim, dtype=common.dtype_of(cfg),
-                         quantized=(cfg.kv_dtype == "int8"), window=window)
+                         quantized=(cfg.kv_dtype == "int8"), window=window,
+                         hot_window=cfg.hot_window if tiered else 0,
+                         cold_block=cfg.kv_cold_block if tiered else 0,
+                         cold_dtype=cfg.kv_cold_dtype if tiered
+                         else "bfloat16")

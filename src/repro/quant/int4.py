@@ -1,0 +1,70 @@
+"""INT4 KV quantization: two nibbles packed per int8 byte along head_dim.
+
+The tiered KV cache's coldest storage format (DESIGN.md §7): symmetric
+4-bit quantization with one f32 scale per (batch, head, position) row —
+the same scale shape as the int8 path ``(..., S, 1)`` so every piece of
+scale plumbing (export/import, buffers, sharding pins) is format-agnostic.
+Packing halves the stored head_dim: a ``(..., S, hd)`` bf16 tier becomes a
+``(..., S, hd // 2)`` int8 container + ``(..., S, 1)`` f32 scales — 0.25×
+the bytes of bf16 (plus the amortized scale column).
+
+Packing layout: byte ``i`` holds elements ``2i`` (low nibble) and
+``2i + 1`` (high nibble), both stored as two's-complement 4-bit values in
+[-8, 7]. head_dim must be even (every config in the registry is).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# symmetric 4-bit range: [-8, 7] — we clip to ±7 so the grid is symmetric
+# around zero (the same choice the int8 path makes with ±127)
+_QMAX = 7
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int8 values in [-8, 7] pairwise along the last axis:
+    ``(..., 2n)`` int8 → ``(..., n)`` int8, byte i = (q[2i] & 0xF) |
+    (q[2i+1] << 4). The arithmetic runs in uint8 (shifts on values > 127
+    are well-defined) and the container is bitcast back to int8 so the
+    packed tier shares the int8 cold-storage dtype."""
+    if q.shape[-1] % 2:
+        raise ValueError(f"pack_int4 needs an even last axis, got {q.shape}")
+    u = jax.lax.bitcast_convert_type(q.astype(jnp.int8), jnp.uint8)
+    lo = u[..., 0::2] & jnp.uint8(0x0F)
+    hi = u[..., 1::2] & jnp.uint8(0x0F)
+    packed = lo | (hi << jnp.uint8(4))
+    return jax.lax.bitcast_convert_type(packed, jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of ``pack_int4``: ``(..., n)`` int8 → ``(..., 2n)`` int8 with
+    each nibble sign-extended back to [-8, 7]."""
+    u = jax.lax.bitcast_convert_type(packed.astype(jnp.int8), jnp.uint8)
+    lo = (u & jnp.uint8(0x0F)).astype(jnp.int32)
+    hi = ((u >> jnp.uint8(4)) & jnp.uint8(0x0F)).astype(jnp.int32)
+    sext = lambda x: jnp.where(x >= 8, x - 16, x)
+    pair = jnp.stack([sext(lo), sext(hi)], axis=-1)       # (..., n, 2)
+    return pair.reshape(*packed.shape[:-1],
+                        packed.shape[-1] * 2).astype(jnp.int8)
+
+
+def quantize_kv_int4(kv: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """kv: (..., head_dim) → (packed int8 (..., head_dim // 2), f32 scales
+    (..., 1)). One scale per (batch, head, position) row, exactly like
+    ``quantize_kv`` — all-zero rows take scale 1.0 so dequantization is an
+    exact zero, never 0/0."""
+    amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0.0, jnp.maximum(amax, 1e-8), float(_QMAX))\
+        / float(_QMAX)
+    q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale),
+                 -_QMAX, _QMAX).astype(jnp.int8)
+    return pack_int4(q), scale
+
+
+def dequantize_kv_int4(packed: jax.Array, scale: jax.Array,
+                       dtype=jnp.bfloat16) -> jax.Array:
+    """(..., head_dim // 2) int8 + (..., 1) f32 → (..., head_dim) values."""
+    return (unpack_int4(packed).astype(jnp.float32) * scale).astype(dtype)

@@ -67,9 +67,14 @@ def int8_matmul(x: jax.Array, w: QuantizedTensor,
 # ---------------------------------------------------------------------------
 
 def quantize_kv(kv: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """kv: (..., head_dim) → (int8 values, f32 scales broadcastable)."""
+    """kv: (..., head_dim) → (int8 values, f32 scales broadcastable).
+
+    All-zero rows (reset slots, padded chunk tails) take scale 1.0: the
+    quantized values are zeros either way, and the scale stays strictly
+    positive on every backend — including flush-to-zero denormal handling,
+    where a tiny floor could silently become 0 and dequantize to NaN."""
     amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
+    scale = jnp.where(amax > 0.0, jnp.maximum(amax, 1e-8), 127.0) / 127.0
     q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
     return q, scale
 

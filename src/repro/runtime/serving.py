@@ -84,7 +84,8 @@ import numpy as np
 
 from repro.core.pipeline import wa_schedule_occupancy
 from repro.core.wa import WADisaggregated, micro_batch_slices, routing_bytes
-from repro.kv.cache import KVCache, export_slot_kv, import_slot_kv
+from repro.kv.cache import (KVCache, cold_boundary, export_slot_kv,
+                            import_slot_kv)
 from repro.models.attention import bucket_for, kv_buckets
 from repro.models.common import dtype_of
 from repro.models.param_specs import cache_specs
@@ -715,16 +716,25 @@ class ColocatedBackend(ExecutorBackend):
         api, ctx = self.api, self.ctx
         B, P, T = self.slots, self.prompt_len, self.block_size
         scalar = jnp.zeros((), jnp.int32)
+        self._prefill1 = None
 
-        if prefill_chunk:
+        # tiered caches admit through the chunk program even monolithically:
+        # write_prefill has no cold-staging path (the chunk program quantizes
+        # the cold prefix and rings the hot tail inside ONE compiled body),
+        # so monolithic admission compiles the degenerate full-width chunk —
+        # the WA backend's serve_wa_admit shape, same semantics (padding
+        # attended, cursor at the padded width)
+        tiered = isinstance(caches_aval, KVCache) and caches_aval.is_tiered
+        if prefill_chunk or tiered:
             def chunk_fn(p, caches, toks, slot, start, valid):
                 caches, logits = api.prefill_chunk(p, caches, toks, slot,
                                                    start, valid, ctx)
                 return caches, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
 
-            toks_c = jnp.zeros((1, prefill_chunk), jnp.int32)
+            toks_c = jnp.zeros((1, prefill_chunk or P), jnp.int32)
             self._chunk = self.rt.compile_step(
-                "serve_prefill_chunk", chunk_fn,
+                "serve_prefill_chunk" if prefill_chunk else "serve_admit",
+                chunk_fn,
                 (params, caches_aval, toks_c, scalar, scalar, scalar),
                 donate_argnums=(1,))
         else:
@@ -778,7 +788,17 @@ class ColocatedBackend(ExecutorBackend):
 
     # -- execution --------------------------------------------------------
     def admit_full(self, params, row: np.ndarray, slot: int):
-        """Monolithic admission: batch-1 full-width prefill + slot write."""
+        """Monolithic admission: batch-1 full-width prefill + slot write
+        (flat caches), or — for tiered caches — ONE full-width chunk that
+        lands both tiers directly in the slot (no separate write-slot copy:
+        the cold quantization and hot ring write live inside the chunk
+        program)."""
+        if self._prefill1 is None:
+            self.caches, tok = self._chunk(
+                params, self.caches, jnp.asarray(row[None]),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(0, jnp.int32),
+                jnp.asarray(self.prompt_len, jnp.int32))
+            return tok
         single, first = self._prefill1(params, jnp.asarray(row[None]))
         self.caches = self._admit(self.caches, single,
                                   jnp.asarray(slot, jnp.int32))
@@ -964,6 +984,173 @@ BACKENDS: Dict[str, type] = {"colocated": ColocatedBackend, "wa": WABackend}
 
 
 # ---------------------------------------------------------------------------
+# KVArbiter — host-side placement arbiter for the tiered KV cache
+# ---------------------------------------------------------------------------
+
+class KVArbiter:
+    """Host-side placement arbiter for the tiered KV cache (DESIGN.md §7).
+
+    Demotion itself happens INSIDE the compiled programs — the read-side
+    cold boundary advances with each slot's cursor, so no host round-trip
+    ever moves a token between tiers. What remains for the host is pure
+    accounting and policy, and that is this class: it observes per-slot
+    cursors at the block boundaries the engine already syncs at (zero extra
+    device traffic), derives tier occupancy from the same
+    ``cold_boundary()`` arithmetic the programs compiled in, counts
+    demotions from cursor watermarks, tracks live/peak KV bytes against an
+    optional byte budget (the pressure loop preempts victims while over
+    it), and recommends a placement policy from the observed access
+    pattern (the LLaMCAT-style arbiter of the paper's §6 discussion).
+
+    The byte model reads off the cache aval: a hot token costs the
+    cache-resident dtype across every layer/head; a cold token costs the
+    packed cold store (int4 packs two lanes per byte) plus its per-row
+    f32 scales. ``cold_bytes_saved`` is live occupancy priced at the hot
+    rate minus the cold rate — the bytes the LLC does NOT hold because the
+    cold prefix is quantized."""
+
+    def __init__(self, caches_aval: KVCache, budget_bytes: int = 0):
+        if not caches_aval.is_tiered:
+            raise ValueError("KVArbiter requires a tiered cache aval")
+        self.hot_window = int(caches_aval.hot_window)
+        self.cold_block = int(caches_aval.cold_block)
+        self.cold_dtype = str(caches_aval.cold_dtype)
+        self.budget = int(budget_bytes)
+        L, B, n_kv, S, hd_c = caches_aval.k.shape
+        H = caches_aval.hot_k.shape[3]
+        hd = caches_aval.hot_k.shape[4]
+        hot_el = jnp.dtype(caches_aval.hot_k.dtype).itemsize
+        cold_el = jnp.dtype(caches_aval.k.dtype).itemsize
+        scale_b = 0 if caches_aval.k_scale is None else\
+            jnp.dtype(caches_aval.k_scale.dtype).itemsize
+        # per-token rates, K + V, across all layers and KV heads
+        self.hot_bytes_per_token = 2 * L * n_kv * hd * hot_el
+        self.cold_bytes_per_token = 2 * L * n_kv * (hd_c * cold_el + scale_b)
+        # allocated footprint of ONE slot (what fresh() reserves for it):
+        # full-extent cold store + scales + the hot ring
+        self.kv_bytes_per_slot = (S * self.cold_bytes_per_token
+                                  + H * self.hot_bytes_per_token)
+        self.n_slots = B
+        self.reset()
+
+    def reset(self):
+        """Per-run accounting reset (mirrors the engine's accumulators)."""
+        self._cursor: Dict[int, int] = {}
+        self._watermark: Dict[int, int] = {}    # last-seen cold boundary
+        self.demotions = 0                      # cold blocks crossed, total
+        self.peak_bytes = 0
+        self.peak_saved = 0
+        self._last_rec = "no live slots observed"
+
+    # -- bookkeeping (called at host-sync boundaries only) ---------------
+    def _boundary(self, cursor: int) -> int:
+        return int(cold_boundary(np.int32(cursor), self.hot_window,
+                                 self.cold_block))
+
+    def observe(self, slot: int, cursor: int):
+        """One slot's cursor at a block boundary. Cold-boundary advances
+        since the last observation count as demotions (one per crossed
+        ``cold_block``)."""
+        cursor = int(cursor)
+        nb = self._boundary(cursor)
+        prev = self._watermark.get(slot, 0)
+        if nb > prev:
+            self.demotions += (nb - prev) // self.cold_block
+        self._watermark[slot] = nb
+        self._cursor[slot] = cursor
+        self.peak_bytes = max(self.peak_bytes, self.live_bytes())
+        self.peak_saved = max(self.peak_saved, self.cold_bytes_saved())
+        self._last_rec = self._recommend_live()
+
+    def seed(self, slot: int, cursor: int):
+        """Swap-in restore: the slot resumes at ``cursor`` with its cold
+        prefix already staged and already COUNTED pre-preemption — seed the
+        watermark so the restore recounts nothing."""
+        cursor = int(cursor)
+        self._watermark[slot] = self._boundary(cursor)
+        self._cursor[slot] = cursor
+
+    def release(self, slot: int):
+        """Slot freed (retire / preempt / quarantine): its occupancy and
+        watermark leave the live view; cumulative counters stay."""
+        self._cursor.pop(slot, None)
+        self._watermark.pop(slot, None)
+
+    # -- occupancy / budget ----------------------------------------------
+    def slot_occupancy(self, slot: int) -> Dict[str, int]:
+        c = self._cursor.get(slot, 0)
+        cold = self._boundary(c)
+        hot = c - cold
+        return {"slot": slot, "tokens": c, "hot_tokens": hot,
+                "cold_tokens": cold,
+                "kv_bytes": hot * self.hot_bytes_per_token
+                + cold * self.cold_bytes_per_token}
+
+    def live_bytes(self) -> int:
+        """Occupancy-priced KV bytes across every live slot (hot tokens at
+        the resident rate, cold tokens at the quantized rate)."""
+        total = 0
+        for c in self._cursor.values():
+            cold = self._boundary(c)
+            total += (c - cold) * self.hot_bytes_per_token\
+                + cold * self.cold_bytes_per_token
+        return total
+
+    def cold_bytes_saved(self) -> int:
+        saved_rate = self.hot_bytes_per_token - self.cold_bytes_per_token
+        return sum(self._boundary(c) for c in self._cursor.values())\
+            * saved_rate
+
+    def over_budget(self) -> bool:
+        return bool(self.budget) and self.live_bytes() > self.budget
+
+    # -- policy -----------------------------------------------------------
+    def recommend(self) -> str:
+        """Placement recommendation from the observed pattern: deepen the
+        quantized tier while the cold fraction dominates, surface the hot
+        window when the working set already fits it. After a drained run
+        (no live slots) the last live-boundary verdict stands."""
+        return self._recommend_live() if self._cursor else self._last_rec
+
+    def _recommend_live(self) -> str:
+        cursors = list(self._cursor.values())
+        if not cursors:
+            return "no live slots observed"
+        total = sum(cursors)
+        cold = sum(self._boundary(c) for c in cursors)
+        if cold == 0:
+            return (f"working set fits hot_window={self.hot_window}; cold "
+                    "tier idle — a smaller hot_window frees resident bytes")
+        frac = cold / max(total, 1)
+        if frac > 0.75 and self.cold_dtype == "int8":
+            return ("cold tier dominates (>75% of tokens); int4 cold "
+                    "storage would halve its footprint")
+        if frac > 0.5 and self.cold_dtype == "bfloat16":
+            return ("cold tier holds most tokens at full width; quantize "
+                    "it (kv_cold_dtype=int8 or int4)")
+        return "placement balanced for the observed access pattern"
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "hot_window": self.hot_window,
+            "cold_block": self.cold_block,
+            "cold_dtype": self.cold_dtype,
+            "hot_bytes_per_token": self.hot_bytes_per_token,
+            "cold_bytes_per_token": self.cold_bytes_per_token,
+            "kv_bytes_per_slot": self.kv_bytes_per_slot,
+            "kv_budget_bytes": self.budget,
+            "demotions": self.demotions,
+            "live_kv_bytes": self.live_bytes(),
+            "peak_kv_bytes": self.peak_bytes,
+            "cold_bytes_saved": max(self.peak_saved,
+                                    self.cold_bytes_saved()),
+            "per_slot": [self.slot_occupancy(s)
+                         for s in sorted(self._cursor)],
+            "recommendation": self.recommend(),
+        }
+
+
+# ---------------------------------------------------------------------------
 # ServingEngine — the boundary loop connecting scheduler and executor
 # ---------------------------------------------------------------------------
 
@@ -1091,7 +1278,8 @@ class ServingEngine:
                  max_retries: int = 2, retry_backoff_s: float = 0.0,
                  watchdog_s: float = 0.0,
                  strict_invariants: bool = False,
-                 fault_injector: Optional[Any] = None):
+                 fault_injector: Optional[Any] = None,
+                 kv_budget_bytes: int = 0):
         if mode not in ("auto", "continuous", "drain"):
             raise ValueError(mode)
         if a_shards < 1:
@@ -1200,6 +1388,34 @@ class ServingEngine:
         self._kv_extent = self._caches_aval.k.shape[3]\
             if isinstance(self._caches_aval, KVCache)\
             and not self._caches_aval.window else None
+        self._tiered = isinstance(self._caches_aval, KVCache)\
+            and self._caches_aval.is_tiered
+        if self._tiered:
+            # the tiered cache stages its cold prefix inside the chunk
+            # program — only the continuous scheduler has one, and only
+            # families exposing prefill_chunk can compile it (monolithic
+            # tiered admission is the degenerate full-width chunk)
+            if self.mode != "continuous":
+                raise ValueError(
+                    "tiered KV caches (hot_window > 0) serve through the "
+                    "continuous scheduler; drain mode has no chunk program "
+                    "to stage the cold tier")
+            if api.prefill_chunk is None:
+                raise ValueError(
+                    f"{api.config.family} family has no prefill_chunk "
+                    "support; tiered admission stages the cold tier "
+                    "through the chunk program")
+        if kv_budget_bytes < 0:
+            raise ValueError(
+                f"kv_budget_bytes must be >= 0, got {kv_budget_bytes}")
+        if kv_budget_bytes and not self._tiered:
+            raise ValueError(
+                "kv_budget_bytes is the tiered-KV arbiter's pressure knob "
+                "(hot_window > 0); flat caches have no arbiter to enforce "
+                "it")
+        self.kv_budget_bytes = kv_budget_bytes
+        self._arbiter = KVArbiter(self._caches_aval, kv_budget_bytes)\
+            if self._tiered else None
         if self.a_shards > 1:
             # split-KV flash decode shards the *prefix-ordered* KV walk of
             # one slot along the sequence axis; families without such a
@@ -1281,6 +1497,8 @@ class ServingEngine:
         self._emit_log: List[Tuple[int, int]] = []
         self._cursor_watermark: Dict[int, int] = {}
         self._slot_cap = self.slots
+        if self._arbiter is not None:
+            self._arbiter.reset()
 
     def _emit_token(self, r: Request, tok: int):
         r.generated.append(int(tok))
@@ -1467,6 +1685,7 @@ class ServingEngine:
             self._shed_deadlines(sched)
             self._bound_queue(sched)
             self._apply_pressure(sched, steps)
+            self._apply_kv_budget(sched)
             self._priority_preempt(sched)
             # "overlapped" = admitted while the batch was already live at
             # the start of this boundary (cold-start fills don't count)
@@ -1491,6 +1710,7 @@ class ServingEngine:
                 admissions += n_adm
                 overlapped += n_ovl
                 done.extend(fin)
+            self._observe_tiers(sched)
             if self.strict_invariants:
                 self._assert_invariants(sched)
             active = sched.decode_active()
@@ -1498,6 +1718,7 @@ class ServingEngine:
                 steps += 1                       # idle/prefill-only boundary
                 continue
             done.extend(self._decode_round(params, sched, active, s_max))
+            self._observe_tiers(sched)
             steps += T
         self._caches = ex.caches
         return self._stats(done, steps, admissions, overlapped)
@@ -1564,6 +1785,38 @@ class ServingEngine:
             if v is None or not self._preempt_slot(sched, v):
                 break
 
+    def _apply_kv_budget(self, sched: SlotScheduler):
+        """Real (not injected) KV pressure: while the arbiter's
+        occupancy-priced live bytes exceed ``kv_budget_bytes``, preempt the
+        usual lowest-priority victim; if preemption cannot get under the
+        budget (or the engine is not preemptible), hold admissions this
+        boundary instead — over-budget occupancy must never grow."""
+        arb = self._arbiter
+        if arb is None or not arb.budget:
+            return
+        self._observe_tiers(sched)
+        while self.preemptible and arb.over_budget():
+            v = self._pick_victim(sched)
+            if v is None or not self._preempt_slot(sched, v):
+                break
+        if arb.over_budget():
+            busy = sum(1 for p in sched.phase if p != sched.FREE)
+            self._slot_cap = min(self._slot_cap, busy)
+
+    def _observe_tiers(self, sched: SlotScheduler):
+        """Sync the arbiter's per-slot cursor view at a host boundary: live
+        decoders report their cursor (demotions count off the cold-boundary
+        watermark), freed slots leave the live view. Pure host arithmetic —
+        no device traffic."""
+        arb = self._arbiter
+        if arb is None:
+            return
+        for i in range(sched.n):
+            if sched.phase[i] == sched.DECODE:
+                arb.observe(i, int(sched.positions[i]))
+            elif sched.phase[i] == sched.FREE:
+                arb.release(i)
+
     def _priority_preempt(self, sched: SlotScheduler):
         """Priority lane: while the queue's best request outranks the
         lowest-priority decoding slot and no usable slot is free, swap the
@@ -1603,6 +1856,8 @@ class ServingEngine:
         r.preemptions += 1
         self._preemptions += 1
         sched.preempt(slot)
+        if self._arbiter is not None:
+            self._arbiter.release(slot)
         return True
 
     def _restore(self, params, sched: SlotScheduler, slot: int,
@@ -1625,6 +1880,10 @@ class ServingEngine:
         self._swap_time += time.monotonic() - t0
         r.swap = None
         sched.resume_decode(slot, r, st)
+        if self._arbiter is not None:
+            # the restored prefix's demotions were counted pre-preemption —
+            # seed the watermark so nothing is recounted
+            self._arbiter.seed(slot, st.kv_len)
         self._restores += 1
         return True
 
@@ -2038,6 +2297,11 @@ class ServingEngine:
                 for r in sorted(self._rejected + self._deadline_missed,
                                 key=lambda r: r.rid)],
         }
+        if self._arbiter is not None:
+            # tiered-KV occupancy and placement policy: tier splits,
+            # demotions counted off cursor watermarks, live/peak bytes and
+            # the byte-budget verdict — stats() is the arbiter's output
+            out["tiered"] = self._arbiter.stats()
         if self.backend == "wa" and self._ex is not None:
             # measured W↔A traffic — the paper's "only embeddings move"
             # claim as a number in every run's output — plus the

@@ -17,7 +17,10 @@ from repro.core.analytical import (EPYC_9684X, baseline_llama_cpp,
 from repro.core.residency import paradox_table
 from repro.configs.registry import ASSIGNED
 from repro.kv.cache import slot_valid_mask
-from repro.quant.int8 import dequantize, int8_matmul, quantize_int8
+from repro.quant.int4 import (dequantize_kv_int4, pack_int4,
+                              quantize_kv_int4, unpack_int4)
+from repro.quant.int8 import (dequantize, dequantize_kv, int8_matmul,
+                              quantize_int8, quantize_kv)
 
 SETTINGS = dict(max_examples=25, deadline=None)
 
@@ -48,6 +51,77 @@ def test_int8_matmul_relative_error(b, k, n):
     want = np.asarray(x @ w)
     denom = np.maximum(np.abs(want).max(), 1e-3)
     assert np.abs(got - want).max() / denom < 0.05
+
+
+# int8 KV round-trip: extreme magnitudes, all-zero rows, empty slices ------
+
+@given(st.integers(0, 5), st.integers(1, 4), st.integers(1, 32),
+       st.sampled_from([1e-30, 1e-3, 1.0, 1e4, 1e30]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_int8_kv_roundtrip_bounded_and_zero_exact(rows, heads, hd, mag,
+                                                  seed):
+    """``quantize_kv`` → ``dequantize_kv`` stays within amax/127 per row at
+    ANY magnitude (1e-30 to 1e30 — the hardened scale never divides by
+    zero or denormals), all-zero rows come back EXACTLY zero, and empty
+    slices (0 rows — a drained tier) round-trip without error."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((heads, rows, hd)) * mag).astype(np.float32)
+    if rows:
+        x[:, 0] = 0.0                    # at least one all-zero row
+    q, s = quantize_kv(jnp.asarray(x))
+    assert q.shape == x.shape and s.shape == x.shape[:-1] + (1,)
+    back = np.asarray(dequantize_kv(q, s, jnp.float32))
+    amax = np.abs(x).max(axis=-1, keepdims=True)
+    # the hardened scale floors at 1e-8 (denormal-proof), so sub-1e-8 rows
+    # may round to zero — the bound carries the floor
+    bound = np.maximum(amax, 1e-8) / 127.0 + 1e-6 * amax
+    assert np.all(np.abs(back - x) <= bound)
+    if rows:
+        assert not back[:, 0].any(), "all-zero row must dequantize to zero"
+
+
+# int4 pack/unpack + KV round-trip ------------------------------------------
+
+@given(st.integers(0, 6), st.integers(0, 16), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_int4_pack_unpack_identity(rows, pairs, seed):
+    """``unpack_int4 ∘ pack_int4`` is the identity on every int in [-8, 7]
+    at any even length — zero-length slices included — and an ODD last
+    axis is rejected loudly (the packed tier stores hd // 2 bytes; a
+    silent truncation would drop a lane)."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 8, size=(rows, 2 * pairs)).astype(np.int8)
+    packed = pack_int4(jnp.asarray(q))
+    assert packed.shape == (rows, pairs) and packed.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed)), q)
+    with pytest.raises(ValueError, match="even"):
+        pack_int4(jnp.zeros((rows, 2 * pairs + 1), jnp.int8))
+
+
+@given(st.integers(0, 5), st.integers(1, 16),
+       st.sampled_from([1e-30, 1e-3, 1.0, 1e4, 1e30]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_int4_kv_roundtrip_bounded_and_zero_exact(rows, pairs, mag, seed):
+    """``quantize_kv_int4`` → ``dequantize_kv_int4`` stays within amax/7
+    per row at any magnitude, all-zero rows come back exactly zero, empty
+    slices round-trip, and the packed container halves head_dim."""
+    rng = np.random.default_rng(seed)
+    hd = 2 * pairs
+    x = (rng.standard_normal((2, rows, hd)) * mag).astype(np.float32)
+    if rows:
+        x[:, 0] = 0.0
+    q, s = quantize_kv_int4(jnp.asarray(x))
+    assert q.shape == (2, rows, pairs) and q.dtype == jnp.int8
+    assert s.shape == (2, rows, 1) and s.dtype == jnp.float32
+    back = np.asarray(dequantize_kv_int4(q, s, jnp.float32))
+    assert back.shape == x.shape
+    amax = np.abs(x).max(axis=-1, keepdims=True)
+    bound = np.maximum(amax, 1e-8) / 7.0 + 1e-6 * amax
+    assert np.all(np.abs(back - x) <= bound)
+    if rows:
+        assert not back[:, 0].any(), "all-zero row must dequantize to zero"
 
 
 # --------------------------------------------------------------------------

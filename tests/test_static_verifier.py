@@ -93,9 +93,15 @@ def test_routing_confirms_analytic_meter(wa_cell):
 
 def test_matrices_cover_acceptance_grid():
     ci = ci_matrix()
-    assert len(ci) == 10
+    assert len(ci) == 12
     assert {s.backend for s in ci} == {"colocated", "wa"}
-    assert {s.a_shards for s in ci} == {1, 4}
+    assert {s.a_shards for s in ci} == {1, 2, 4}
+    # tiered-KV cells gate the hot-ring/cold-tier program variants on both
+    # backends, including the monolithic (degenerate-chunk) admission lane
+    tiered = [s for s in ci if s.hot_window > 0]
+    assert {s.label for s in tiered} == {"colocated-int8cold-mono",
+                                         "wa-int4cold-a2"}
+    assert {s.kv_cold_dtype for s in tiered} == {"int8", "int4"}
     # sub-operator overlap cells gate the pipelined decode programs; their
     # slot count must split into equal micro-batches
     ov = [s for s in ci if s.overlap > 1]
